@@ -1,0 +1,52 @@
+"""Shared helpers for the paper-validation benchmarks."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import Engine, EngineConfig, build_dist_graph, build_formats, make_spec  # noqa: E402
+from repro.core import algorithms as alg  # noqa: E402
+from repro.data.graphs import rmat_graph  # noqa: E402
+
+
+def build_engine(g, p, batch_size=None, config=EngineConfig()):
+    spec = make_spec(g, num_partitions=p, batch_size=batch_size)
+    dg = build_dist_graph(g, spec)
+    return Engine(dg, build_formats(dg), config)
+
+
+def timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(jax.tree_util.tree_leaves(out)[0]
+                          if jax.tree_util.tree_leaves(out) else out)
+    return out, time.perf_counter() - t0
+
+
+def bench_graph(scale=10, edge_factor=16, seed=7):
+    return rmat_graph(scale, edge_factor, seed=seed, weighted=True)
+
+
+def run_algorithms(engine, g, source=None):
+    """Returns {algo: (seconds, RunStats)} for PR/BFS/SSSP (WCC is slow on
+    1 CPU core; covered by tests)."""
+    if source is None:
+        source = int(np.argmax(g.out_degrees()))
+    out = {}
+    (pr, st), t = timed(lambda: alg.pagerank(engine, 5))
+    out["pagerank"] = (t, st)
+    (lv, st2), t2 = timed(lambda: alg.bfs(engine, source))
+    out["bfs"] = (t2, st2)
+    (ds, st3), t3 = timed(lambda: alg.sssp(engine, source))
+    out["sssp"] = (t3, st3)
+    return out
+
+
+def csv_row(name: str, seconds: float, derived: str) -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

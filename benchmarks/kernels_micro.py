@@ -1,0 +1,61 @@
+"""Kernel microbenchmarks: interpret-mode wall times (correctness-scale; TPU
+wall times require real hardware) + oracle-agreement deltas, so perf work on
+the kernels has a tracked baseline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.engines_common import csv_row, timed
+from repro.kernels import ops, ref
+
+
+def main() -> list[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # block-CSR SpMV
+    n, e, tile = 256, 4096, 32
+    src = rng.integers(0, n, e)
+    dst = rng.integers(0, n, e)
+    data = rng.random(e).astype(np.float32)
+    x = rng.random(n).astype(np.float32)
+    blocks = ops.build_block_csr(src, dst, data, n, tile)
+    _, t = timed(lambda: ops.spmv(blocks, x, tile=tile))
+    y = np.asarray(ops.spmv(blocks, x, tile=tile))
+    err = np.abs(y[:n] - ref.ref_spmv_from_edges(src, dst, data, x, n)).max()
+    dens = blocks["tiles"].size / max(e, 1)
+    rows.append(csv_row("kernel/csr_spmv_256v_4096e", t,
+                        f"err={err:.2e};tile_overhead={dens:.1f}x"))
+
+    # flash attention
+    q = jax.random.normal(jax.random.PRNGKey(1), (4, 256, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(2), (4, 256, 64), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(3), (4, 256, 64), jnp.bfloat16)
+    _, t = timed(lambda: ops.attention(q, k, v, causal=True))
+    o = ops.attention(q, k, v, causal=True)
+    o_ref = ref.ref_attention(q, k, v, causal=True)
+    err = float(jnp.abs(o.astype(jnp.float32)
+                        - o_ref.astype(jnp.float32)).max())
+    rows.append(csv_row("kernel/flash_attn_bh4_s256_d64", t,
+                        f"err={err:.2e}"))
+
+    # chunked GLA
+    bh, tt, dk, dv = 4, 256, 64, 64
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    qg = jax.random.normal(ks[0], (bh, tt, dk))
+    kg = jax.random.normal(ks[1], (bh, tt, dk))
+    vg = jax.random.normal(ks[2], (bh, tt, dv))
+    wg = -jnp.exp(jax.random.normal(ks[3], (bh, tt, dk)))
+    _, t = timed(lambda: ops.gla(qg, kg, vg, wg, chunk=64))
+    y2, s2 = ops.gla(qg, kg, vg, wg, chunk=64)
+    y_ref, s_ref = ref.ref_gla(qg, kg, vg, wg)
+    err = float(jnp.abs(y2 - y_ref).max())
+    rows.append(csv_row("kernel/gla_bh4_t256_d64", t, f"err={err:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,57 @@
+"""§Perf hillclimb report: formats the hypothesis->change->before/after
+ladders for the three chosen cells from the dry-run artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.roofline import analyze, model_flops  # noqa: E402
+from repro.utils import V5E  # noqa: E402
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+LADDERS = {
+    "deepseek-moe-16b/train_4k": ["", "blockpos", "blockpos_groups", "opt"],
+    "mixtral-8x22b/train_4k": ["", "blockpos_groups",
+                               "flatattn_blockpos_groups", "opt"],
+    "llama3-405b/train_4k": ["", "grouped_qo", "grouped_qo_chunk4k",
+                             "grouped_qo_chunk4k_micro8", "opt"],
+}
+
+
+def load(arch, shape, variant):
+    suffix = f"__{variant}" if variant else ""
+    path = os.path.join(ART, f"{arch}__{shape}__pod16x16{suffix}.json")
+    if not os.path.exists(path):
+        return None
+    return json.load(open(path))
+
+
+def main() -> None:
+    for cell, variants in LADDERS.items():
+        arch, shape = cell.split("/")
+        print(f"\n=== {cell} ===")
+        print(f"{'variant':28s} {'flops/chip':>11s} {'bytes/chip':>11s} "
+              f"{'coll/chip':>11s} {'t_comp':>8s} {'t_mem':>8s} "
+              f"{'t_coll':>8s} {'dom':>6s} {'useful':>7s} {'roofl.':>7s} "
+              f"{'temp GB':>8s}")
+        for v in variants:
+            rec = load(arch, shape, v)
+            if rec is None:
+                continue
+            a = analyze(rec, 256)
+            name = v or "baseline"
+            print(f"{name:28s} {a['hlo_flops']:11.3e} {a['hlo_bytes']:11.3e} "
+                  f"{a['coll_bytes']:11.3e} {a['t_compute']:8.2f} "
+                  f"{a['t_memory']:8.2f} {a['t_collective']:8.2f} "
+                  f"{a['dominant'][:6]:>6s} {a['useful_ratio']:7.3f} "
+                  f"{a['roofline_fraction']:7.3f} "
+                  f"{rec['memory_analysis']['temp_size_in_bytes']/2**30:8.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape) cell on the single-pod mesh (256 chips, TPU v5e):
+    compute term    = HLO_FLOPs / peak_FLOP/s          (per chip, scan-corrected)
+    memory term     = HLO_bytes / HBM_bw               (per chip)
+    collective term = collective_bytes / link_bw       (per chip; equals the
+                      brief's global/(chips*bw) since SPMD HLO is per-device)
+plus MODEL_FLOPS = 6ND (train) / 2ND (prefill) / 2NB (decode) with N =
+active params for MoE, and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+
+Writes benchmarks/artifacts/roofline.{md,csv}; prints the table.
+"""
+from __future__ import annotations
+
+import csv
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.utils import V5E  # noqa: E402
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+OUT = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count_estimate()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.is_encdec:
+            tokens = shape.global_batch * (shape.seq_len // 4)
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.is_encdec:
+            tokens = shape.global_batch * (shape.seq_len // 4)
+        return 2.0 * n * tokens
+    # decode kinds: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def load_cells(mesh: str = "pod16x16", variant: str = ""):
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(ART, f"*__{mesh}*.json"))):
+        rec = json.load(open(path))
+        if rec.get("variant", "") != variant:
+            continue
+        cells[(rec["arch"], rec["shape"])] = rec
+    return cells
+
+
+def analyze(rec: dict, chips: int) -> dict | None:
+    if rec.get("skipped"):
+        return {"skip": rec["skipped"]}
+    if not rec.get("ok"):
+        return {"fail": rec.get("error", "?")}
+    cost = rec.get("corrected") or dict(
+        rec["cost_analysis"],
+        collective_bytes=rec["collectives"]["total_operand_bytes"])
+    flops = cost["flops"]
+    byts = cost["bytes_accessed"]
+    coll = cost["collective_bytes"]
+    t_compute = flops / V5E.peak_flops
+    t_memory = byts / V5E.hbm_bw
+    t_coll = coll / (V5E.ici_bw * V5E.ici_links)
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"]) / chips
+    bound = max(terms.values())
+    return dict(
+        t_compute=t_compute, t_memory=t_memory, t_collective=t_coll,
+        dominant=dom, model_flops_per_chip=mf,
+        useful_ratio=mf / flops if flops else 0.0,
+        # roofline fraction: useful-model-compute time over the binding term
+        roofline_fraction=(mf / V5E.peak_flops) / bound if bound else 0.0,
+        mem_args_bytes=rec["memory_analysis"].get("argument_size_in_bytes"),
+        hlo_flops=flops, hlo_bytes=byts, coll_bytes=coll,
+    )
+
+
+HINTS = {
+    "compute": "dominant term is compute: raise MFU via larger per-chip "
+               "tiles / fewer remat recomputes",
+    "memory": "dominant term is HBM: fuse/remat to cut activation traffic, "
+              "or shard the replicated state (cache/attention) further",
+    "collective": "dominant term is ICI: overlap collectives with compute, "
+                  "reduce-scatter instead of all-reduce, or reshard to cut "
+                  "gathered bytes",
+}
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="")
+    args = ap.parse_args()
+    chips = 256
+    cells = load_cells(variant=args.variant)
+    rows = []
+    for arch in sorted({a for a, _ in cells}):
+        for shape in SHAPES:
+            rec = cells.get((arch, shape))
+            if rec is None:
+                continue
+            a = analyze(rec, chips)
+            row = {"arch": arch, "shape": shape}
+            if "skip" in a:
+                row["status"] = "skip"
+            elif "fail" in a:
+                row["status"] = "FAIL"
+            else:
+                row.update(status="ok", **a)
+            rows.append(row)
+
+    os.makedirs(OUT, exist_ok=True)
+    fields = ["arch", "shape", "status", "t_compute", "t_memory",
+              "t_collective", "dominant", "model_flops_per_chip",
+              "hlo_flops", "useful_ratio", "roofline_fraction",
+              "hlo_bytes", "coll_bytes", "mem_args_bytes"]
+    suffix = f"_{args.variant}" if args.variant else ""
+    with open(os.path.join(OUT, f"roofline{suffix}.csv"), "w",
+              newline="") as f:
+        w = csv.DictWriter(f, fields, extrasaction="ignore")
+        w.writeheader()
+        w.writerows(rows)
+
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | useful ratio | roofline frac | next move |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    print(f"{'arch':18s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+          f"{'coll_s':>10s} {'dom':>10s} {'useful':>7s} {'roofline':>8s}")
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['status']} | — | — | — |")
+            print(f"{r['arch']:18s} {r['shape']:12s} {r['status']:>10s}")
+            continue
+        hint = HINTS[r["dominant"]]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3e} | "
+            f"{r['t_memory']:.3e} | {r['t_collective']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.3f} | {hint} |")
+        print(f"{r['arch']:18s} {r['shape']:12s} {r['t_compute']:10.3e} "
+              f"{r['t_memory']:10.3e} {r['t_collective']:10.3e} "
+              f"{r['dominant']:>10s} {r['useful_ratio']:7.3f} "
+              f"{r['roofline_fraction']:8.3f}")
+    suffix = f"_{args.variant}" if args.variant else ""
+    with open(os.path.join(OUT, f"roofline{suffix}.md"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"\nwrote roofline{suffix}.md / .csv")
+
+
+if __name__ == "__main__":
+    main()

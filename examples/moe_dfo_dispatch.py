@@ -1,0 +1,69 @@
+"""The paper's technique as an LM feature: MoE token dispatch as DFOGraph
+filtered push (DESIGN.md §3) — run on 8 forced host devices, showing the
+expert-parallel all-to-alls in the compiled HLO and the capacity ("need
+list") bound in action.
+
+    PYTHONPATH=src python examples/moe_dfo_dispatch.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.core.sparse_collectives import (  # noqa: E402
+    dense_combine, dense_dispatch, topk_routing,
+)
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    t, d, e, k = 64, 32, 8, 2
+    cap = int(1.25 * t * k / e)
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (t, d))
+    router = jax.random.normal(jax.random.PRNGKey(1), (d, e)) * 0.3
+    w_up = jax.random.normal(jax.random.PRNGKey(2), (e, d, 4 * d)) * d**-0.5
+    w_dn = jax.random.normal(jax.random.PRNGKey(3), (e, 4 * d, d)) * (4*d)**-0.5
+
+    def moe(x, router, w_up, w_dn):
+        logits = x @ router
+        dispatch, idx, pos, wts, _ = topk_routing(logits, k, cap)
+        buf = dense_dispatch(x, dispatch, idx, pos, e, cap)     # push
+        buf = jax.lax.with_sharding_constraint(
+            buf, NamedSharding(mesh, P("model", None, None)))   # EP shards
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_up))
+        o = jnp.einsum("ecf,efd->ecd", h, w_dn)
+        out = dense_combine(o, dispatch, idx, pos, wts, t)      # pull back
+        return out, jnp.sum(dispatch)
+
+    shard = lambda spec: NamedSharding(mesh, spec)
+    with mesh:
+        jitted = jax.jit(moe, in_shardings=(
+            shard(P("data", None)), shard(P(None)),
+            shard(P("model", None, None)), shard(P("model", None, None))))
+        lowered = jitted.lower(x, router, w_up, w_dn)
+        compiled = lowered.compile()
+        out, kept = jitted(x, router, w_up, w_dn)
+
+    hlo = compiled.as_text()
+    a2a = hlo.count("all-to-all")
+    ag = hlo.count("all-gather")
+    print(f"tokens={t} experts={e} top_k={k} capacity/expert={cap}")
+    print(f"kept (token,choice) pairs: {int(kept)} / {t * k} "
+          f"(dropped over capacity = paper's bounded message buffers)")
+    print(f"compiled collectives: all-to-all x{a2a}, all-gather x{ag} "
+          f"(the DFO inter-node pass on the 'model' axis)")
+    print(f"output shape {out.shape}, finite={bool(jnp.isfinite(out).all())}")
+    print("moe_dfo_dispatch OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.ckpt.blockstore import BlockStore, CheckpointManager  # noqa: F401

@@ -1,0 +1,112 @@
+"""Assigned input-shape set and per-(arch x shape) input specs.
+
+Every LM arch is paired with four shapes:
+    train_4k     seq_len=4096   global_batch=256   (training)
+    prefill_32k  seq_len=32768  global_batch=32    (inference prefill)
+    decode_32k   seq_len=32768  global_batch=128   (one-token decode step,
+                                                    KV/state cache of seq_len)
+    long_500k    seq_len=524288 global_batch=1     (long-context decode —
+                                                    sub-quadratic archs only)
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins — weak-type-correct,
+shardable, with no device allocation — for the dry-run (lower + compile).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # 'train' | 'prefill' | 'decode' | 'long_decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "long_decode", 524_288, 1),
+}
+
+
+def cell_applicability(cfg: ModelConfig, shape: ShapeSpec) -> str | None:
+    """Returns a skip reason, or None if the (arch, shape) cell runs."""
+    if shape.kind == "long_decode" and not cfg.sub_quadratic:
+        return ("full-attention arch: long_500k needs sub-quadratic decode "
+                "state (see DESIGN.md)")
+    if shape.kind in ("decode", "long_decode") and not cfg.has_decode:
+        return "arch has no decode step"
+    return None
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for the *data* inputs of the step.
+
+    train/prefill: full-sequence batch;  decode/long_decode: one-token step
+    (the cache is produced separately by ``cache_specs``)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32, f = jnp.int32, jnp.dtype(cfg.dtype)
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": _struct((b, s), i32)}
+        if shape.kind == "train":
+            batch["targets"] = _struct((b, s), i32)
+        if cfg.mrope:
+            batch["positions"] = _struct((b, s, 3), i32)
+        if cfg.family == "vlm":
+            n_patch = min(s // 4, 1024)
+            batch["patch_embeds"] = _struct((b, n_patch, cfg.d_model), f)
+            batch["patch_positions"] = _struct((b, n_patch), i32)
+        if cfg.is_encdec:
+            # audio stub frontend: precomputed frame embeddings; the decoder
+            # sequence is seq_len // 4 (4:1 frame-to-token ratio)
+            batch["frames"] = _struct((b, s, cfg.d_model), f)
+            batch["tokens"] = _struct((b, s // 4), i32)
+            if shape.kind == "train":
+                batch["targets"] = _struct((b, s // 4), i32)
+        return batch
+    # decode kinds: one new token
+    batch = {"tokens": _struct((b, 1), i32), "pos": _struct((b,), i32)}
+    if cfg.mrope:
+        batch["positions"] = _struct((b, 1, 3), i32)
+    return batch
+
+
+def cache_specs(model, cfg: ModelConfig, shape: ShapeSpec):
+    """ShapeDtypeStructs for the decode cache (no allocation)."""
+    frames = cfg.max_source_positions if cfg.is_encdec else 0
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                 frames=frames))
+
+
+def concrete_batch(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0) -> dict:
+    """Small concrete batch for smoke tests (host numpy -> jnp)."""
+    rng = np.random.default_rng(seed)
+    specs = batch_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        if np.issubdtype(v.dtype, np.integer):
+            hi = cfg.vocab_size if "token" in k or "target" in k else \
+                max(v.shape[-1] if k == "patch_positions" else shape.seq_len, 2)
+            if k == "pos":
+                hi = shape.seq_len
+            if k == "patch_positions":
+                hi = shape.seq_len // 4 if shape.kind == "train" else shape.seq_len
+            out[k] = jnp.asarray(
+                rng.integers(0, hi, v.shape), v.dtype)
+        else:
+            out[k] = jnp.asarray(rng.normal(0, 1, v.shape), v.dtype)
+    return out

@@ -1,0 +1,14 @@
+"""DFOGraph core: two-level column-oriented partitioning, adaptive CSR/DCSR,
+filtered push message passing, signal/slot engine (the paper's contribution).
+"""
+from repro.core.partition import (  # noqa: F401
+    TwoLevelSpec, DistGraph, make_spec, build_dist_graph,
+    scatter_vertex_values, gather_vertex_values, choose_batch_size,
+)
+from repro.core.formats import (  # noqa: F401
+    ChunkFormats, build_formats, storage_summary,
+)
+from repro.core.engine import (  # noqa: F401
+    ADD, MIN, MAX, Engine, EngineConfig, Monoid, accumulate_counters,
+    zero_counters,
+)

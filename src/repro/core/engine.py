@@ -1,0 +1,448 @@
+"""DFOGraph engine: vertex-centric push with signal/slot (paper §3).
+
+ProcessEdges runs the paper's four phases:
+  1. generating          — active vertices produce messages (``signal``),
+  2. inter-node pass     — messages are *filtered* (paper §4.3) and exchanged
+                           between partitions,
+  3. intra-node dispatch — messages are routed to destination batches using
+                           the dispatching graph (= the DCSR arrays, §4.2),
+  4. processing          — ``slot`` contributions along edges are combined per
+                           destination vertex and ``apply`` updates vertex state.
+
+TPU adaptation of the slot guarantee: the C++ system serializes slot calls
+per destination vertex (so no atomics are needed).  Here ``slot``
+contributions are reduced with a user-chosen **associative + commutative
+monoid** (add/min/max — all four paper algorithms fit), the data-race-free
+equivalent on a parallel machine.  See DESIGN.md §2.
+
+Two executors share the phase logic:
+  * ``LOCAL``     — one device; the partition axis is a leading array axis;
+    "network" traffic is accounted by counters (what *would* cross the wire).
+  * ``SHARD_MAP`` — the partition axis is a mesh axis; the inter-node pass is
+    a real ``lax.all_to_all`` on the interconnect.
+
+Counters use float32: per-iteration magnitudes in our experiments stay far
+below 2**24; benchmark drivers accumulate across iterations in Python floats.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.formats import ChunkFormats, runtime_choice_cost, read_bytes_model
+from repro.core.partition import DistGraph, TwoLevelSpec
+
+State = Dict[str, jnp.ndarray]      # name -> [P, V] stacked vertex arrays
+
+
+# ---------------------------------------------------------------------------
+# Monoids
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Monoid:
+    name: str
+    identity: float
+
+    def segment(self, data, segment_ids, num_segments):
+        if self.name == "add":
+            return jax.ops.segment_sum(data, segment_ids, num_segments)
+        if self.name == "min":
+            return jax.ops.segment_min(data, segment_ids, num_segments)
+        if self.name == "max":
+            return jax.ops.segment_max(data, segment_ids, num_segments)
+        raise ValueError(self.name)
+
+
+ADD = Monoid("add", 0.0)
+MIN = Monoid("min", float(np.finfo(np.float32).max))
+MAX = Monoid("max", float(np.finfo(np.float32).min))
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Tunables mirroring the paper's knobs."""
+    enable_filtering: bool = True          # §4.3
+    filter_skip_threshold: float = 2.0     # skip filter if |L_ij|/|M_i| >= 2
+    msg_bytes: int = 4                     # payload bytes per message value
+    enable_adaptive_formats: bool = True   # §4.1 runtime CSR/DCSR choice
+    account_io: bool = True                # maintain modeled I/O counters
+
+
+COUNTER_KEYS = (
+    "msgs_generated", "msgs_sent", "msgs_sent_nofilter",
+    "net_bytes", "net_bytes_nofilter",
+    "msgs_dispatched", "edges_touched", "chunks_read",
+    "edge_read_bytes", "vertex_read_bytes", "vertex_write_bytes",
+    "msg_disk_bytes", "seek_cost",
+)
+
+
+def zero_counters() -> Dict[str, jnp.ndarray]:
+    return {k: jnp.zeros((), jnp.float32) for k in COUNTER_KEYS}
+
+
+def accumulate_counters(acc: dict, new: dict) -> dict:
+    """Host-side accumulation across iterations (python floats)."""
+    return {k: acc.get(k, 0.0) + float(new[k]) for k in new}
+
+
+# ---------------------------------------------------------------------------
+# Phase logic on one destination partition's local arrays (no leading axis)
+# ---------------------------------------------------------------------------
+
+def _phase_process(esp, esl, edl, edata, evalid, recv_msg, recv_mask,
+                   slot_fn, monoid, v_max):
+    """Phase 4: slot along edges + monoid combine per destination vertex.
+
+    esp/esl/edl/edata/evalid: per-edge arrays [E].
+    recv_msg/recv_mask: [P, V] messages (and presence) from each source part.
+    Returns (agg [V], has_msg [V], edges_touched scalar).
+    """
+    p_cnt = recv_msg.shape[0]
+    flat_msg = recv_msg.reshape(p_cnt * v_max)
+    flat_mask = recv_mask.reshape(p_cnt * v_max)
+    gidx = esp.astype(jnp.int32) * v_max + esl.astype(jnp.int32)
+    mv = jnp.take(flat_msg, gidx, mode="clip")               # [E]
+    em = jnp.take(flat_mask, gidx, mode="clip") & evalid     # [E]
+
+    contrib = slot_fn(mv, edata)                             # [E]
+    contrib = jnp.where(em, contrib, monoid.identity)
+    agg = monoid.segment(contrib, edl.astype(jnp.int32), v_max)
+    has = jax.ops.segment_max(em.astype(jnp.int32),
+                              edl.astype(jnp.int32), v_max) > 0
+    return agg, has, jnp.sum(em, dtype=jnp.float32)
+
+
+def _phase_dispatch(dsrc, dpart, dbatch, dvalid, recv_mask, v_max, b_cnt):
+    """Phase 3 accounting via the dispatching graph (DCSR entries).
+
+    Returns (chunk_active [P, B] — chunk has >=1 present source — and the
+    number of dispatched (message, batch) deliveries)."""
+    p_cnt = recv_mask.shape[0]
+    flat_mask = recv_mask.reshape(p_cnt * v_max)
+    gidx = dpart.astype(jnp.int32) * v_max + dsrc.astype(jnp.int32)
+    present = jnp.take(flat_mask, gidx, mode="clip") & dvalid  # [S]
+    cid = dpart.astype(jnp.int32) * b_cnt + dbatch.astype(jnp.int32)
+    chunk_active = jax.ops.segment_max(
+        present.astype(jnp.int32), cid, p_cnt * b_cnt).reshape(p_cnt, b_cnt) > 0
+    return chunk_active, jnp.sum(present, dtype=jnp.float32)
+
+
+def _batch_touched(mask, batch_size):
+    """Number of vertices in batches containing >=1 set bit (I/O model:
+    vertex data is loaded per batch, paper §4.4)."""
+    pad = (-mask.shape[-1]) % batch_size
+    m = jnp.pad(mask, [(0, 0)] * (mask.ndim - 1) + [(0, pad)])
+    batch_any = m.reshape(*m.shape[:-1], -1, batch_size).any(axis=-1)
+    return jnp.sum(batch_any, dtype=jnp.float32) * batch_size
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class Engine:
+    """Executes signal/slot programs over a two-level-partitioned graph."""
+
+    def __init__(self, graph: DistGraph, fmts: ChunkFormats,
+                 config: EngineConfig = EngineConfig(),
+                 mesh: Mesh | None = None, axis: str = "part"):
+        self.graph = graph
+        self.fmts = fmts
+        self.config = config
+        self.mesh = mesh
+        self.axis = axis
+        spec = graph.spec
+        bounds = np.asarray(spec.boundaries)
+        gid = np.zeros((spec.num_partitions, spec.v_max), np.int32)
+        for p in range(spec.num_partitions):
+            gid[p] = bounds[p] + np.arange(spec.v_max)
+        self.global_id = jnp.asarray(gid)           # [P, V]
+        self._distributed = mesh is not None
+        if self._distributed:
+            self._shard = NamedSharding(mesh, P(axis))
+            put = lambda x: jax.device_put(x, self._shard)
+            self._garrs = dict(
+                edge_src_part=put(graph.edge_src_part),
+                edge_src_local=put(graph.edge_src_local),
+                edge_dst_local=put(graph.edge_dst_local),
+                edge_data=put(graph.edge_data),
+                edge_valid=put(graph.edge_valid),
+                vertex_valid=put(graph.vertex_valid),
+                need=put(graph.need),
+                dcsr_src=put(fmts.dcsr_src),
+                dcsr_part=put(fmts.dcsr_part),
+                dcsr_batch=put(fmts.dcsr_batch),
+                dcsr_valid=put(fmts.dcsr_valid),
+                dcsr_ptr=put(fmts.dcsr_ptr),
+                has_csr=put(fmts.has_csr),
+                csr_bytes=put(fmts.csr_bytes),
+                dcsr_bytes=put(fmts.dcsr_bytes),
+                need_counts=put(graph.need_counts),
+                global_id=put(self.global_id),
+            )
+
+    def init_state(self, **arrays: jnp.ndarray) -> State:
+        state = {k: jnp.asarray(v) for k, v in arrays.items()}
+        if self._distributed:
+            state = {k: jax.device_put(v, self._shard) for k, v in state.items()}
+        return state
+
+    # -- ProcessVertices ----------------------------------------------------
+    def process_vertices(self, state: State,
+                         work_fn: Callable[[State, jnp.ndarray], tuple],
+                         active: jnp.ndarray | None = None):
+        """work_fn(state, global_id) -> (updates: State, ret per-vertex).
+
+        Updates vertices in ``active`` (all valid, if None); returns
+        (new_state, sum of ret over active vertices, counters).  Batches with
+        no active vertex are skipped in the I/O model (paper §4.4)."""
+        g, cfg = self.graph, self.config
+        spec = g.spec
+
+        def step(state, active, vertex_valid, global_id):
+            amask = vertex_valid if active is None else (active & vertex_valid)
+            updates, ret = work_fn(state, global_id)
+            new_state = dict(state)
+            for k, v in updates.items():
+                new_state[k] = jnp.where(amask, v, state[k])
+            total = jnp.sum(jnp.where(amask, ret, 0).astype(jnp.float32))
+            counters = zero_counters()
+            if cfg.account_io:
+                arrays_bytes = sum(np.dtype(v.dtype).itemsize
+                                   for v in state.values())
+                touched = _batch_touched(amask, spec.batch_size)
+                counters["vertex_read_bytes"] = (
+                    touched * arrays_bytes + amask.size / 8.0)
+                counters["vertex_write_bytes"] = touched * arrays_bytes
+            return new_state, total, counters
+
+        if not self._distributed:
+            out = jax.jit(step)(state, active, g.vertex_valid, self.global_id)
+            return out
+
+        mesh, axis = self.mesh, self.axis
+
+        def inner(state, active, vertex_valid, global_id):
+            new_state, total, counters = step(state, active, vertex_valid,
+                                              global_id)
+            total = jax.lax.psum(total, axis)
+            counters = {k: jax.lax.psum(v, axis) for k, v in counters.items()}
+            return new_state, total, counters
+
+        in_specs = (jax.tree_util.tree_map(lambda _: P(axis), state),
+                    None if active is None else P(axis), P(axis), P(axis))
+        out_specs = (jax.tree_util.tree_map(lambda _: P(axis), state),
+                     P(), {k: P() for k in COUNTER_KEYS})
+        fn = jax.jit(jax.shard_map(inner, mesh=mesh, in_specs=in_specs,
+                                   out_specs=out_specs))
+        return fn(state, active, self._garrs["vertex_valid"],
+                  self._garrs["global_id"])
+
+    # -- ProcessEdges ---------------------------------------------------------
+    def process_edges(self, state: State,
+                      signal_fn: Callable[[State, jnp.ndarray], jnp.ndarray],
+                      slot_fn: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
+                      monoid: Monoid,
+                      apply_fn: Callable,
+                      active: jnp.ndarray | None = None):
+        """One ProcessEdges call.
+
+        signal_fn(state, global_id) -> per-vertex message value
+        slot_fn(msg, edge_data)     -> per-edge contribution
+        apply_fn(state, agg, has_msg, global_id)
+            -> (updates: State, new_active bool, ret per-vertex)
+        ``updates``/``ret`` take effect only where a message arrived
+        (has_msg); combine with ProcessVertices for unconditional updates.
+        Returns (new_state, new_active, total_ret, counters)."""
+        if not self._distributed:
+            fn = self._local_pe(signal_fn, slot_fn, monoid, apply_fn)
+            return fn(state, active, self.graph, self.fmts, self.global_id)
+        fn = self._sharded_pe(signal_fn, slot_fn, monoid, apply_fn,
+                              active is not None)
+        return fn(state, active, self._garrs)
+
+    # ---------- single-device (stacked) implementation ----------
+    def _local_pe(self, signal_fn, slot_fn, monoid, apply_fn):
+        cfg = self.config
+        spec: TwoLevelSpec = self.graph.spec
+        p_cnt, v_max, b_cnt = (spec.num_partitions, spec.v_max,
+                               spec.num_batches)
+
+        @jax.jit
+        def step(state, active, g, fmts, global_id):
+            counters = zero_counters()
+            amask = g.vertex_valid if active is None else (active & g.vertex_valid)
+            # Phase 1: generate
+            msg = signal_fn(state, global_id)                        # [P, V]
+            m_p = jnp.sum(amask, axis=1, dtype=jnp.float32)          # [P]
+            counters["msgs_generated"] = jnp.sum(m_p)
+            counters["msg_disk_bytes"] = jnp.sum(m_p) * (cfg.msg_bytes + 4)
+
+            # Phase 2: filter + pass
+            base = jnp.broadcast_to(amask[:, None, :], (p_cnt, p_cnt, v_max))
+            need_counts = g.need_counts.astype(jnp.float32)
+            if cfg.enable_filtering:
+                filtered = amask[:, None, :] & g.need
+                skip = need_counts >= (cfg.filter_skip_threshold
+                                       * m_p[:, None])
+                sendmask = jnp.where(skip[:, :, None], base, filtered)
+            else:
+                sendmask = base
+            off_diag = ~jnp.eye(p_cnt, dtype=bool)[:, :, None]
+            counters["msgs_sent"] = jnp.sum(sendmask, dtype=jnp.float32)
+            counters["msgs_sent_nofilter"] = jnp.sum(base, dtype=jnp.float32)
+            counters["net_bytes"] = jnp.sum(
+                sendmask & off_diag, dtype=jnp.float32) * (cfg.msg_bytes + 4)
+            counters["net_bytes_nofilter"] = jnp.sum(
+                base & off_diag, dtype=jnp.float32) * (cfg.msg_bytes + 4)
+            recv_msg = jnp.where(sendmask, msg[:, None, :], 0).transpose(1, 0, 2)
+            recv_mask = sendmask.transpose(1, 0, 2)                   # [q, p, v]
+
+            # Phase 3: dispatch
+            chunk_active, dispatched = jax.vmap(
+                lambda ds, dp, db, dv, rm: _phase_dispatch(
+                    ds, dp, db, dv, rm, v_max, b_cnt))(
+                fmts.dcsr_src, fmts.dcsr_part, fmts.dcsr_batch,
+                fmts.dcsr_valid, recv_mask)
+            counters["msgs_dispatched"] = jnp.sum(dispatched)
+            counters["chunks_read"] = jnp.sum(chunk_active, dtype=jnp.float32)
+            if cfg.enable_adaptive_formats:
+                msgs_from = jnp.sum(recv_mask, axis=2).astype(jnp.int32)
+                use_csr, seek = runtime_choice_cost(fmts, spec, msgs_from)
+                counters["seek_cost"] = jnp.sum(
+                    jnp.where(chunk_active, seek, 0.0), dtype=jnp.float32)
+                counters["edge_read_bytes"] = read_bytes_model(
+                    fmts, use_csr, chunk_active).astype(jnp.float32)
+            else:
+                counters["edge_read_bytes"] = jnp.sum(jnp.where(
+                    chunk_active, fmts.csr_bytes, 0.0))
+
+            # Phase 4: process
+            agg, has, touched = jax.vmap(
+                lambda a, b, c, d, e, rm, rk: _phase_process(
+                    a, b, c, d, e, rm, rk, slot_fn, monoid, v_max))(
+                g.edge_src_part, g.edge_src_local, g.edge_dst_local,
+                g.edge_data, g.edge_valid, recv_msg, recv_mask)
+            counters["edges_touched"] = jnp.sum(touched)
+
+            updates, new_active, ret = apply_fn(state, agg, has, global_id)
+            new_state = dict(state)
+            upd_mask = has & g.vertex_valid
+            for k, v in updates.items():
+                new_state[k] = jnp.where(upd_mask, v, state[k])
+            new_active = new_active & g.vertex_valid
+            total = jnp.sum(jnp.where(upd_mask, ret, 0).astype(jnp.float32))
+            if cfg.account_io:
+                arrays_bytes = sum(np.dtype(v.dtype).itemsize
+                                   for v in state.values())
+                touched_v = _batch_touched(upd_mask, spec.batch_size)
+                counters["vertex_read_bytes"] = touched_v * arrays_bytes
+                counters["vertex_write_bytes"] = touched_v * arrays_bytes
+            return new_state, new_active, total, counters
+
+        return step
+
+    # ---------- shard_map (distributed) implementation ----------
+    def _sharded_pe(self, signal_fn, slot_fn, monoid, apply_fn, has_active):
+        cfg = self.config
+        spec: TwoLevelSpec = self.graph.spec
+        p_cnt, v_max, b_cnt = (spec.num_partitions, spec.v_max,
+                               spec.num_batches)
+        mesh, axis = self.mesh, self.axis
+
+        def step(state, active, garrs):
+            counters = zero_counters()
+            vertex_valid = garrs["vertex_valid"]               # [1, V]
+            amask = vertex_valid if active is None else (active & vertex_valid)
+            msg = signal_fn(state, garrs["global_id"])         # [1, V]
+            m_p = jnp.sum(amask, dtype=jnp.float32)
+            counters["msgs_generated"] = m_p
+            counters["msg_disk_bytes"] = m_p * (cfg.msg_bytes + 4)
+
+            need = garrs["need"][0]                            # [P, V]
+            base = jnp.broadcast_to(amask[0][None, :], (p_cnt, v_max))
+            my = jax.lax.axis_index(axis)
+            if cfg.enable_filtering:
+                filtered = amask[0][None, :] & need
+                my_need_counts = garrs["need_counts"][0].astype(jnp.float32)
+                skip = my_need_counts >= cfg.filter_skip_threshold * m_p
+                sendmask = jnp.where(skip[:, None], base, filtered)
+            else:
+                sendmask = base
+            not_self = (jnp.arange(p_cnt) != my)[:, None]
+            counters["msgs_sent"] = jnp.sum(sendmask, dtype=jnp.float32)
+            counters["msgs_sent_nofilter"] = jnp.sum(base, dtype=jnp.float32)
+            counters["net_bytes"] = jnp.sum(
+                sendmask & not_self, dtype=jnp.float32) * (cfg.msg_bytes + 4)
+            counters["net_bytes_nofilter"] = jnp.sum(
+                base & not_self, dtype=jnp.float32) * (cfg.msg_bytes + 4)
+
+            send_msg = jnp.where(sendmask, msg[0][None, :], 0)   # [P, V]
+            # Real interconnect exchange (paper phase 2 on the wire).
+            recv_msg = jax.lax.all_to_all(send_msg, axis, 0, 0, tiled=True)
+            recv_mask = jax.lax.all_to_all(
+                sendmask.astype(jnp.int8), axis, 0, 0, tiled=True) > 0
+
+            chunk_active, dispatched = _phase_dispatch(
+                garrs["dcsr_src"][0], garrs["dcsr_part"][0],
+                garrs["dcsr_batch"][0], garrs["dcsr_valid"][0],
+                recv_mask, v_max, b_cnt)
+            counters["msgs_dispatched"] = dispatched
+            counters["chunks_read"] = jnp.sum(chunk_active, dtype=jnp.float32)
+            if cfg.enable_adaptive_formats:
+                # Paper §4.1 runtime CSR/DCSR choice on this shard's chunks.
+                dptr = garrs["dcsr_ptr"][0]                    # [P, B+1]
+                nnz = (dptr[:, 1:] - dptr[:, :-1]).astype(jnp.float32)
+                v_src = jnp.asarray(spec.partition_sizes(),
+                                    jnp.float32)[:, None]      # [P, 1]
+                m = jnp.sum(recv_mask, axis=1).astype(jnp.float32)[:, None]
+                cost_dcsr = 2.0 * nnz
+                cost_csr = jnp.minimum(self.fmts.gamma * m, v_src)
+                use_csr = garrs["has_csr"][0] & (cost_csr < cost_dcsr)
+                seek = jnp.where(use_csr, cost_csr, cost_dcsr)
+                counters["seek_cost"] = jnp.sum(
+                    jnp.where(chunk_active, seek, 0.0), dtype=jnp.float32)
+                per_chunk = jnp.where(use_csr, garrs["csr_bytes"][0],
+                                      garrs["dcsr_bytes"][0])
+                counters["edge_read_bytes"] = jnp.sum(
+                    jnp.where(chunk_active, per_chunk, 0.0), dtype=jnp.float32)
+
+            agg, has, touched = _phase_process(
+                garrs["edge_src_part"][0], garrs["edge_src_local"][0],
+                garrs["edge_dst_local"][0], garrs["edge_data"][0],
+                garrs["edge_valid"][0], recv_msg, recv_mask,
+                slot_fn, monoid, v_max)
+            counters["edges_touched"] = touched
+            agg, has = agg[None, :], has[None, :]
+
+            updates, new_active, ret = apply_fn(state, agg, has,
+                                                garrs["global_id"])
+            new_state = dict(state)
+            upd_mask = has & vertex_valid
+            for k, v in updates.items():
+                new_state[k] = jnp.where(upd_mask, v, state[k])
+            new_active = new_active & vertex_valid
+            total = jnp.sum(jnp.where(upd_mask, ret, 0).astype(jnp.float32))
+            total = jax.lax.psum(total, axis)
+            counters = {k: jax.lax.psum(v, axis) for k, v in counters.items()}
+            return new_state, new_active, total, counters
+
+        def make(state):
+            in_specs = ({k: P(axis) for k in state},
+                        P(axis) if has_active else None,
+                        {k: P(axis) for k in self._garrs})
+            out_specs = ({k: P(axis) for k in state}, P(axis), P(),
+                         {k: P() for k in COUNTER_KEYS})
+            return jax.jit(jax.shard_map(step, mesh=mesh, in_specs=in_specs,
+                                         out_specs=out_specs))
+
+        def run(state, active, garrs):
+            return make(state)(state, active, garrs)
+        return run

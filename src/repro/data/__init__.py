@@ -1,0 +1,2 @@
+from repro.data.graphs import rmat_graph, uniform_graph, GraphData  # noqa: F401
+from repro.data.tokens import TokenPipeline, synthetic_token_batches  # noqa: F401

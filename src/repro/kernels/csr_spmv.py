@@ -1,0 +1,120 @@
+"""Block-sparse SpMV Pallas kernel — the FOOC processing hot loop on TPU.
+
+Paper §4.1's CSR/DCSR edge chunks are a disk format; the TPU-native compute
+format is **block-CSR**: the (dst batch x src partition) adjacency is tiled
+into dense T x T blocks, only nonempty tiles are stored, and each tile is an
+MXU matmul.  This is the hardware adaptation of "narrow the span of random
+access": the destination accumulator block lives in VMEM for the whole row
+sweep (the paper's vertex batch), and source-vector blocks stream in
+HBM -> VMEM selected by the tile's column index (the paper's message file
+reads) via scalar-prefetch-driven BlockSpecs.
+
+Kernel grid: (num dst row-blocks, max tiles per row).  Rows are padded to
+``max_tiles_per_row`` with zero tiles pointing at column 0 — the paper's
+DCSR "only live chunks" property is preserved in storage (tiles), while the
+grid stays rectangular (a TPU constraint; padding tiles multiply zeros).
+
+out[r*T:(r+1)*T] = sum_j tiles[row_ptr[r] + j] @ x[col[row_ptr[r] + j]]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(row_ptr_ref, col_ref, tiles_ref, x_ref, out_ref):
+    """One (row block r, tile slot j) grid step.
+
+    tiles_ref block: [T, T] — tile j of row r (zero tile if padding)
+    x_ref block:     [T]    — source block selected by col[row_ptr[r]+j]
+    out_ref block:   [T]    — dst accumulator (revisited across j)
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tile = tiles_ref[...]
+    x = x_ref[...]
+    out_ref[...] += jnp.dot(tile, x, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile", "max_tiles_per_row",
+                                    "interpret"))
+def block_csr_spmv(tiles: jnp.ndarray, tile_col: jnp.ndarray,
+                   row_ptr: jnp.ndarray, x: jnp.ndarray, *,
+                   tile: int, max_tiles_per_row: int,
+                   interpret: bool = True) -> jnp.ndarray:
+    """tiles: [n_tiles, T, T] f32 (padded so every row has exactly
+    ``max_tiles_per_row`` tiles); tile_col: [n_tiles] i32 source block ids;
+    row_ptr: [n_rows + 1] i32; x: [n_src_blocks * T] f32.
+    Returns out: [n_rows * T] f32."""
+    n_rows = row_ptr.shape[0] - 1
+    t = tile
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,      # row_ptr, tile_col
+        grid=(n_rows, max_tiles_per_row),
+        in_specs=[
+            pl.BlockSpec((1, t, t),
+                         lambda r, j, row_ptr, col: (row_ptr[r] + j, 0, 0)),
+            pl.BlockSpec((t,),
+                         lambda r, j, row_ptr, col: (col[row_ptr[r] + j],)),
+        ],
+        out_specs=pl.BlockSpec((t,), lambda r, j, row_ptr, col: (r,)),
+    )
+
+    def kernel(row_ptr_ref, col_ref, tiles_ref, x_ref, out_ref):
+        _kernel(row_ptr_ref, col_ref, tiles_ref[0], x_ref, out_ref)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rows * t,), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(row_ptr, tile_col, tiles, x)
+
+
+def build_block_csr(src, dst, data, num_vertices: int, tile: int):
+    """Host-side: edge list -> padded block-CSR (numpy).
+
+    Returns dict(tiles [n, T, T] f32, tile_col [n] i32,
+    row_ptr [n_rows+1] i32, n_rows, n_cols, max_tiles_per_row)."""
+    import numpy as np
+    t = tile
+    n_blocks = -(-num_vertices // t)
+    rb, cb = dst // t, src // t
+    key = rb * n_blocks + cb
+    order = np.argsort(key, kind="stable")
+    src_s, dst_s, data_s, key_s = src[order], dst[order], data[order], key[order]
+    uniq, starts = np.unique(key_s, return_index=True)
+    starts = np.append(starts, src_s.shape[0])
+
+    # group tiles per row, pad rows to the max occupancy
+    per_row: list = [[] for _ in range(n_blocks)]
+    for i, k in enumerate(uniq):
+        per_row[int(k) // n_blocks].append(i)
+    max_tiles = max(1, max(len(r) for r in per_row))
+
+    tiles = np.zeros((n_blocks * max_tiles, t, t), np.float32)
+    tile_col = np.zeros((n_blocks * max_tiles,), np.int32)
+    row_ptr = np.arange(0, n_blocks * max_tiles + 1, max_tiles,
+                        dtype=np.int32)
+    for r in range(n_blocks):
+        for slot, ti in enumerate(per_row[r]):
+            lo, hi = starts[ti], starts[ti + 1]
+            k = int(uniq[ti])
+            tile_col[r * max_tiles + slot] = k % n_blocks
+            np.add.at(tiles[r * max_tiles + slot],
+                      (dst_s[lo:hi] % t, src_s[lo:hi] % t), data_s[lo:hi])
+    return dict(tiles=tiles, tile_col=tile_col, row_ptr=row_ptr,
+                n_rows=n_blocks, n_cols=n_blocks,
+                max_tiles_per_row=max_tiles)

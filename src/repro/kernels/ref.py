@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_block_csr_spmv(tiles, tile_col, row_ptr, x, *, tile: int):
+    """Dense reference for the block-CSR SpMV."""
+    n_rows = row_ptr.shape[0] - 1
+    out = jnp.zeros((n_rows * tile,), jnp.float32)
+    tiles = jnp.asarray(tiles)
+    for r in range(n_rows):
+        acc = jnp.zeros((tile,), jnp.float32)
+        for ti in range(int(row_ptr[r]), int(row_ptr[r + 1])):
+            col = int(tile_col[ti])
+            acc = acc + tiles[ti] @ x[col * tile:(col + 1) * tile]
+        out = out.at[r * tile:(r + 1) * tile].set(acc)
+    return out
+
+
+def ref_spmv_from_edges(src, dst, data, x, num_vertices):
+    """Edge-list oracle: out[d] = sum over edges (s->d) data * x[s]."""
+    out = np.zeros(num_vertices, np.float64)
+    np.add.at(out, dst, data * np.asarray(x, np.float64)[src])
+    return out
+
+
+def ref_attention(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q: [BH, Sq, D]; k/v: [BH, Skv, D]."""
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * d ** -0.5
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qp = jnp.arange(sq)
+    kp = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kp[None, :] <= qp[:, None]
+    if window:
+        mask &= kp[None, :] > qp[:, None] - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ref_gla(q, k, v, w, u=None, *, include_current=True):
+    """Recurrent oracle.  q/k/w: [BH, T, Dk]; v: [BH, T, Dv]; u: [BH, Dk]."""
+    bh, t, dk = q.shape
+    dv = v.shape[-1]
+    s = jnp.zeros((bh, dk, dv), jnp.float32)
+    qf, kf, vf = (a.astype(jnp.float32) for a in (q, k, v))
+    wf = w.astype(jnp.float32)
+    ys = []
+    for i in range(t):
+        decay = jnp.exp(wf[:, i])[:, :, None]
+        kv = kf[:, i, :, None] * vf[:, i, None, :]
+        if include_current:
+            s = decay * s + kv
+            y = jnp.einsum("bd,bdv->bv", qf[:, i], s)
+        else:
+            y = jnp.einsum("bd,bdv->bv", qf[:, i], s)
+            if u is not None:
+                y = y + jnp.einsum("bd,bd,bd,bv->bv", qf[:, i],
+                                   u.astype(jnp.float32), kf[:, i],
+                                   vf[:, i])
+            s = decay * s + kv
+        ys.append(y)
+    return jnp.stack(ys, 1).astype(q.dtype), s

@@ -1,0 +1,236 @@
+"""Scan-corrected cost accounting for the dry-run roofline.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body once, independent
+of trip count, so the deployable scanned-over-layers program under-reports
+FLOPs / bytes / collective traffic by roughly the layer count.  We correct
+exactly (per stage) instead of unrolling the whole model:
+
+    corrected = F_scanned + sum_s (n_s - 1) * body_cost_s
+
+where body_cost_s is obtained by compiling stage s's body *in isolation*
+under the same mesh/shardings (forward body for serve/prefill cells, VJP
+body — including the remat recompute — for train cells).  Inner scans
+(chunked attention / chunked GLA) are unrolled inside body compiles via
+``flags.COST_ACCOUNTING_UNROLL`` so their trip counts are visible too.
+
+Validated against a fully-unrolled compile in tests/test_costing.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.models import flags
+from repro.models.model import Model
+from repro.sharding.rules import ShardingRules
+
+
+def _spec_leaf(x):
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str)
+                                        for a in x)
+
+
+def _shardings_for(mesh, rules: ShardingRules, logical_tree):
+    return jax.tree_util.tree_map(
+        lambda ax: NamedSharding(mesh, rules.spec(*ax)), logical_tree,
+        is_leaf=_spec_leaf)
+
+
+def _slice_stage_structs(tree):
+    """Leading (layers) axis of every stacked leaf -> 1."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((1,) + s.shape[1:], s.dtype), tree)
+
+
+@dataclasses.dataclass
+class BodyCost:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    trip: int                 # n_s
+    compile_s: float
+
+
+def stage_body_costs(model: Model, params_struct, rules: ShardingRules,
+                     mesh, *, kind: str, batch_struct, cache_struct=None,
+                     collective_fn=None) -> list:
+    """Compile each stage body once; returns [BodyCost per stage].
+
+    kind: 'train' (VJP body) | 'prefill' | 'decode'."""
+    import time
+    cfg = model.cfg
+    specs = model.param_specs()
+    cache_logical = model.cache_logical_specs() if cache_struct is not None \
+        else None
+    dtype = jnp.dtype(cfg.dtype)
+    out = []
+
+    # activation struct entering the decoder stack
+    if kind in ("train", "prefill"):
+        tok = batch_struct["tokens"]
+        b, s = tok.shape
+        x_struct = jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype)
+        x_sh = rules.sharding("batch", "seq", None)
+        if cfg.mrope:
+            pos_struct = batch_struct["positions"]
+            pos_sh = rules.sharding("batch", "seq", None)
+        else:
+            pos_struct = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            pos_sh = rules.sharding("batch", "seq")
+        cross_struct = cross_sh = None
+        if cfg.is_encdec:
+            f = batch_struct["frames"].shape[1]
+            cross_struct = jax.ShapeDtypeStruct((b, f, cfg.d_model), dtype)
+            cross_sh = rules.sharding("batch", "seq", None)
+    else:
+        b = batch_struct["tokens"].shape[0]
+        x_struct = jax.ShapeDtypeStruct((b, 1, cfg.d_model), dtype)
+        x_sh = rules.sharding("batch", None, None)
+        if cfg.mrope:
+            pos_struct = batch_struct["positions"]
+            pos_sh = rules.sharding("batch", None, None)
+        else:
+            pos_struct = jax.ShapeDtypeStruct((b,), jnp.int32)
+            pos_sh = rules.sharding("batch")
+        dpos_struct = jax.ShapeDtypeStruct((b,), jnp.int32)
+        dpos_sh = rules.sharding("batch")
+        cross_struct = cross_sh = None
+
+    shared_struct = params_struct.get("shared_attn")
+    shared_sh = None
+    if shared_struct is not None:
+        shared_sh = _shardings_for(mesh, rules, specs["shared_attn"])
+
+    all_stages = list(zip(model.stages, params_struct["stages"],
+                          specs["stages"],
+                          cache_struct if cache_struct is not None
+                          else [None] * len(model.stages)))
+    if cfg.is_encdec and kind in ("train", "prefill"):
+        # encoder stages process 'frames'-length activations
+        for st, sp, ss in zip(model.encoder_stages,
+                              params_struct["enc_stages"],
+                              specs["enc_stages"]):
+            all_stages.append((st, sp, ss, None))
+
+    flags.COST_ACCOUNTING_UNROLL = True
+    try:
+        for idx, (stage, sp_struct, sp_spec, ca_struct) in \
+                enumerate(all_stages):
+            t0 = time.time()
+            stage1 = dataclasses.replace(stage, n=1)
+            sp1 = _slice_stage_structs(sp_struct)
+            sp_sh = _shardings_for(mesh, rules, sp_spec)
+            enc = stage.encoder
+            if enc:
+                fframes = batch_struct["frames"].shape[1]
+                xs = jax.ShapeDtypeStruct((b, fframes, cfg.d_model), dtype)
+                ps = jax.ShapeDtypeStruct((b, fframes), jnp.int32)
+                ps_sh = rules.sharding("batch", "seq")
+                xsh = rules.sharding("batch", "seq", None)
+            else:
+                xs, ps, ps_sh, xsh = x_struct, pos_struct, pos_sh, x_sh
+
+            if kind in ("train", "prefill"):
+                if kind == "train":
+                    def body(x, sp, shared, cross, pos, ct,
+                             _stage=stage1, _enc=enc):
+                        def fwd(xx, ss):
+                            model._shared_params = shared
+                            y, aux, _ = model._run_stage(
+                                _stage, ss, xx, rules, positions=pos,
+                                cross_kv=cross, causal=not _enc)
+                            return y, aux
+                        y, vjp = jax.vjp(fwd, x, sp)
+                        return vjp((ct, jnp.ones((), jnp.float32)))
+                    args = (xs, sp1, shared_struct, cross_struct, ps, xs)
+                    shs = (xsh, sp_sh, shared_sh, cross_sh, ps_sh, xsh)
+                else:
+                    def body(x, sp, shared, cross, pos,
+                             _stage=stage1, _enc=enc):
+                        model._shared_params = shared
+                        y, aux, _ = model._run_stage(
+                            _stage, sp, x, rules, positions=pos,
+                            cross_kv=cross, causal=not _enc)
+                        return y, aux
+                    args = (xs, sp1, shared_struct, cross_struct, ps)
+                    shs = (xsh, sp_sh, shared_sh, cross_sh, ps_sh)
+            else:
+                ca1 = jax.tree_util.tree_map(
+                    lambda s: jax.ShapeDtypeStruct((1,) + s.shape[1:],
+                                                   s.dtype), ca_struct)
+                ca_sh = _shardings_for(mesh, rules, cache_logical[idx]) \
+                    if cache_logical else None
+                if stage.shared_attn:
+                    def body(x, sp, shared, cache, pos, dpos, _stage=stage1):
+                        model._shared_params = shared
+                        y, aux, nc = model._run_stage_decode_shared(
+                            _stage, sp, x, rules, positions=pos,
+                            cache=cache, decode_pos=dpos)
+                        return y, nc
+                else:
+                    def body(x, sp, shared, cache, pos, dpos, _stage=stage1):
+                        model._shared_params = shared
+                        y, aux, nc = model._run_stage(
+                            _stage, sp, x, rules, positions=pos,
+                            cache=cache, decode_pos=dpos)
+                        return y, nc
+                ppos = pos_struct if cfg.mrope else \
+                    jax.ShapeDtypeStruct((b, 1), jnp.int32)
+                pps_sh = pos_sh if cfg.mrope else rules.sharding(
+                    "batch", None)
+                args = (x_struct, sp1, shared_struct, ca1, ppos, dpos_struct)
+                shs = (x_sh, sp_sh, shared_sh, ca_sh, pps_sh, dpos_sh)
+
+            # drop None args (jit shardings can't be None-mismatched)
+            keep = [i for i, a in enumerate(args) if a is not None]
+            f_args = [args[i] for i in keep]
+            f_shs = [shs[i] for i in keep]
+
+            def wrapper(*fa, _keep=tuple(keep), _body=body, _n=len(args)):
+                full = [None] * _n
+                for slot, val in zip(_keep, fa):
+                    full[slot] = val
+                return _body(*full)
+
+            with mesh:
+                compiled = jax.jit(
+                    wrapper, in_shardings=tuple(f_shs)).lower(
+                    *f_args).compile()
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            coll = 0.0
+            if collective_fn is not None:
+                coll = collective_fn(compiled.as_text())[
+                    "total_operand_bytes"]
+            out.append(BodyCost(
+                flops=float(ca.get("flops", 0)),
+                bytes_accessed=float(ca.get("bytes accessed", 0)),
+                collective_bytes=float(coll),
+                trip=stage.n,
+                compile_s=round(time.time() - t0, 2)))
+    finally:
+        flags.COST_ACCOUNTING_UNROLL = False
+    return out
+
+
+def corrected_totals(f1: dict, coll1: float, body_costs: list) -> dict:
+    """Apply corrected = F1 + sum (n_s - 1) * body_s."""
+    extra_flops = sum((bc.trip - 1) * bc.flops for bc in body_costs)
+    extra_bytes = sum((bc.trip - 1) * bc.bytes_accessed for bc in body_costs)
+    extra_coll = sum((bc.trip - 1) * bc.collective_bytes
+                     for bc in body_costs)
+    return {
+        "flops": f1.get("flops", 0) + extra_flops,
+        "bytes_accessed": f1.get("bytes_accessed", 0) + extra_bytes,
+        "collective_bytes": coll1 + extra_coll,
+        "scan_correction": {
+            "extra_flops": extra_flops, "extra_bytes": extra_bytes,
+            "extra_collective_bytes": extra_coll,
+            "per_stage": [dataclasses.asdict(bc) for bc in body_costs],
+        },
+    }

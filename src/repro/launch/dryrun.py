@@ -1,0 +1,320 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+DOC = """Multi-pod dry-run: lower + compile every (architecture x input
+shape) on the production meshes with ShapeDtypeStruct inputs (no allocation).
+
+For each cell this writes a JSON artifact under --out with:
+  * memory_analysis (per-device argument/output/temp/code bytes)
+  * cost_analysis  (per-device HLO FLOPs / bytes accessed)
+  * collective operand bytes by op kind, parsed from the compiled
+    (post-SPMD, per-device) HLO — the roofline's collective term
+  * the sharding plan notes
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--both]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (
+    SHAPES, all_arch_names, batch_specs, cell_applicability, get_config,
+)
+from repro.launch.costing import corrected_totals, stage_body_costs
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import make_model
+from repro.sharding.strategy import plan_for
+from repro.serve.engine import make_serve_step
+from repro.train.loop import make_prefill_step, make_train_step
+from repro.train.optimizer import OptConfig
+
+# --------------------------------------------------------------------------
+# HLO collective parsing
+# --------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in a compiled (per-device)
+    HLO module.  Operand types appear inside the op's parentheses."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+(\S+)\(", s)
+        if not m:
+            continue
+        op = m.group(2).rstrip(".0123456789")
+        # fused ops like all-gather-start
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op == c + "-done":
+                base = c
+                break
+        if base is None or op.endswith("-done"):
+            continue
+        # operand section: everything inside the outermost parens
+        try:
+            inner = s[s.index("(") + 1:s.rindex(")")]
+        except ValueError:
+            continue
+        for dt, dims in _SHAPE_RE.findall(inner):
+            if dt in _DTYPE_BYTES:
+                out[base] += _shape_bytes(dt, dims)
+        counts[base] += 1
+    out_total = sum(out.values())
+    return {"by_op": out, "counts": counts, "total_operand_bytes": out_total}
+
+
+def memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    return {k: int(getattr(ma, k, -1)) for k in keys}
+
+
+def cost_analysis_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", -1)),
+            "bytes_accessed": float(ca.get("bytes accessed", -1)),
+            "transcendentals": float(ca.get("transcendentals", 0))}
+
+
+# --------------------------------------------------------------------------
+# Cell construction
+# --------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_name: str, mesh, *, remat: bool = True):
+    """Returns (fn, example_args, in_shardings, donate) for jit."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = cell_applicability(cfg, shape)
+    if skip:
+        return None, skip
+    plan = plan_for(cfg, shape.kind, mesh)
+    rules = plan.rules
+    model = make_model(cfg, remat=remat and shape.kind == "train")
+
+    batch = batch_specs(cfg, shape)
+    decode_kind = shape.kind in ("decode", "long_decode")
+    batch_logical = {
+        # decode steps carry a single token: no seq axis to shard
+        "tokens": ("batch", None) if decode_kind else ("batch", "seq"),
+        "targets": ("batch", "seq"),
+        "pos": ("batch",),
+        "positions": (("batch", None, None) if decode_kind
+                      else ("batch", "seq", None)),
+        "patch_embeds": ("batch", None, None),
+        "patch_positions": ("batch", None),
+        "frames": ("batch", "seq", None),
+    }
+    batch_sh = {k: rules.sharding(*batch_logical[k]) for k in batch}
+
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = model.param_specs()
+    params_sh = jax.tree_util.tree_map(
+        lambda ax: NamedSharding(mesh, rules.spec(*ax)), specs,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+    ctx = dict(model=model, rules=rules, cfg=cfg, shape=shape,
+               batch_struct=batch, params_struct=params_struct,
+               cache_struct=None, kind=shape.kind, plan_notes=plan.notes)
+    if shape.kind == "train":
+        from repro.models import flags as _flags
+        opt_cfg = OptConfig()
+        step = make_train_step(model, opt_cfg, rules,
+                               microbatches=_flags.TRAIN_MICROBATCHES or 1)
+        state_struct = {
+            "params": params_struct,
+            "opt": {"mu": jax.tree_util.tree_map(
+                        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                        params_struct),
+                    "nu": jax.tree_util.tree_map(
+                        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                        params_struct),
+                    "master": jax.tree_util.tree_map(
+                        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                        params_struct)},
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        state_sh = {"params": params_sh,
+                    "opt": {"mu": params_sh, "nu": params_sh,
+                            "master": params_sh},
+                    "step": NamedSharding(mesh, P())}
+        return (step, (state_struct, batch), (state_sh, batch_sh), (0,),
+                ctx), None
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(model, rules)
+        return (step, (params_struct, batch), (params_sh, batch_sh),
+                (), ctx), None
+
+    # decode / long_decode -> serve_step
+    frames = cfg.max_source_positions if cfg.is_encdec else 0
+    cache_struct = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                 frames=frames))
+    cache_logical = model.cache_logical_specs()
+    cache_sh = jax.tree_util.tree_map(
+        lambda ax: NamedSharding(mesh, rules.spec(*ax)), cache_logical,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+    step = make_serve_step(model, rules)
+    ctx["cache_struct"] = cache_struct
+    ctx["kind"] = "decode"
+    return (step, (params_struct, cache_struct, batch),
+            (params_sh, cache_sh, batch_sh), (1,), ctx), None
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str, remat: bool = True, variant: str = "",
+             cost_twin: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    built, skip = build_cell(arch, shape_name, mesh, remat=remat)
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "chips": 512 if multi_pod else 256, "variant": variant,
+    }
+    if skip:
+        record["skipped"] = skip
+        _write(record, out_dir)
+        return record
+    fn, args, shardings, donate, ctx = built
+    record["plan_notes"] = list(ctx.get("plan_notes", ()))
+    try:
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=shardings,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        record["lower_s"] = round(t_lower, 2)
+        record["compile_s"] = round(t_compile, 2)
+        record["memory_analysis"] = memory_analysis_dict(compiled)
+        record["cost_analysis"] = cost_analysis_dict(compiled)
+        record["collectives"] = collective_bytes_from_hlo(compiled.as_text())
+        record["ok"] = True
+        if cost_twin and not multi_pod:
+            # scan-corrected roofline costs (single-pod only — the roofline
+            # table is single-pod per the brief)
+            body_costs = stage_body_costs(
+                ctx["model"], ctx["params_struct"], ctx["rules"], mesh,
+                kind=ctx["kind"], batch_struct=ctx["batch_struct"],
+                cache_struct=ctx["cache_struct"],
+                collective_fn=collective_bytes_from_hlo)
+            record["corrected"] = corrected_totals(
+                record["cost_analysis"],
+                record["collectives"]["total_operand_bytes"], body_costs)
+    except Exception as e:
+        record["ok"] = False
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc(limit=20)
+    _write(record, out_dir)
+    return record
+
+
+def _write(record: dict, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    name = (f"{record['arch']}__{record['shape']}__{record['mesh']}"
+            + (f"__{record['variant']}" if record.get("variant") else "")
+            + ".json")
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(record, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both", action="store_true",
+                    help="run single-pod AND multi-pod")
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--variant", default="",
+                    help="label for perf-iteration artifacts")
+    ap.add_argument("--flag", action="append", default=[],
+                    help="perf knob, e.g. --flag MOE_POSITION_BLOCK=2048")
+    args = ap.parse_args()
+
+    from repro.models import flags as _flags
+    for kv in args.flag:
+        k, v = kv.split("=", 1)
+        _flags.set_flag(k, v)
+
+    archs = all_arch_names() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both else [args.multi_pod]
+
+    n_ok = n_skip = n_fail = 0
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                               remat=not args.no_remat, variant=args.variant)
+                if rec.get("skipped"):
+                    n_skip += 1
+                    status = f"SKIP ({rec['skipped'][:40]}...)"
+                elif rec.get("ok"):
+                    n_ok += 1
+                    ca = rec.get("corrected", rec["cost_analysis"])
+                    ma = rec["memory_analysis"]
+                    coll = ca.get("collective_bytes",
+                                  rec['collectives']['total_operand_bytes'])
+                    status = (f"ok lower={rec['lower_s']}s "
+                              f"compile={rec['compile_s']}s "
+                              f"flops={ca.get('flops', -1):.3e} "
+                              f"args={ma.get('argument_size_in_bytes', -1):.3e}B "
+                              f"coll={coll:.3e}B")
+                else:
+                    n_fail += 1
+                    status = f"FAIL {rec['error'][:120]}"
+                print(f"[{rec['mesh']}] {arch:18s} {shape:12s} {status}",
+                      flush=True)
+    print(f"\ndone: ok={n_ok} skip={n_skip} fail={n_fail}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

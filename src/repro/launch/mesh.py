@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (tests must keep seeing 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips ('data', 'model').
+    Multi-pod: 2x16x16 = 512 chips ('pod', 'data', 'model') — the 'pod'
+    axis composes with 'data' for FSDP/DP (or carries pipeline stages)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_graph_mesh(num_partitions: int):
+    """1-D mesh for the graph engine's partition axis."""
+    return jax.make_mesh((num_partitions,), ("part",))

@@ -1,0 +1,4 @@
+from repro.models.config import (  # noqa: F401
+    AttnSpec, ModelConfig, MoESpec, RWKVSpec, SSMSpec,
+)
+# model re-export added once model.py exists

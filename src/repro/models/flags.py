@@ -1,0 +1,36 @@
+"""Trace-time flags.
+
+COST_ACCOUNTING_UNROLL: set by the dry-run's *cost twin* compiles only.
+XLA's cost_analysis counts a while-loop body once regardless of trip count,
+so the deployable scanned program under-reports FLOPs/bytes/collectives.
+The dry-run therefore compiles each layer-stage body in isolation and scales
+by the trip count (launch/costing.py); inner scans (chunked attention,
+chunked GLA) must be unrolled in those body compiles so their own trip
+counts are visible.  Never set for the deployable program.
+"""
+COST_ACCOUNTING_UNROLL = False
+
+
+def inner_scan_unroll():
+    return True if COST_ACCOUNTING_UNROLL else 1
+
+
+# --- perf-iteration knobs (EXPERIMENTS.md §Perf); defaults = paper-faithful
+# baseline, variants set by the dry-run's --flag option -------------------
+
+# Two-level blocked position scan in MoE routing (exact, perf-only).
+MOE_POSITION_BLOCK: int | None = None
+# Per-source-group expert capacity: groups = data shards; makes the routing
+# scan shard-local and the dispatch buffer data-shardable.  Changes capacity
+# semantics from global-order to per-group (paper's per-pair |L_ij| bound).
+MOE_GROUPS: int | None = None
+# Query-chunked (flash-structure) attention threshold override.
+ATTN_CHUNK_THRESHOLD: int | None = None
+# Gradient-accumulation microbatches for the train step (activation memory
+# divides by this; reduce-scatter of microbatch g overlaps compute of g+1).
+TRAIN_MICROBATCHES: int | None = None
+
+
+def set_flag(name: str, value: str) -> None:
+    cur = globals()[name]          # raises KeyError for unknown flags
+    globals()[name] = None if value in ("none", "None") else int(value)

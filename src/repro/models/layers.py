@@ -1,0 +1,416 @@
+"""Core transformer layers: norms, RoPE/M-RoPE, GQA attention (global /
+sliding-window, softcap, qk-norm, bias), SwiGLU/GeGLU MLP, embeddings.
+
+All functions are pure; parameters are dicts of arrays, and each ``init_*``
+returns ``(params, specs)`` where ``specs`` mirrors the params pytree with
+tuples of *logical* axis names consumed by ``ShardingRules``.
+
+Attention uses a dense path for short sequences and a query-block-scanned
+online-softmax path (flash-attention structure, pure jnp) for long ones —
+the latter keeps peak activation memory bounded for the 32k prefill cells
+and keeps the scanned HLO compact.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import AttnSpec, ModelConfig
+from repro.sharding.rules import ShardingRules
+
+# Threshold above which attention switches to the query-chunked path.
+CHUNKED_ATTN_THRESHOLD = 8192
+Q_CHUNK = 1024
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rms_norm(d: int, dtype) -> tuple:
+    return {"scale": jnp.zeros((d,), dtype)}, {"scale": (None,)}
+
+
+def rms_norm(x, params, eps: float = 1e-6):
+    """RMSNorm with (1 + scale) parameterization (gemma/llama compatible)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def init_layer_norm(d: int, dtype) -> tuple:
+    return ({"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+            {"scale": (None,), "bias": (None,)})
+
+
+def layer_norm(x, params, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions, dim: int, theta: float):
+    """positions [...,] -> (sin, cos) of shape [..., dim/2]."""
+    half = dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [B, S, ..., D] (any number of head axes); positions: [B, S]."""
+    sin, cos = _rope_angles(positions, x.shape[-1], theta)   # [B, S, D/2]
+    expand = (slice(None), slice(None)) + (None,) * (x.ndim - 3)
+    sin, cos = sin[expand], cos[expand]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections):
+    """Qwen2-VL multimodal RoPE.  positions3: [B, S, 3] (t, h, w ids);
+    ``sections`` splits the half-dim across the three id streams.
+    x: [B, S, ..., D] (any number of head axes)."""
+    b, s = x.shape[:2]
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # choose which positional stream drives each frequency band
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=half)             # [half]
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),                        # [B, S, 3]
+        jnp.broadcast_to(sec_id[None, None, :], (b, s, half)).astype(jnp.int32) % 3,
+        axis=2)                                                # [B, S, half]
+    ang = pos * freq[None, None, :]
+    expand = (slice(None), slice(None)) + (None,) * (x.ndim - 3)
+    sin, cos = jnp.sin(ang)[expand], jnp.cos(ang)[expand]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(length: int, dim: int):
+    pos = np.arange(length)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / dim)
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=1)
+    return jnp.asarray(emb, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype, *, cross: bool = False):
+    """Grouped layout: wq/wo carry explicit (kv_heads, q_group) axes so the
+    q/o projections can shard over 'model' via EITHER axis — kv_heads when
+    it divides the TP width, else the GQA group axis (llama3-405b: kv=8
+    cannot shard 16-way, but its group of 16 q-heads per kv head can)."""
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kv
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std = d ** -0.5
+    params = {
+        "wq": jax.random.normal(k1, (d, kv, g, hd), dtype) * std,
+        "wk": jax.random.normal(k2, (d, kv, hd), dtype) * std,
+        "wv": jax.random.normal(k3, (d, kv, hd), dtype) * std,
+        "wo": jax.random.normal(k4, (kv, g, hd, d), dtype) * (h * hd) ** -0.5,
+    }
+    specs = {
+        "wq": ("d_model", "kv_heads", "q_group", "head_dim"),
+        "wk": ("d_model", "kv_heads", "head_dim"),
+        "wv": ("d_model", "kv_heads", "head_dim"),
+        "wo": ("kv_heads", "q_group", "head_dim", "d_model"),
+    }
+    if cfg.attn.qkv_bias:
+        params.update(bq=jnp.zeros((kv, g, hd), dtype),
+                      bk=jnp.zeros((kv, hd), dtype),
+                      bv=jnp.zeros((kv, hd), dtype))
+        specs.update(bq=("kv_heads", "q_group", "head_dim"),
+                     bk=("kv_heads", "head_dim"),
+                     bv=("kv_heads", "head_dim"))
+    if cfg.attn.qk_norm:
+        params.update(q_norm=jnp.zeros((hd,), dtype),
+                      k_norm=jnp.zeros((hd,), dtype))
+        specs.update(q_norm=(None,), k_norm=(None,))
+    return params, specs
+
+
+def _softcap(scores, cap: float):
+    if cap and cap > 0:
+        return jnp.tanh(scores / cap) * cap
+    return scores
+
+
+def _attn_dense(q, k, v, *, causal, window, softcap, q_offset, kv_valid_len,
+                scale):
+    """q: [B, Sq, KV, G, Dh]; k/v: [B, Sk, KV, Dh].  Mask semantics:
+    query global position = q_offset + row; kv position = column index."""
+    b, sq, kvh, g, dh = q.shape
+    sk = k.shape[1]
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = _softcap(scores, softcap)
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    if kv_valid_len is not None:
+        mask &= kpos[None, :] < kv_valid_len
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out
+
+
+def _attn_chunked(q, k, v, *, causal, window, softcap, scale):
+    """Query-block scan with online softmax (flash structure, pure jnp)."""
+    b, sq, kvh, g, dh = q.shape
+    sk = k.shape[1]
+    nblk = sq // Q_CHUNK
+    assert sq % Q_CHUNK == 0, (sq, Q_CHUNK)
+    qb = q.reshape(b, nblk, Q_CHUNK, kvh, g, dh).transpose(1, 0, 2, 3, 4, 5)
+
+    kpos = jnp.arange(sk)
+
+    def body(_, blk):
+        qi, qblk = blk      # qi: scalar block index; qblk [B, C, KV, G, Dh]
+        qpos = qi * Q_CHUNK + jnp.arange(Q_CHUNK)
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qblk, k,
+                            preferred_element_type=jnp.float32) * scale
+        scores = _softcap(scores, softcap)
+        mask = jnp.ones((Q_CHUNK, sk), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(qblk.dtype)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+        return None, out
+
+    from repro.models import flags
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nblk), qb),
+                           unroll=flags.inner_scan_unroll())
+    return outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, kvh, g, dh)
+
+
+def attention(params, x, positions, rules: ShardingRules, cfg: ModelConfig,
+              *, kind: str = "global", cache=None, decode_pos=None,
+              cross_kv=None, causal: bool = True, rope: bool = True,
+              theta_override: Optional[float] = None):
+    """Self- or cross-attention with GQA.
+
+    cache: optional dict(k=[B, Sc, KV, Dh], v=..., rolling: bool) — decode
+    mode writes the current token at ``decode_pos`` ([B] int32) and attends
+    over the cache.
+    Returns (out [B, S, d_model], new_cache or None).
+    """
+    spec: AttnSpec = cfg.attn
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kvh
+    window = spec.window if kind == "local" else 0
+
+    q = jnp.einsum("bsd,dkgh->bskgh", x, params["wq"])   # [B,S,KV,G,HD]
+    if cross_kv is None:
+        k = jnp.einsum("bsd,dkh->bskh", x, params["wk"])
+        v = jnp.einsum("bsd,dkh->bskh", x, params["wv"])
+    else:
+        k = jnp.einsum("bsd,dkh->bskh", cross_kv, params["wk"])
+        v = jnp.einsum("bsd,dkh->bskh", cross_kv, params["wv"])
+    if spec.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"] if cross_kv is None else k + params["bk"]
+        v = v + params["bv"] if cross_kv is None else v + params["bv"]
+    if spec.qk_norm:
+        q = rms_norm(q, {"scale": params["q_norm"]}, cfg.norm_eps)
+        k = rms_norm(k, {"scale": params["k_norm"]}, cfg.norm_eps)
+    if rope and spec.rope and cross_kv is None:
+        theta = theta_override if theta_override is not None else (
+            spec.rope_theta_local
+            if (kind == "local" and spec.rope_theta_local) else spec.rope_theta)
+        if cfg.mrope and positions.ndim == 3:
+            q = apply_mrope(q, positions, theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, theta)
+            k = apply_rope(k, positions, theta)
+    # Flat-head mode: when neither kv_heads nor the GQA group divides the TP
+    # width but the flat head count does (mixtral 48, yi 32, gemma2 16 on
+    # tp=16), repeat K/V to full heads and shard the flat head axis — the
+    # attention compute and score buffers shard 1/tp instead of being
+    # replicated.  Params stay FSDP-sharded; K/V repeat is activation-only.
+    # Full-sequence paths only (decode caches stay un-repeated).
+    flat = (cache is None and rules.mesh is not None
+            and rules.table.get("heads") is not None
+            and rules.table.get("kv_heads") is None
+            and rules.table.get("q_group") is None
+            and h % rules.logical_size("heads") == 0)
+    if flat:
+        q = q.reshape(b, s, h, 1, hd)
+        q = rules.shard(q, "batch", "seq", "heads", None, None)
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        k = rules.shard(k, "batch", "seq", "heads", None)
+        v = rules.shard(v, "batch", "seq", "heads", None)
+        kvh_eff, g_eff = h, 1
+    else:
+        q = rules.shard(q, "batch", "seq", "kv_heads", "q_group", None)
+        k = rules.shard(k, "batch", "seq", "kv_heads", None)
+        v = rules.shard(v, "batch", "seq", "kv_heads", None)
+        kvh_eff, g_eff = kvh, g
+    scale = hd ** -0.5
+    new_cache = None
+
+    if cache is not None:
+        # decode: write token 0 of k/v at decode_pos, attend over cache.
+        # A local-attention cache sized exactly to the window is a *rolling*
+        # ring buffer (static property — inferred from shapes, so it is not
+        # carried as a traced flag through scan).
+        sc = cache["k"].shape[1]
+        rolling = (kind == "local" and window and sc == window)
+        widx = decode_pos % sc if rolling else decode_pos
+        bidx = jnp.arange(b)
+        ck = cache["k"].at[bidx, widx].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[bidx, widx].set(v[:, 0].astype(cache["v"].dtype))
+        new_cache = dict(cache, k=ck, v=cv)
+        qh = q
+        kpos = jnp.arange(sc)
+        if rolling:
+            # Slot j holds the most recent position ≡ j (mod sc); once
+            # decode_pos >= sc every slot is within the window.  Earlier,
+            # only slots <= decode_pos have been written.
+            valid = (kpos[None, :] <= decode_pos[:, None]) | (
+                decode_pos[:, None] >= sc)
+        else:
+            valid = kpos[None, :] <= decode_pos[:, None]
+            if window:
+                valid &= kpos[None, :] > decode_pos[:, None] - window
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qh, ck,
+                            preferred_element_type=jnp.float32) * scale
+        scores = _softcap(scores, spec.softcap)
+        scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", probs, cv)
+    else:
+        qh = q
+        from repro.models import flags
+        threshold = flags.ATTN_CHUNK_THRESHOLD or CHUNKED_ATTN_THRESHOLD
+        use_chunked = (s >= threshold and s % Q_CHUNK == 0
+                       and cross_kv is None)
+        if use_chunked:
+            out = _attn_chunked(qh, k, v, causal=causal, window=window,
+                                softcap=spec.softcap, scale=scale)
+        else:
+            out = _attn_dense(qh, k, v, causal=causal and cross_kv is None,
+                              window=window, softcap=spec.softcap,
+                              q_offset=0, kv_valid_len=None, scale=scale)
+        if flat:
+            out = out.reshape(b, s, kvh, g, hd)
+    out = jnp.einsum("bskgh,kghd->bsd", out, params["wo"])
+    out = rules.shard(out, "batch", "seq", "act_d_model")
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, dtype, *, gated: bool = True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    std_in, std_out = d ** -0.5, d_ff ** -0.5
+    if gated:
+        params = {
+            "wi_gate": jax.random.normal(k1, (d, d_ff), dtype) * std_in,
+            "wi_up": jax.random.normal(k2, (d, d_ff), dtype) * std_in,
+            "wo": jax.random.normal(k3, (d_ff, d), dtype) * std_out,
+        }
+        specs = {"wi_gate": ("d_model", "d_ff"), "wi_up": ("d_model", "d_ff"),
+                 "wo": ("d_ff", "d_model")}
+    else:
+        params = {
+            "wi": jax.random.normal(k1, (d, d_ff), dtype) * std_in,
+            "wo": jax.random.normal(k3, (d_ff, d), dtype) * std_out,
+        }
+        specs = {"wi": ("d_model", "d_ff"), "wo": ("d_ff", "d_model")}
+    return params, specs
+
+
+def _act(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+def mlp(params, x, act: str, rules: ShardingRules):
+    if "wi_gate" in params:
+        hidden = _act(jnp.einsum("bsd,df->bsf", x, params["wi_gate"]), act) \
+            * jnp.einsum("bsd,df->bsf", x, params["wi_up"])
+    else:
+        hidden = _act(jnp.einsum("bsd,df->bsf", x, params["wi"]), act)
+    hidden = rules.shard(hidden, "batch", "seq", "d_ff")
+    out = jnp.einsum("bsf,fd->bsd", hidden, params["wo"])
+    return rules.shard(out, "batch", "seq", "act_d_model")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding (vocab padded for clean sharding — production
+# practice and required for e.g. whisper's 51865 on a 16-wide axis)
+# ---------------------------------------------------------------------------
+
+def padded_vocab(cfg: ModelConfig, multiple: int = 2048) -> int:
+    return -(-cfg.vocab_size // multiple) * multiple
+
+
+def init_embedding(key, cfg: ModelConfig, dtype):
+    pv = padded_vocab(cfg)
+    params = {"table": jax.random.normal(key, (pv, cfg.d_model), dtype)
+              * cfg.d_model ** -0.5}
+    specs = {"table": ("vocab", "d_model")}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        params["unembed"] = jax.random.normal(
+            k2, (cfg.d_model, pv), dtype) * cfg.d_model ** -0.5
+        specs["unembed"] = ("d_model", "vocab")
+    return params, specs
+
+
+def embed(params, tokens, cfg: ModelConfig, rules: ShardingRules,
+          *, scale: bool = False):
+    x = jnp.take(params["table"], tokens, axis=0)
+    if scale:    # gemma multiplies by sqrt(d_model)
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return rules.shard(x, "batch", "seq", "act_d_model")
+
+
+def unembed(params, x, cfg: ModelConfig, rules: ShardingRules):
+    if "unembed" in params:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    else:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["table"])
+    logits = _softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    return rules.shard(logits, "batch", "seq", "vocab")

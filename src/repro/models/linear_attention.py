@@ -1,0 +1,133 @@
+"""Chunked gated linear attention — shared recurrence core for RWKV6 (Finch,
+per-channel data-dependent decay) and Mamba2 (SSD, per-head scalar decay).
+
+Recurrence (state S in R^{Dk x Dv}, decay applied before the token enters):
+    S_t = diag(exp(w_t)) S_{t-1} + k_t v_t^T
+    y_t = q_t S_t                      (include_current=True, Mamba2)
+    y_t = q_t S_{t-1} + (q_t . (u*k_t)) v_t
+                                       (include_current=False + bonus u, RWKV6)
+
+Chunked parallel form (the TPU-native adaptation of the GPU recurrent
+kernels): with L_t = cumsum of w inside a chunk,
+    inter:  y_t += (q_t * exp(Lq_t)) @ S_in
+    intra:  A[t,s] = sum_d q_td k_sd exp(Lq_td - L_sd)   (masked s<t or s<=t)
+    state:  S_out = exp(L_last)*S_in + sum_s (k_s exp(L_last - L_s)) v_s^T
+where Lq_t = L_t (Mamba) or L_{t-1} (RWKV).  All exponents in live positions
+are <= 0, so the computation is overflow-safe; the masked region is clamped
+before the exp.  Scalar decay uses a cheap [L, L] outer form instead of the
+[L, L, Dk] per-channel tensor.
+
+MXU view: each chunk is three matmuls (A = QK', Y = AV, state update) — this
+is the compute hot loop and the target of the ``gla_chunk`` Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_gla(q, k, v, log_decay, *, chunk: int, state=None,
+                include_current: bool = True, bonus=None):
+    """q, k: [B, H, T, Dk]; v: [B, H, T, Dv];
+    log_decay: [B, H, T, Dk] (per-channel) or [B, H, T, 1] (scalar).
+    bonus: [H, Dk] current-token bonus (RWKV u) or None.
+    Returns (y [B, H, T, Dv], final_state [B, H, Dk, Dv])."""
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    scalar_decay = log_decay.shape[-1] == 1
+    f32 = jnp.float32
+
+    qc = q.reshape(b, h, nc, chunk, dk).transpose(2, 0, 1, 3, 4)
+    kc = k.reshape(b, h, nc, chunk, dk).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, h, nc, chunk, dv).transpose(2, 0, 1, 3, 4)
+    wc = log_decay.reshape(b, h, nc, chunk, -1).transpose(2, 0, 1, 3, 4)
+
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), f32)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool),
+                   0 if include_current else -1)
+
+    def body(s_in, xs):
+        qi, ki, vi, wi = xs
+        qi32, ki32, vi32 = qi.astype(f32), ki.astype(f32), vi.astype(f32)
+        lc = jnp.cumsum(wi.astype(f32), axis=2)              # [B,H,L,{Dk|1}]
+        lq = lc if include_current else lc - wi.astype(f32)  # Lq_t
+        l_last = lc[:, :, -1:, :]                            # [B,H,1,{Dk|1}]
+
+        # inter-chunk
+        q_scaled = qi32 * jnp.exp(lq if not scalar_decay else lq)
+        if scalar_decay:
+            q_scaled = qi32 * jnp.exp(lq)                    # broadcast [.,1]
+        y = jnp.einsum("bhld,bhdv->bhlv", q_scaled, s_in)
+
+        # intra-chunk
+        if scalar_decay:
+            diff = lq[:, :, :, None, 0] - lc[:, :, None, :, 0]   # [B,H,L,L]
+            diff = jnp.where(tri[None, None], diff, -jnp.inf)
+            a = jnp.einsum("bhld,bhmd->bhlm", qi32, ki32) * jnp.exp(diff)
+        else:
+            diff = lq[:, :, :, None, :] - lc[:, :, None, :, :]   # [B,H,L,L,Dk]
+            diff = jnp.where(tri[None, None, :, :, None], diff, -jnp.inf)
+            a = jnp.einsum("bhld,bhmd,bhlmd->bhlm", qi32, ki32,
+                           jnp.exp(diff))
+        if bonus is not None:
+            diag = jnp.einsum("bhld,hd,bhld->bhl",
+                              qi32, bonus.astype(f32), ki32)
+            a = a + jnp.eye(chunk, dtype=f32)[None, None] * diag[:, :, :, None]
+        y = y + jnp.einsum("bhlm,bhmv->bhlv", a, vi32)
+
+        # state update
+        k_scaled = ki32 * jnp.exp(l_last - lc)
+        s_out = jnp.exp(l_last.transpose(0, 1, 3, 2)
+                        if not scalar_decay else l_last[:, :, 0, :, None]) \
+            * s_in
+        s_out = s_out + jnp.einsum("bhld,bhlv->bhdv", k_scaled, vi32)
+        return s_out, y.astype(q.dtype)
+
+    from repro.models import flags
+    final_state, ys = jax.lax.scan(body, state, (qc, kc, vc, wc),
+                                   unroll=flags.inner_scan_unroll())
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(b, h, t, dv)
+    return y, final_state
+
+
+def gla_decode_step(q1, k1, v1, w1, state, *, include_current: bool = True,
+                    bonus=None):
+    """Single-token recurrence.  q1/k1: [B, H, Dk]; v1: [B, H, Dv];
+    w1: [B, H, Dk] or [B, H, 1] log decay; state [B, H, Dk, Dv].
+    Returns (y [B, H, Dv], new_state)."""
+    f32 = jnp.float32
+    q1, k1, v1 = q1.astype(f32), k1.astype(f32), v1.astype(f32)
+    decay = jnp.exp(w1.astype(f32))[..., None]               # [B,H,Dk|1,1]
+    kv = k1[..., :, None] * v1[..., None, :]                 # [B,H,Dk,Dv]
+    if include_current:
+        new_state = decay * state + kv
+        y = jnp.einsum("bhd,bhdv->bhv", q1, new_state)
+    else:
+        y = jnp.einsum("bhd,bhdv->bhv", q1, state)
+        if bonus is not None:
+            y = y + jnp.einsum("bhd,hd,bhd,bhv->bhv", q1,
+                               bonus.astype(f32), k1, v1)
+        new_state = decay * state + kv
+    return y, new_state
+
+
+def ref_recurrent_gla(q, k, v, log_decay, *, state=None,
+                      include_current=True, bonus=None):
+    """O(T) reference recurrence (oracle for tests and the Pallas kernel)."""
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    if state is None:
+        state = jnp.zeros((b, h, dk, dv), f32)
+    ys = []
+    for i in range(t):
+        y, state = gla_decode_step(
+            q[:, :, i], k[:, :, i], v[:, :, i],
+            log_decay[:, :, i], state,
+            include_current=include_current, bonus=bonus)
+        ys.append(y)
+    return jnp.stack(ys, axis=2).astype(q.dtype), state

@@ -1,0 +1,135 @@
+"""Mamba2 (SSD) block (zamba2's backbone): gated state-space with per-head
+scalar decay, causal depthwise conv frontend, chunked scan via the GLA core.
+
+Mapping onto chunked_gla: per head h in group g,
+  k_t = B_t(g) [N],  v_t = dt_t(h) * x_t(h) [P],  q_t = C_t(g) [N],
+  log decay = -exp(A_log_h) * dt_t(h)  (scalar per head per step),
+  y_t = q_t . S_t + D_h x_t.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.linear_attention import chunked_gla, gla_decode_step
+from repro.models.layers import init_rms_norm, rms_norm
+from repro.sharding.rules import ShardingRules
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    nheads = inner // s.head_dim
+    conv_dim = inner + 2 * s.n_groups * s.state_dim
+    return inner, nheads, conv_dim
+
+
+def init_mamba_block(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    inner, nheads, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    norm, norm_s = init_rms_norm(d, dtype)
+    gnorm, gnorm_s = init_rms_norm(inner, dtype)
+    proj_out = 2 * inner + 2 * s.n_groups * s.state_dim + nheads
+    params = {
+        "norm": norm,
+        "in_proj": jax.random.normal(ks[0], (d, proj_out), dtype) * std,
+        "conv_w": jax.random.normal(ks[1], (s.conv_width, conv_dim), dtype)
+        * s.conv_width ** -0.5,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads).astype(jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "gnorm": gnorm,
+        "out_proj": jax.random.normal(ks[2], (inner, d), dtype)
+        * inner ** -0.5,
+    }
+    specs = {
+        "norm": norm_s,
+        "in_proj": ("d_model", "inner"),
+        "conv_w": (None, "inner"), "conv_b": ("inner",),
+        "A_log": ("state_heads",), "D": ("state_heads",),
+        "dt_bias": ("state_heads",),
+        "gnorm": gnorm_s,
+        "out_proj": ("inner", "d_model"),
+    }
+    return params, specs
+
+
+def _causal_conv(xbc, conv_w, conv_b, *, conv_state=None):
+    """Depthwise causal conv, width W.  xbc: [B, T, C].
+    conv_state: [B, W-1, C] trailing inputs from the previous segment.
+    Returns (y [B, T, C], new_conv_state)."""
+    w = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)               # [B, T+W-1, C]
+    y = sum(full[:, i:i + xbc.shape[1]] * conv_w[i] for i in range(w))
+    y = y + conv_b
+    new_state = full[:, -(w - 1):]
+    return jax.nn.silu(y), new_state
+
+
+def mamba_block(params, x, cfg: ModelConfig, rules: ShardingRules,
+                *, cache=None):
+    """x: [B, T, D].  cache: dict(conv [B, W-1, C], state [B, H, N, P]) for
+    decode; None for full sequence.  Returns (out, new_cache)."""
+    s = cfg.ssm
+    inner, nheads, conv_dim = _dims(cfg)
+    b, t, d = x.shape
+    res = x
+    x = rms_norm(x, params["norm"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("btd,dp->btp", x, params["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [inner, inner + conv_dim], axis=-1)
+    xbc, new_conv = _causal_conv(
+        xbc, params["conv_w"], params["conv_b"],
+        conv_state=None if cache is None else cache["conv"])
+    xs, bs, cs = jnp.split(xbc, [inner, inner + s.n_groups * s.state_dim],
+                           axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,T,H]
+    decay = -jnp.exp(params["A_log"])[None, None] * dt                # [B,T,H]
+
+    heads_per_group = nheads // s.n_groups
+    xh = xs.reshape(b, t, nheads, s.head_dim)
+    bh = jnp.repeat(bs.reshape(b, t, s.n_groups, s.state_dim),
+                    heads_per_group, axis=2)
+    ch = jnp.repeat(cs.reshape(b, t, s.n_groups, s.state_dim),
+                    heads_per_group, axis=2)
+    to_h = lambda z_: z_.transpose(0, 2, 1, 3)                # [B,H,T,*]
+    q = to_h(ch)
+    k = to_h(bh)
+    v = to_h(xh * dt[..., None].astype(xh.dtype))
+    w = decay.transpose(0, 2, 1)[..., None]                   # [B,H,T,1]
+    q = rules.shard(q, "batch", "state_heads", "seq", None)
+    if cache is not None:
+        y, new_state = gla_decode_step(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                       w[:, :, 0], cache["state"],
+                                       include_current=True)
+        y = y[:, :, None, :]
+    else:
+        y, new_state = chunked_gla(q, k, v, w, chunk=min(s.chunk, t),
+                                   include_current=True)
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, inner).astype(x.dtype)
+    y = y + xs * jnp.repeat(params["D"], s.head_dim)[None, None].astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["gnorm"], cfg.norm_eps)
+    out = jnp.einsum("bti,id->btd", y, params["out_proj"])
+    out = rules.shard(out, "batch", "seq", "act_d_model")
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(conv=new_conv, state=new_state)
+    return res + out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    s = cfg.ssm
+    inner, nheads, conv_dim = _dims(cfg)
+    return dict(
+        conv=jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        state=jnp.zeros((batch, nheads, s.state_dim, s.head_dim),
+                        jnp.float32),
+    )

@@ -1,0 +1,514 @@
+"""Model assembler: builds any assigned architecture from its ModelConfig.
+
+Layers are grouped into *stages*: consecutive layers whose per-layer
+descriptor cycle repeats are stacked along a leading 'layers' axis and
+applied with ``jax.lax.scan`` — compile time and HLO size are independent of
+depth (critical for the 126-layer llama3-405b dry-run).  Irregular prefixes/
+suffixes (deepseek's dense first layer, gemma3's trailing local layers)
+become their own stages.
+
+Per-layer descriptor = (attn_kind, ffn_kind):
+  attn_kind: 'global' | 'local' | 'encdec' | 'rwkv' | 'mamba'
+  ffn_kind:  'mlp' | 'moe' | None (rwkv/mamba blocks are self-contained)
+
+zamba2: a single *shared* attention+MLP block (one param set) is invoked
+after every ``shared_attn_every`` mamba layers — passed to the scan body by
+closure, outside the stacked stage params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as MOE
+from repro.models import rwkv6 as R
+from repro.sharding.rules import ShardingRules
+
+Desc = Tuple[str, Optional[str]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    cycle: Tuple[Desc, ...]   # block descriptors in one scan step
+    n: int                    # number of scan steps
+    shared_attn: bool = False  # zamba2: apply the shared block after cycle
+    encoder: bool = False
+
+
+def _layer_descs(cfg: ModelConfig) -> List[Desc]:
+    descs: List[Desc] = []
+    kinds = cfg.layer_kinds()
+    for i, kind in enumerate(kinds):
+        if kind in ("rwkv", "mamba"):
+            descs.append((kind, None))
+        else:
+            ffn = "mlp"
+            if cfg.moe is not None and i >= cfg.moe.dense_first_n:
+                ffn = "moe"
+            attn = "encdec" if cfg.is_encdec else kind
+            descs.append((attn, ffn))
+    return descs
+
+
+def _group_stages(descs: List[Desc], cycle_len: int,
+                  shared_every: int = 0) -> List[Stage]:
+    stages: List[Stage] = []
+    if shared_every:
+        cycle_len = shared_every
+    i = 0
+    n = len(descs)
+    while i < n:
+        # try to extend a full-cycle run
+        cyc = tuple(descs[i:i + cycle_len])
+        runs = 0
+        j = i
+        while j + cycle_len <= n and tuple(descs[j:j + cycle_len]) == cyc:
+            runs += 1
+            j += cycle_len
+        if runs >= 1 and len(cyc) == cycle_len:
+            stages.append(Stage(cyc, runs, shared_attn=bool(shared_every)))
+            i = j
+        else:
+            # remainder: group identical consecutive descriptors
+            d0 = descs[i]
+            j = i
+            while j < n and descs[j] == d0:
+                j += 1
+            stages.append(Stage((d0,), j - i, shared_attn=False))
+            i = j
+    return stages
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply dispatch
+# ---------------------------------------------------------------------------
+
+def _init_block(key, desc: Desc, cfg: ModelConfig, dtype):
+    attn_kind, ffn_kind = desc
+    if attn_kind == "rwkv":
+        return R.init_rwkv_block(key, cfg, dtype)
+    if attn_kind == "mamba":
+        return M.init_mamba_block(key, cfg, dtype)
+    ks = jax.random.split(key, 4)
+    ln1, ln1_s = L.init_rms_norm(cfg.d_model, dtype)
+    ln2, ln2_s = L.init_rms_norm(cfg.d_model, dtype)
+    attn, attn_s = L.init_attention(ks[0], cfg, dtype)
+    params = {"ln1": ln1, "attn": attn, "ln2": ln2}
+    specs = {"ln1": ln1_s, "attn": attn_s, "ln2": ln2_s}
+    if attn_kind == "encdec":
+        lnx, lnx_s = L.init_rms_norm(cfg.d_model, dtype)
+        xattn, xattn_s = L.init_attention(ks[1], cfg, dtype, cross=True)
+        params.update(ln_x=lnx, xattn=xattn)
+        specs.update(ln_x=lnx_s, xattn=xattn_s)
+    if ffn_kind == "moe":
+        m, m_s = MOE.init_moe(ks[2], cfg, dtype)
+        params["moe"] = m
+        specs["moe"] = m_s
+    else:
+        d_ff = cfg.d_ff
+        if cfg.moe is not None and cfg.moe.d_ff_dense:
+            d_ff = cfg.moe.d_ff_dense
+        gated = not cfg.is_encdec           # whisper uses plain GELU MLP
+        m, m_s = L.init_mlp(ks[3], cfg.d_model, d_ff, dtype, gated=gated)
+        params["mlp"] = m
+        specs["mlp"] = m_s
+    if cfg.post_norms:
+        pn1, pn1_s = L.init_rms_norm(cfg.d_model, dtype)
+        pn2, pn2_s = L.init_rms_norm(cfg.d_model, dtype)
+        params.update(post_ln1=pn1, post_ln2=pn2)
+        specs.update(post_ln1=pn1_s, post_ln2=pn2_s)
+    return params, specs
+
+
+def _apply_block(params, desc: Desc, x, cfg: ModelConfig,
+                 rules: ShardingRules, *, positions, cache=None,
+                 decode_pos=None, cross_kv=None, causal=True):
+    """Returns (x, aux, new_cache)."""
+    attn_kind, ffn_kind = desc
+    zero = jnp.zeros((), jnp.float32)
+    if attn_kind == "rwkv":
+        x, nc = R.rwkv_block(params, x, cfg, rules, cache=cache)
+        return x, zero, nc
+    if attn_kind == "mamba":
+        x, nc = M.mamba_block(params, x, cfg, rules, cache=cache)
+        return x, zero, nc
+    # transformer block
+    h = L.rms_norm(x, params["ln1"], cfg.norm_eps)
+    self_cache = None if cache is None else cache.get("self")
+    a, new_self = L.attention(
+        params["attn"], h, positions, rules, cfg,
+        kind="local" if attn_kind == "local" else "global",
+        cache=self_cache, decode_pos=decode_pos, causal=causal,
+        rope=cfg.attn.rope)
+    if cfg.post_norms:
+        a = L.rms_norm(a, params["post_ln1"], cfg.norm_eps)
+    x = x + a
+    new_cache = None
+    if attn_kind == "encdec":
+        hx = L.rms_norm(x, params["ln_x"], cfg.norm_eps)
+        if cache is not None and "ck" in cache:
+            # decode: cached cross K/V
+            xa = _cached_cross_attention(params["xattn"], hx, cache, cfg,
+                                         rules)
+        else:
+            xa, _ = L.attention(params["xattn"], hx, positions, rules, cfg,
+                                cross_kv=cross_kv, causal=False, rope=False)
+        x = x + xa
+    h2 = L.rms_norm(x, params["ln2"], cfg.norm_eps)
+    aux = zero
+    if ffn_kind == "moe":
+        f, aux = MOE.moe_ffn(params["moe"], h2, cfg, rules)
+    else:
+        f = L.mlp(params["mlp"], h2, cfg.act, rules)
+    if cfg.post_norms:
+        f = L.rms_norm(f, params["post_ln2"], cfg.norm_eps)
+    x = x + f
+    if cache is not None:
+        new_cache = dict(cache)
+        if new_self is not None:
+            new_cache["self"] = new_self
+    return x, aux, new_cache
+
+
+def _cached_cross_attention(params, x, cache, cfg: ModelConfig,
+                            rules: ShardingRules):
+    """Decode-time cross attention over precomputed encoder K/V."""
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    qh = jnp.einsum("bsd,dkgh->bskgh", x, params["wq"])
+    if cfg.attn.qkv_bias:
+        qh = qh + params["bq"]
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qh, cache["ck"],
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, cache["cv"])
+    return jnp.einsum("bskgh,kghd->bsd", out, params["wo"])
+
+
+def _init_block_cache(desc: Desc, cfg: ModelConfig, batch: int,
+                      cache_len: int, dtype, *, frames: int = 0):
+    attn_kind, _ = desc
+    if attn_kind == "rwkv":
+        return R.init_rwkv_cache(cfg, batch, dtype)
+    if attn_kind == "mamba":
+        return M.init_mamba_cache(cfg, batch, dtype)
+    kvh, hd = cfg.num_kv_heads, cfg.head_dim
+    rolling = attn_kind == "local" and cfg.attn.window and \
+        cfg.attn.window < cache_len
+    sc = cfg.attn.window if rolling else cache_len
+    cache = {"self": dict(
+        k=jnp.zeros((batch, sc, kvh, hd), dtype),
+        v=jnp.zeros((batch, sc, kvh, hd), dtype))}
+    if attn_kind == "encdec":
+        cache["ck"] = jnp.zeros((batch, frames, kvh, hd), dtype)
+        cache["cv"] = jnp.zeros((batch, frames, kvh, hd), dtype)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+class Model:
+    def __init__(self, cfg: ModelConfig, remat: bool = False,
+                 scan_unroll: int | bool = 1):
+        self.cfg = cfg
+        self.remat = remat
+        # scan_unroll=True fully unrolls layer scans — used ONLY by the
+        # dry-run's cost-accounting compile (cost_analysis counts a while
+        # body once, so the deployable scanned program under-reports FLOPs;
+        # the unrolled twin gives the true totals).
+        self.scan_unroll = scan_unroll
+        descs = _layer_descs(cfg)
+        self.stages = _group_stages(descs, len(cfg.attn.pattern),
+                                    cfg.shared_attn_every)
+        self.encoder_stages: List[Stage] = []
+        if cfg.is_encdec:
+            enc_desc = [("global", "mlp")] * cfg.encoder_layers
+            self.encoder_stages = [
+                dataclasses.replace(s, encoder=True)
+                for s in _group_stages(enc_desc, 1)]
+
+    # -- init ----------------------------------------------------------------
+    def _init_stage(self, key, stage: Stage, dtype):
+        """Stacked params: per cycle position, leaves shaped [n, ...]."""
+        blocks, specs = [], []
+        for j, desc in enumerate(stage.cycle):
+            kj = jax.random.fold_in(key, j)
+            if stage.n == 1:
+                p, s = _init_block(kj, desc, self.cfg, dtype)
+                p = jax.tree_util.tree_map(lambda a: a[None], p)
+            else:
+                keys = jax.random.split(kj, stage.n)
+                p = jax.vmap(
+                    lambda k, d=desc: _init_block(k, d, self.cfg, dtype)[0]
+                )(keys)
+                _, s = _init_block(kj, desc, self.cfg, dtype)
+            s = jax.tree_util.tree_map(
+                lambda ax: ("layers",) + ax, s,
+                is_leaf=lambda x: isinstance(x, tuple) and all(
+                    a is None or isinstance(a, str) for a in x))
+            blocks.append(p)
+            specs.append(s)
+        return blocks, specs
+
+    def init(self, key) -> Any:
+        cfg = self.cfg
+        dtype = L.dtype_of(cfg)
+        keys = jax.random.split(key, 8)
+        emb, emb_s = L.init_embedding(keys[0], cfg, dtype)
+        fn, fn_s = L.init_rms_norm(cfg.d_model, dtype)
+        params = {"embed": emb, "final_norm": fn}
+        self._specs = {"embed": emb_s, "final_norm": fn_s}
+        params["stages"] = []
+        self._specs["stages"] = []
+        for si, stage in enumerate(self.stages):
+            p, s = self._init_stage(jax.random.fold_in(keys[1], si), stage,
+                                    dtype)
+            params["stages"].append(p)
+            self._specs["stages"].append(s)
+        if cfg.shared_attn_every:
+            p, s = _init_block(keys[2], ("global", "mlp"), cfg, dtype)
+            params["shared_attn"] = p
+            self._specs["shared_attn"] = s
+        if cfg.is_encdec:
+            params["enc_stages"] = []
+            self._specs["enc_stages"] = []
+            for si, stage in enumerate(self.encoder_stages):
+                p, s = self._init_stage(jax.random.fold_in(keys[3], si),
+                                        stage, dtype)
+                params["enc_stages"].append(p)
+                self._specs["enc_stages"].append(s)
+            efn, efn_s = L.init_rms_norm(cfg.d_model, dtype)
+            params["enc_final_norm"] = efn
+            self._specs["enc_final_norm"] = efn_s
+            params["dec_pos"] = jax.random.normal(
+                keys[4], (cfg.max_target_positions, cfg.d_model), dtype) * 0.02
+            self._specs["dec_pos"] = ("cache_seq", "d_model")
+        return params
+
+    def param_specs(self):
+        if not hasattr(self, "_specs"):
+            # build specs without materializing params
+            jax.eval_shape(self.init, jax.random.PRNGKey(0))
+        return self._specs
+
+    # -- stage runner ----------------------------------------------------------
+    def _run_stage(self, stage: Stage, stage_params, x, rules, *, positions,
+                   cache=None, decode_pos=None, cross_kv=None, causal=True):
+        cfg = self.cfg
+        shared = getattr(self, "_shared_params", None)
+
+        def body(carry, xs):
+            h, aux = carry
+            blk_params, blk_cache = xs
+            new_caches = []
+            for j, desc in enumerate(stage.cycle):
+                pj = blk_params[j]
+                cj = None if blk_cache is None else blk_cache[j]
+                h, a, nc = _apply_block(
+                    pj, desc, h, cfg, rules, positions=positions,
+                    cache=cj, decode_pos=decode_pos, cross_kv=cross_kv,
+                    causal=causal)
+                aux = aux + a
+                new_caches.append(nc)
+            if stage.shared_attn and shared is not None:
+                h, a, _ = _apply_block(
+                    shared, ("global", "mlp"), h, cfg, rules,
+                    positions=positions, cache=None, causal=causal)
+                aux = aux + a
+            if blk_cache is None:
+                return (h, aux), None
+            return (h, aux), new_caches
+
+        init = (x, jnp.zeros((), jnp.float32))
+        if cache is None:
+            if self.remat:
+                body = jax.checkpoint(body)   # remat each scanned layer group
+            (x, aux), _ = jax.lax.scan(body, init, (stage_params, None),
+                                       length=stage.n,
+                                       unroll=self.scan_unroll)
+            return x, aux, None
+        (x, aux), new_cache = jax.lax.scan(body, init, (stage_params, cache),
+                                           unroll=self.scan_unroll)
+        return x, aux, new_cache
+
+    def _run_stage_decode_shared(self, stage, stage_params, x, rules, *,
+                                 positions, cache, decode_pos):
+        """zamba2 decode: shared attention needs its own KV cache, which is
+        per *invocation* (cycle index), carried in cache[-1]."""
+        cfg = self.cfg
+        shared = self._shared_params
+
+        def body(carry, xs):
+            h, aux = carry
+            blk_params, blk_cache, shared_cache = xs
+            new_caches = []
+            for j, desc in enumerate(stage.cycle):
+                h, a, nc = _apply_block(
+                    blk_params[j], desc, h, cfg, rules, positions=positions,
+                    cache=blk_cache[j], decode_pos=decode_pos)
+                aux = aux + a
+                new_caches.append(nc)
+            h, a, nsc = _apply_block(
+                shared, ("global", "mlp"), h, cfg, rules,
+                positions=positions, cache=shared_cache,
+                decode_pos=decode_pos)
+            return (h, aux + a), (new_caches, nsc)
+
+        init = (x, jnp.zeros((), jnp.float32))
+        blk_cache, shared_cache = cache
+        (x, aux), (new_blk, new_shared) = jax.lax.scan(
+            body, init, (stage_params, blk_cache, shared_cache),
+            unroll=self.scan_unroll)
+        return x, aux, (new_blk, new_shared)
+
+    # -- forward (train / prefill) --------------------------------------------
+    def apply(self, params, batch, rules: ShardingRules):
+        """batch: dict with 'tokens' [B,S] (+ 'positions', 'patch_embeds',
+        'patch_positions', 'frames' as the arch requires).
+        Returns (logits [B,S,Vpad], aux dict)."""
+        cfg = self.cfg
+        self._shared_params = params.get("shared_attn")
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = L.embed(params["embed"], tokens, cfg, rules,
+                    scale=cfg.embed_scale)
+        if cfg.mrope:
+            positions = batch["positions"]          # [B, S, 3]
+        else:
+            positions = batch.get(
+                "positions",
+                jnp.broadcast_to(jnp.arange(s)[None], (b, s)))
+        if "patch_embeds" in batch:                 # VLM stub frontend
+            pe = batch["patch_embeds"].astype(x.dtype)
+            ppos = batch["patch_positions"]
+            x = x.at[jnp.arange(b)[:, None], ppos].set(pe)
+        cross_kv = None
+        if cfg.is_encdec:
+            frames = batch["frames"]                # [B, F, d] stub embeds
+            cross_kv = self._encode(params, frames, rules)
+            x = x + params["dec_pos"][None, :s].astype(x.dtype)
+        x = rules.shard(x, "batch", "seq", "act_d_model")
+        aux = jnp.zeros((), jnp.float32)
+        for stage, sp in zip(self.stages, params["stages"]):
+            x, a, _ = self._run_stage(stage, sp, x, rules,
+                                      positions=positions, cross_kv=cross_kv)
+            aux = aux + a
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.unembed(params["embed"], x, cfg, rules)
+        return logits, {"moe_aux": aux}
+
+    def _encode(self, params, frames, rules):
+        cfg = self.cfg
+        b, f, _ = frames.shape
+        pos_table = L.sinusoidal_embedding(f, cfg.d_model)
+        x = frames + pos_table[None].astype(frames.dtype)
+        x = rules.shard(x, "batch", "seq", "act_d_model")
+        positions = jnp.broadcast_to(jnp.arange(f)[None], (b, f))
+        for stage, sp in zip(self.encoder_stages, params["enc_stages"]):
+            x, _, _ = self._run_stage(stage, sp, x, rules,
+                                      positions=positions, causal=False)
+        return L.rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+    # -- cache ------------------------------------------------------------------
+    def init_cache(self, batch: int, cache_len: int, *, frames: int = 0):
+        cfg = self.cfg
+        dtype = L.dtype_of(cfg)
+        caches = []
+        for stage in self.stages:
+            def one(desc):
+                return _init_block_cache(desc, cfg, batch, cache_len, dtype,
+                                         frames=frames)
+            blk = [jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (stage.n,) + a.shape),
+                one(desc)) for desc in stage.cycle]
+            # strip non-array flags from stacking (rolling handled below)
+            if stage.shared_attn:
+                sc = jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(a[None],
+                                               (stage.n,) + a.shape),
+                    _init_block_cache(("global", "mlp"), cfg, batch,
+                                      cache_len, dtype))
+                caches.append((blk, sc))
+            else:
+                caches.append(blk)
+        return caches
+
+    def cache_logical_specs(self):
+        """Logical-axis tuples mirroring ``init_cache``'s structure."""
+        cfg = self.cfg
+
+        def block_specs(desc):
+            attn_kind, _ = desc
+            if attn_kind == "rwkv":
+                return dict(tmix_x=("layers", "batch", None),
+                            cmix_x=("layers", "batch", None),
+                            state=("layers", "batch", "state_heads",
+                                   None, None))
+            if attn_kind == "mamba":
+                return dict(conv=("layers", "batch", None, None),
+                            state=("layers", "batch", "state_heads",
+                                   None, None))
+            c = {"self": dict(
+                k=("layers", "batch", "cache_seq", "kv_heads", None),
+                v=("layers", "batch", "cache_seq", "kv_heads", None))}
+            if attn_kind == "encdec":
+                c["ck"] = ("layers", "batch", "frames", "kv_heads", None)
+                c["cv"] = ("layers", "batch", "frames", "kv_heads", None)
+            return c
+
+        specs = []
+        for stage in self.stages:
+            blk = [block_specs(desc) for desc in stage.cycle]
+            if stage.shared_attn:
+                specs.append((blk, block_specs(("global", "mlp"))))
+            else:
+                specs.append(blk)
+        return specs
+
+    # -- decode ---------------------------------------------------------------
+    def decode_step(self, params, cache, batch, rules: ShardingRules):
+        """One-token step.  batch: dict(tokens [B,1], pos [B],
+        optional positions [B,1,3] for mrope).
+        Returns (logits [B, Vpad], new_cache)."""
+        cfg = self.cfg
+        self._shared_params = params.get("shared_attn")
+        tokens, pos = batch["tokens"], batch["pos"]
+        b = tokens.shape[0]
+        x = L.embed(params["embed"], tokens, cfg, rules,
+                    scale=cfg.embed_scale)
+        if cfg.mrope:
+            positions = batch["positions"]
+        else:
+            positions = pos[:, None]
+        if cfg.is_encdec:
+            x = x + jnp.take(params["dec_pos"], pos, axis=0)[:, None].astype(
+                x.dtype)
+        aux = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for stage, sp, sc in zip(self.stages, params["stages"], cache):
+            if stage.shared_attn:
+                x, a, nc = self._run_stage_decode_shared(
+                    stage, sp, x, rules, positions=positions, cache=sc,
+                    decode_pos=pos)
+            else:
+                x, a, nc = self._run_stage(stage, sp, x, rules,
+                                           positions=positions, cache=sc,
+                                           decode_pos=pos)
+            aux = aux + a
+            new_caches.append(nc)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.unembed(params["embed"], x, cfg, rules)
+        return logits[:, 0], new_caches
+
+
+def make_model(cfg: ModelConfig, remat: bool = False,
+               scan_unroll: int | bool = 1) -> Model:
+    return Model(cfg, remat=remat, scan_unroll=scan_unroll)

@@ -1,0 +1,117 @@
+"""Mixture-of-Experts FFN built on the paper's filtered-push machinery
+(repro.core.sparse_collectives).
+
+Mapping (DESIGN.md §3): tokens = messages, experts = vertex partitions,
+router = signal, expert FFN = slot, router weights = edge data, capacity =
+the need-list bound |L_ij|.  The dense capacity dispatch is the CSR-analogue
+(position-addressed); under EP sharding XLA lowers the scatter/gather into
+all-to-alls on the 'model' axis — the inter-node pass of the paper.
+
+Supports deepseek-style fine-grained MoE: ``num_shared`` always-on shared
+experts + ``dense_first_n`` leading dense layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse_collectives import (
+    dense_combine, dense_dispatch, topk_routing,
+)
+from repro.models.config import ModelConfig
+from repro.models.layers import _act, init_mlp, mlp
+from repro.sharding.rules import ShardingRules
+
+
+def moe_capacity(num_tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    cap = int(m.capacity_factor * num_tokens * m.top_k / m.num_experts)
+    return max(8, -(-cap // 8) * 8)
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    d, fe = cfg.d_model, m.d_expert
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    std_in, std_out = d ** -0.5, fe ** -0.5
+    params = {
+        "router": jax.random.normal(k1, (d, m.num_experts), jnp.float32) * std_in,
+        "wi_gate": jax.random.normal(k2, (m.num_experts, d, fe), dtype) * std_in,
+        "wi_up": jax.random.normal(k3, (m.num_experts, d, fe), dtype) * std_in,
+        "wo": jax.random.normal(k4, (m.num_experts, fe, d), dtype) * std_out,
+    }
+    specs = {
+        "router": ("d_model", None),
+        "wi_gate": ("experts", "d_model", "expert_ff"),
+        "wi_up": ("experts", "d_model", "expert_ff"),
+        "wo": ("experts", "expert_ff", "d_model"),
+    }
+    if m.num_shared:
+        shared, shared_specs = init_mlp(k5, d, m.num_shared * fe, dtype)
+        params["shared"] = shared
+        specs["shared"] = shared_specs
+    return params, specs
+
+
+def moe_ffn(params, x, cfg: ModelConfig, rules: ShardingRules):
+    """x: [B, S, D] -> (out [B, S, D], aux load-balance loss scalar)."""
+    from repro.models import flags
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    capacity = moe_capacity(t, cfg)
+    xf = x.reshape(t, d)
+    groups = flags.MOE_GROUPS
+    # per-group capacity only makes sense when every group has tokens
+    # (decode steps route a handful of tokens: use the plain path)
+    if groups and ((t * m.top_k) % groups != 0 or t < 8 * groups):
+        groups = None
+
+    router_logits = jnp.einsum(
+        "td,de->te", xf.astype(jnp.float32), params["router"])
+    dispatch, expert_idx, position, weights, group_id = topk_routing(
+        router_logits, m.top_k, capacity,
+        block=flags.MOE_POSITION_BLOCK, groups=groups)
+
+    # load-balance auxiliary loss (Switch-style)
+    probs = jax.nn.softmax(router_logits, axis=-1)           # [T, E]
+    assign = jnp.zeros((t, m.num_experts), jnp.float32).at[
+        jnp.arange(t)[:, None], expert_idx].add(
+        jnp.where(dispatch, 1.0, 0.0))
+    aux = m.num_experts * jnp.mean(
+        jnp.mean(probs, axis=0) * jnp.mean(assign, axis=0))
+
+    # DFO push: scatter tokens into per-expert capacity buffers
+    if groups:
+        buf = dense_dispatch(xf, dispatch, expert_idx, position,
+                             m.num_experts, capacity,
+                             group_id=group_id, groups=groups)
+        buf = rules.shard(buf, "experts", "moe_cap", None, "act_d_model")
+        h = _act(jnp.einsum("egcd,edf->egcf", buf, params["wi_gate"]),
+                 cfg.act) \
+            * jnp.einsum("egcd,edf->egcf", buf, params["wi_up"])
+        h = rules.shard(h, "experts", "moe_cap", None, "expert_ff")
+        out_buf = jnp.einsum("egcf,efd->egcd", h, params["wo"])
+        out_buf = rules.shard(out_buf, "experts", "moe_cap", None,
+                              "act_d_model")
+        out = dense_combine(out_buf, dispatch, expert_idx, position,
+                            weights.astype(out_buf.dtype), t,
+                            group_id=group_id)
+    else:
+        buf = dense_dispatch(xf, dispatch, expert_idx, position,
+                             m.num_experts, capacity)         # [E, C, D]
+        buf = rules.shard(buf, "experts", "moe_cap", "act_d_model")
+        h = _act(jnp.einsum("ecd,edf->ecf", buf, params["wi_gate"]),
+                 cfg.act) \
+            * jnp.einsum("ecd,edf->ecf", buf, params["wi_up"])
+        h = rules.shard(h, "experts", "moe_cap", "expert_ff")
+        out_buf = jnp.einsum("ecf,efd->ecd", h, params["wo"])
+        out_buf = rules.shard(out_buf, "experts", "moe_cap", "act_d_model")
+
+        # DFO pull/combine: gather expert outputs back to token order
+        out = dense_combine(out_buf, dispatch, expert_idx, position,
+                            weights.astype(out_buf.dtype), t)  # [T, D]
+    if m.num_shared:
+        out = out + mlp(params["shared"], x, cfg.act, rules).reshape(t, d)
+    out = out.reshape(b, s, d)
+    return rules.shard(out, "batch", "seq", "act_d_model"), aux

@@ -1,0 +1,184 @@
+"""RWKV6 "Finch" block (arXiv:2404.05892): time-mix with data-dependent
+per-channel decay (dynamic token-shift mixing via LoRA) + squared-ReLU
+channel-mix.  Sequence processing uses the chunked GLA core; decode carries
+(last_x_tmix, last_x_cmix, wkv state) per layer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.linear_attention import chunked_gla, gla_decode_step
+from repro.models.layers import layer_norm, init_layer_norm
+from repro.sharding.rules import ShardingRules
+
+N_MIX = 5   # r, k, v, w, g dynamic mixing streams
+
+
+def init_rwkv_block(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    r = cfg.rwkv
+    h = d // r.head_dim
+    ks = jax.random.split(key, 12)
+    std = d ** -0.5
+    ln1, ln1_s = init_layer_norm(d, dtype)
+    ln2, ln2_s = init_layer_norm(d, dtype)
+    params = {
+        "ln1": ln1, "ln2": ln2,
+        # token-shift mixing coefficients
+        "mu_x": jnp.full((d,), 0.5, dtype),
+        "mu_rkvwg": jnp.full((N_MIX, d), 0.5, dtype),
+        "maa_w1": jax.random.normal(ks[0], (d, N_MIX * r.gate_lora), dtype) * std,
+        "maa_w2": jax.random.normal(ks[1], (N_MIX, r.gate_lora, d), dtype)
+        * r.gate_lora ** -0.5,
+        # decay LoRA
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w1": jax.random.normal(ks[2], (d, r.decay_lora), dtype) * std,
+        "w2": jax.random.normal(ks[3], (r.decay_lora, d), dtype)
+        * r.decay_lora ** -0.5,
+        "u": jax.random.normal(ks[4], (h, r.head_dim), jnp.float32) * 0.1,
+        "wr": jax.random.normal(ks[5], (d, d), dtype) * std,
+        "wk": jax.random.normal(ks[6], (d, d), dtype) * std,
+        "wv": jax.random.normal(ks[7], (d, d), dtype) * std,
+        "wg": jax.random.normal(ks[8], (d, d), dtype) * std,
+        "wo": jax.random.normal(ks[9], (d, d), dtype) * std,
+        "gn_scale": jnp.ones((d,), dtype),
+        "gn_bias": jnp.zeros((d,), dtype),
+        # channel mix
+        "mu_ck": jnp.full((d,), 0.5, dtype),
+        "mu_cr": jnp.full((d,), 0.5, dtype),
+        "wck": jax.random.normal(ks[10], (d, cfg.d_ff), dtype) * std,
+        "wcv": jax.random.normal(ks[11], (cfg.d_ff, d), dtype)
+        * cfg.d_ff ** -0.5,
+        "wcr": jax.random.normal(jax.random.fold_in(key, 99), (d, d), dtype)
+        * std,
+    }
+    specs = {
+        "ln1": ln1_s, "ln2": ln2_s,
+        "mu_x": (None,), "mu_rkvwg": (None, None),
+        "maa_w1": ("d_model", None), "maa_w2": (None, None, "d_model"),
+        "w0": (None,), "w1": ("d_model", None), "w2": (None, "d_model"),
+        "u": ("state_heads", None),
+        "wr": ("d_model", "heads_x_dim"), "wk": ("d_model", "heads_x_dim"),
+        "wv": ("d_model", "heads_x_dim"), "wg": ("d_model", "heads_x_dim"),
+        "wo": ("heads_x_dim", "d_model"),
+        "gn_scale": (None,), "gn_bias": (None,),
+        "mu_ck": (None,), "mu_cr": (None,),
+        "wck": ("d_model", "d_ff"), "wcv": ("d_ff", "d_model"),
+        "wcr": ("d_model", "heads_x_dim"),
+    }
+    return params, specs
+
+
+def _group_norm(y, scale, bias, h, eps=64e-5):
+    """Per-head LayerNorm over head_dim (RWKV's GroupNorm(h))."""
+    b, t, d = y.shape
+    yf = y.reshape(b, t, h, d // h).astype(jnp.float32)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yf = (yf - mu) * jax.lax.rsqrt(var + eps)
+    return (yf.reshape(b, t, d) * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(y.dtype)
+
+
+def _dynamic_mix(params, x, xx):
+    """ddlerp: per-stream dynamic token-shift mixing (RWKV6's novelty)."""
+    base = x + xx * params["mu_x"]
+    lora = jnp.tanh(jnp.einsum("btd,dr->btr", base, params["maa_w1"]))
+    b, t, _ = lora.shape
+    lora = lora.reshape(b, t, N_MIX, -1)
+    dyn = jnp.einsum("btnr,nrd->btnd", lora, params["maa_w2"])
+    mixed = x[:, :, None, :] + xx[:, :, None, :] * (
+        params["mu_rkvwg"][None, None] + dyn)
+    return [mixed[:, :, i, :] for i in range(N_MIX)]
+
+
+def rwkv_time_mix(params, x, cfg: ModelConfig, rules: ShardingRules,
+                  *, last_x=None, state=None, single_step=False):
+    """x: [B, T, D].  Returns (out, new_last_x, new_state)."""
+    r = cfg.rwkv
+    b, t, d = x.shape
+    h = d // r.head_dim
+    if last_x is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([last_x[:, None, :], x[:, :-1]], axis=1) \
+            if t > 1 else last_x[:, None, :]
+    xx = prev - x
+    xr, xk, xv, xw, xg = _dynamic_mix(params, x, xx)
+    rq = jnp.einsum("btd,de->bte", xr, params["wr"])
+    k = jnp.einsum("btd,de->bte", xk, params["wk"])
+    v = jnp.einsum("btd,de->bte", xv, params["wv"])
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, params["wg"]))
+    w = -jnp.exp(params["w0"]
+                 + jnp.einsum("btd,dr->btr",
+                              jnp.tanh(jnp.einsum("btd,dr->btr", xw,
+                                                  params["w1"])),
+                              params["w2"]).astype(jnp.float32))
+    to_heads = lambda z: z.reshape(b, t, h, r.head_dim).transpose(0, 2, 1, 3)
+    rq_h, k_h, v_h = to_heads(rq), to_heads(k), to_heads(v)
+    w_h = w.reshape(b, t, h, r.head_dim).transpose(0, 2, 1, 3)
+    rq_h = rules.shard(rq_h, "batch", "state_heads", "seq", None)
+    if single_step:
+        y, new_state = gla_decode_step(
+            rq_h[:, :, 0], k_h[:, :, 0], v_h[:, :, 0], w_h[:, :, 0], state,
+            include_current=False, bonus=params["u"])
+        y = y[:, :, None, :].astype(x.dtype)
+    else:
+        y, new_state = chunked_gla(rq_h, k_h, v_h, w_h, chunk=min(r.chunk, t),
+                                   state=state, include_current=False,
+                                   bonus=params["u"])
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, d)
+    y = _group_norm(y, params["gn_scale"], params["gn_bias"], h) * g
+    out = jnp.einsum("btd,de->bte", y, params["wo"])
+    return rules.shard(out, "batch", "seq", "act_d_model"), x[:, -1], new_state
+
+
+def rwkv_channel_mix(params, x, rules: ShardingRules, *, last_x=None):
+    b, t, d = x.shape
+    if last_x is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([last_x[:, None, :], x[:, :-1]], axis=1) \
+            if t > 1 else last_x[:, None, :]
+    xx = prev - x
+    xk = x + xx * params["mu_ck"]
+    xr = x + xx * params["mu_cr"]
+    kk = jnp.einsum("btd,df->btf", xk, params["wck"])
+    kk = jnp.square(jax.nn.relu(kk))
+    kk = rules.shard(kk, "batch", "seq", "d_ff")
+    vv = jnp.einsum("btf,fd->btd", kk, params["wcv"])
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, params["wcr"]))
+    return rules.shard(rr * vv, "batch", "seq", "act_d_model"), x[:, -1]
+
+
+def rwkv_block(params, x, cfg: ModelConfig, rules: ShardingRules,
+               *, cache=None):
+    """Full RWKV6 layer.  cache: dict(tmix_x [B,D], cmix_x [B,D],
+    state [B,H,Dk,Dk]) for decode, or None for full-sequence."""
+    if cache is None:
+        a, _, _ = rwkv_time_mix(params, layer_norm(x, params["ln1"]), cfg,
+                                rules)
+        x = x + a
+        m, _ = rwkv_channel_mix(params, layer_norm(x, params["ln2"]), rules)
+        return x + m, None
+    a, t_x, new_state = rwkv_time_mix(
+        params, layer_norm(x, params["ln1"]), cfg, rules,
+        last_x=cache["tmix_x"], state=cache["state"], single_step=True)
+    x = x + a
+    m, c_x = rwkv_channel_mix(params, layer_norm(x, params["ln2"]), rules,
+                              last_x=cache["cmix_x"])
+    new_cache = dict(tmix_x=t_x, cmix_x=c_x, state=new_state)
+    return x + m, new_cache
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    h = d // cfg.rwkv.head_dim
+    return dict(
+        tmix_x=jnp.zeros((batch, d), dtype),
+        cmix_x=jnp.zeros((batch, d), dtype),
+        state=jnp.zeros((batch, h, cfg.rwkv.head_dim, cfg.rwkv.head_dim),
+                        jnp.float32),
+    )

@@ -1,0 +1,4 @@
+from repro.runtime.elastic import plan_elastic_mesh, elastic_restart  # noqa: F401
+from repro.runtime.straggler import (  # noqa: F401
+    DeferralPolicy, deferred_merge, plan_backup_shards, simulate_round,
+)

@@ -1,0 +1,83 @@
+"""Elastic scaling: re-plan the mesh from the live device set and reshard
+the latest checkpoint onto it.
+
+Design for 1000+ nodes: the TP ('model') axis is sacred — losing a chip
+inside a model-parallel group invalidates the whole group — so elasticity
+shrinks the DP/FSDP ('data' x 'pod') product and idles the remainder of a
+partial group.  Checkpoints are stored logically unsharded (content-
+addressed blocks, repro.ckpt), so resharding is a device_put under the new
+rules: no all-to-all shuffling of old shards, the block store is the
+exchange medium.  This mirrors the paper's recovery contract: progress lost
+is at most one step, capacity lost is only the failed group.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple
+    axis_names: tuple
+    used_devices: int
+    idle_devices: int
+    notes: tuple
+
+
+def plan_elastic_mesh(available: int, *, model: int = 16,
+                      pods: Optional[int] = None) -> MeshPlan:
+    """Largest ('data', 'model') (or ('pod','data','model')) mesh with the
+    model axis intact that fits in ``available`` devices."""
+    if available < model:
+        raise ValueError(
+            f"cannot keep a {model}-wide model axis with only {available} "
+            f"devices")
+    notes = []
+    if pods and pods > 1:
+        data = available // (model * pods)
+        if data < 1:
+            notes.append(f"pod axis collapsed: {available} devices cannot "
+                         f"fill {pods} pods")
+            pods = 1
+            data = available // model
+        shape = (pods, data, model)
+        names = ("pod", "data", "model")
+    else:
+        data = available // model
+        shape = (data, model)
+        names = ("data", "model")
+    used = int(np.prod(shape))
+    if used < available:
+        notes.append(f"{available - used} devices idle (partial DP group)")
+    return MeshPlan(shape, names, used, available - used, tuple(notes))
+
+
+def make_mesh_from_plan(plan: MeshPlan, devices: Optional[Sequence] = None):
+    devs = list(devices if devices is not None else jax.devices())
+    sel = np.asarray(devs[:plan.used_devices]).reshape(plan.shape)
+    from jax.sharding import Mesh
+    return Mesh(sel, plan.axis_names)
+
+
+def elastic_restart(ckpt_dir: str, template_state, *, available: int,
+                    model_axis: int, rules_factory, devices=None):
+    """Restore the latest checkpoint and place it on a freshly planned mesh.
+
+    rules_factory(mesh) -> (ShardingRules, state_shardings pytree).
+    Returns (step, state_on_new_mesh, mesh, plan)."""
+    from repro.ckpt import CheckpointManager
+    mgr = CheckpointManager(ckpt_dir)
+    got = mgr.restore_into(template_state)
+    if got is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    step, state = got
+    plan = plan_elastic_mesh(available, model=model_axis)
+    mesh = make_mesh_from_plan(plan, devices)
+    rules, state_sh = rules_factory(mesh)
+    state = jax.tree_util.tree_map(
+        lambda arr, sh: jax.device_put(arr, sh), state, state_sh)
+    return step, state, mesh, plan

@@ -1,0 +1,3 @@
+from repro.serve.engine import (  # noqa: F401
+    make_serve_step, make_prefill_and_decode, greedy_sample, ServeSession,
+)

@@ -1,0 +1,92 @@
+"""Serving: batched one-token decode steps with KV/state caches + sampling.
+
+``make_serve_step`` is what the decode_* / long_* dry-run cells lower: one
+new token for every sequence in the batch against a cache of the assigned
+seq_len.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import padded_vocab
+from repro.models.model import Model
+from repro.sharding.rules import ShardingRules
+
+
+def greedy_sample(logits, vocab_size: int):
+    pv = logits.shape[-1]
+    if pv != vocab_size:
+        logits = jnp.where(jnp.arange(pv) >= vocab_size, -1e30, logits)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def topk_sample(logits, key, vocab_size: int, k: int = 40,
+                temperature: float = 1.0):
+    pv = logits.shape[-1]
+    logits = jnp.where(jnp.arange(pv) >= vocab_size, -1e30, logits)
+    vals, idx = jax.lax.top_k(logits / jnp.maximum(temperature, 1e-6), k)
+    choice = jax.random.categorical(key, vals)
+    return jnp.take_along_axis(idx, choice[..., None], -1)[..., 0].astype(
+        jnp.int32)
+
+
+def make_serve_step(model: Model, rules: ShardingRules):
+    """step(params, cache, batch) -> (next_token [B], new_cache); batch has
+    tokens [B,1], pos [B] (+ positions for mrope archs)."""
+    cfg = model.cfg
+
+    def step(params, cache, batch):
+        logits, new_cache = model.decode_step(params, cache, batch, rules)
+        nxt = greedy_sample(logits, cfg.vocab_size)
+        return nxt, new_cache
+
+    return step
+
+
+def make_prefill_and_decode(model: Model, rules: ShardingRules):
+    """Returns (prefill, decode) closures for the CPU serving example."""
+    cfg = model.cfg
+
+    def prefill(params, batch):
+        logits, _ = model.apply(params, batch, rules)
+        return greedy_sample(logits[:, -1], cfg.vocab_size)
+
+    return prefill, make_serve_step(model, rules)
+
+
+class ServeSession:
+    """Tiny batched serving loop for the example driver (CPU scale):
+    prefill via teacher-forced forward, then greedy decode with the cache."""
+
+    def __init__(self, model: Model, params, rules: ShardingRules,
+                 batch: int, cache_len: int):
+        self.model, self.params, self.rules = model, params, rules
+        frames = model.cfg.max_source_positions if model.cfg.is_encdec else 0
+        self.cache = model.init_cache(batch, cache_len, frames=frames)
+        self.step_fn = jax.jit(make_serve_step(model, rules))
+        self.batch = batch
+
+    def generate(self, prompts: np.ndarray, steps: int) -> np.ndarray:
+        """prompts: [B, P] int32.  Feeds prompt tokens one by one (cache
+        warm-up), then samples ``steps`` tokens greedily."""
+        b, p = prompts.shape
+        out = []
+        tok = jnp.asarray(prompts[:, :1])
+        for i in range(p + steps - 1):
+            batch = {"tokens": tok,
+                     "pos": jnp.full((b,), i, jnp.int32)}
+            if self.model.cfg.mrope:
+                pos3 = jnp.full((b, 1, 3), i, jnp.int32)
+                batch["positions"] = pos3
+            nxt, self.cache = self.step_fn(self.params, self.cache, batch)
+            if i + 1 < p:
+                tok = jnp.asarray(prompts[:, i + 1:i + 2])
+            else:
+                tok = nxt[:, None]
+                out.append(np.asarray(nxt))
+        return np.stack(out, axis=1)

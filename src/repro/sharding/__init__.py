@@ -1,0 +1,2 @@
+from repro.sharding.rules import ShardingRules, make_rules  # noqa: F401
+from repro.sharding.strategy import plan_for  # noqa: F401

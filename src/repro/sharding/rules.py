@@ -1,0 +1,102 @@
+"""Logical-axis sharding rules (MaxText-style logical -> mesh mapping).
+
+Model code annotates arrays with *logical* axis names; a ``ShardingRules``
+object maps those to mesh axes.  The same model code therefore runs
+unsharded on one CPU device (rules = no-op) and fully sharded on the
+production mesh — only the rules object changes.
+
+Logical axes used across the stack:
+  batch, seq, d_model, heads, kv_heads, head_dim, d_ff, vocab, experts,
+  expert_ff, state, conv, layers (scan-stacked leading axis), cache_seq
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Optional[Mesh]
+    table: Dict[str, AxisVal]
+
+    def spec(self, *logical: Optional[str]) -> P:
+        """PartitionSpec for a tuple of logical axis names (None = unsharded)."""
+        return P(*(self.table.get(a) if a is not None else None
+                   for a in logical))
+
+    def sharding(self, *logical: Optional[str]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def shard(self, x, *logical: Optional[str]):
+        """Apply a sharding constraint (no-op without a mesh)."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(*logical)))
+
+    def tree_shardings(self, logical_tree: Any):
+        """Map a pytree of logical-axis tuples to NamedShardings (or specs
+        when mesh is None)."""
+        def one(axes):
+            if self.mesh is None:
+                return self.spec(*axes)
+            return NamedSharding(self.mesh, self.spec(*axes))
+        return jax.tree_util.tree_map(
+            one, logical_tree,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                a is None or isinstance(a, str) for a in x))
+
+    def axis_size(self, mesh_axis: AxisVal) -> int:
+        if self.mesh is None or mesh_axis is None:
+            return 1
+        if isinstance(mesh_axis, tuple):
+            n = 1
+            for a in mesh_axis:
+                n *= self.mesh.shape[a]
+            return n
+        return self.mesh.shape[mesh_axis]
+
+    def logical_size(self, logical: str) -> int:
+        return self.axis_size(self.table.get(logical))
+
+
+def make_rules(mesh: Optional[Mesh] = None, **overrides: AxisVal) -> ShardingRules:
+    """Default logical->mesh table for a ('data','model') or
+    ('pod','data','model') mesh; keyword overrides adjust per-arch/shape."""
+    if mesh is None:
+        return ShardingRules(None, dict(overrides))
+    axis_names = mesh.axis_names
+    dp: AxisVal = tuple(a for a in ("pod", "data") if a in axis_names)
+    if len(dp) == 1:
+        dp = dp[0]
+    tp = "model" if "model" in axis_names else None
+    table: Dict[str, AxisVal] = {
+        "batch": dp,
+        "seq": None,
+        "d_model": dp,        # FSDP: weight d_model axis sharded over data
+        "act_d_model": None,  # activation feature axis (unsharded by default)
+        "heads": tp,
+        "kv_heads": tp,
+        "q_group": None,
+        "moe_cap": None,
+        "head_dim": None,
+        "d_ff": tp,
+        "vocab": tp,
+        "experts": tp,
+        "expert_ff": None,
+        "state": None,
+        "conv": None,
+        "layers": None,
+        "cache_seq": None,
+        "frames": None,
+    }
+    table.update(overrides)
+    return ShardingRules(mesh, table)

@@ -1,0 +1,4 @@
+from repro.train.optimizer import adamw_init, adamw_update, OptConfig  # noqa: F401
+from repro.train.loop import (  # noqa: F401
+    TrainState, loss_fn, make_train_step, init_train_state,
+)

@@ -1,0 +1,116 @@
+"""Train-step factory: loss, grad, AdamW update, remat, grad accumulation.
+
+``make_train_step`` returns a pure function
+    step(state, batch) -> (state, metrics)
+suitable for jit with explicit in/out shardings (the dry-run path) or plain
+jit on one device (smoke tests / the CPU example driver).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import padded_vocab
+from repro.models.model import Model
+from repro.sharding.rules import ShardingRules
+from repro.train.optimizer import (
+    OptConfig, adamw_init, adamw_update, master_to_params,
+)
+
+TrainState = dict   # {"params": ..., "opt": {mu, nu, master}, "step": i32}
+
+
+def init_train_state(model: Model, key) -> TrainState:
+    params = model.init(key)
+    return {"params": params, "opt": adamw_init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def loss_fn(model: Model, params, batch, rules: ShardingRules,
+            aux_coef: float = 0.01):
+    cfg = model.cfg
+    logits, aux = model.apply(params, batch, rules)       # [B, S, Vpad] f32
+    targets = batch["targets"]
+    pv = padded_vocab(cfg)
+    # mask padded vocab rows out of the softmax
+    if pv != cfg.vocab_size:
+        pad_mask = jnp.arange(pv) >= cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None], -1e30, logits)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    total = ce + aux_coef * aux["moe_aux"]
+    return total, {"ce": ce, "moe_aux": aux["moe_aux"]}
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig,
+                    rules: ShardingRules, *, microbatches: int = 1,
+                    aux_coef: float = 0.01):
+    cfg = model.cfg
+    dtype = jnp.dtype(cfg.dtype)
+
+    def grads_of(params, batch):
+        g_fn = jax.value_and_grad(
+            lambda p, b: loss_fn(model, p, b, rules, aux_coef), has_aux=True)
+        (loss, metrics), grads = g_fn(params, batch)
+        return loss, metrics, grads
+
+    def step(state: TrainState, batch) -> tuple:
+        params = state["params"]
+        if microbatches == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            # gradient accumulation: scan over the leading micro split;
+            # compute of microbatch g+1 overlaps the reduce of g in XLA's
+            # schedule (paper §4.4 pipelining analogue).
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def body(acc, mb):
+                loss, metrics, grads = grads_of(params, mb)
+                acc = jax.tree_util.tree_map(jnp.add, acc,
+                                             (loss, metrics, grads))
+                return acc, None
+
+            zeros = jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, s.dtype),
+                jax.eval_shape(lambda: grads_of(
+                    params, jax.tree_util.tree_map(lambda x: x[0], micro))))
+            (loss, metrics, grads), _ = jax.lax.scan(body, zeros, micro)
+            loss = loss / microbatches
+            metrics = jax.tree_util.tree_map(lambda m: m / microbatches,
+                                             metrics)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+
+        new_opt, opt_metrics = adamw_update(grads, state["opt"], opt_cfg,
+                                            state["step"])
+        new_params = master_to_params(new_opt, dtype)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return ({"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1}, metrics)
+
+    return step
+
+
+def make_eval_step(model: Model, rules: ShardingRules):
+    def step(params, batch):
+        loss, metrics = loss_fn(model, params, batch, rules)
+        return dict(metrics, loss=loss)
+    return step
+
+
+def make_prefill_step(model: Model, rules: ShardingRules):
+    """Inference prefill: forward pass producing last-position logits.
+    (Cache filling is exercised separately by decode; see EXPERIMENTS.md.)"""
+    def step(params, batch):
+        logits, _ = model.apply(params, batch, rules)
+        return logits[:, -1]
+    return step

@@ -1,0 +1,93 @@
+"""AdamW with fp32 master weights, built from scratch (no optax offline).
+
+Optimizer state mirrors the param pytree: {mu, nu, master}, all fp32,
+sharded identically to the parameters (FSDP shards optimizer state too —
+ZeRO-style).  Params themselves stay in the model compute dtype (bf16).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_at(cfg: OptConfig, step):
+    """Linear warmup + cosine decay (warmup starts at lr/warmup_steps, not
+    zero, so step 0 makes progress)."""
+    step = step.astype(jnp.float32)
+    warm = (step + 1.0) / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params: Any) -> dict:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree_util.tree_map(f32, params),
+        "nu": jax.tree_util.tree_map(f32, params),
+        "master": jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32), params),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(grads: Any, opt_state: dict, cfg: OptConfig, step):
+    """Returns (new_params_in_compute_dtype_fn input dtype, new_opt_state,
+    metrics).  ``step`` is 0-based."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_at(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    def upd(g, mu, nu, master):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        step_dir = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+        decay = cfg.weight_decay if master.ndim >= 2 else 0.0   # no wd on norms
+        master = master - lr * (step_dir + decay * master)
+        return mu, nu, master
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_mu = treedef.flatten_up_to(opt_state["mu"])
+    flat_nu = treedef.flatten_up_to(opt_state["nu"])
+    flat_ma = treedef.flatten_up_to(opt_state["master"])
+    out = [upd(g, m, n, ma) for g, m, n, ma
+           in zip(flat_g, flat_mu, flat_nu, flat_ma)]
+    new_opt = {
+        "mu": jax.tree_util.tree_unflatten(treedef, [o[0] for o in out]),
+        "nu": jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]),
+        "master": jax.tree_util.tree_unflatten(treedef, [o[2] for o in out]),
+    }
+    return new_opt, dict(grad_norm=gnorm, lr=lr)
+
+
+def master_to_params(opt_state: dict, dtype) -> Any:
+    return jax.tree_util.tree_map(lambda m: m.astype(dtype),
+                                  opt_state["master"])

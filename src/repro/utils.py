@@ -1,0 +1,82 @@
+"""Shared small utilities (no jax device state at import time)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterable
+
+import jax
+import numpy as np
+
+
+def register_static_dataclass(cls, data_fields: Iterable[str], static_fields: Iterable[str]):
+    """Register a dataclass as a pytree with explicit data/static split."""
+    jax.tree_util.register_dataclass(
+        cls, data_fields=list(data_fields), meta_fields=list(static_fields)
+    )
+    return cls
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of all array leaves in a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for leaf in leaves:
+        if hasattr(leaf, "nbytes"):
+            total += leaf.nbytes
+        elif hasattr(leaf, "dtype") and hasattr(leaf, "shape"):
+            total += int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_params(tree: Any) -> int:
+    """Total number of elements of all array leaves in a pytree."""
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree)
+               if hasattr(l, "shape"))
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return ceil_div(a, b) * b
+
+
+class Timer:
+    """Wall-clock timer; ``with Timer() as t: ...; t.seconds``."""
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.seconds = time.perf_counter() - self.t0
+        return False
+
+
+def time_fn(fn: Callable[[], Any], warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time of fn() in seconds, blocking on jax arrays."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+@dataclasses.dataclass
+class HardwareSpec:
+    """Roofline constants for the target chip (TPU v5e by default)."""
+    name: str = "tpu_v5e"
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9               # bytes/s per chip
+    ici_bw: float = 50e9                # bytes/s per ICI link
+    ici_links: int = 4                  # usable links per chip (2D torus slice)
+    hbm_bytes: int = 16 * 2**30         # HBM capacity
+    vmem_bytes: int = 128 * 2**20       # VMEM capacity
+
+
+V5E = HardwareSpec()

@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests: reduced configs, one forward + one train
+step + one decode step on CPU, asserting shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_arch_names, get_config, get_reduced
+from repro.configs.shapes import ShapeSpec, concrete_batch
+from repro.models.layers import padded_vocab
+from repro.models.model import make_model
+from repro.sharding.rules import make_rules
+from repro.train.loop import init_train_state, make_train_step
+from repro.train.optimizer import OptConfig
+
+RULES = make_rules(None)
+SMALL = ShapeSpec("small_train", "train", 32, 2)
+
+
+@pytest.mark.parametrize("arch", all_arch_names())
+def test_forward_shapes_no_nans(arch):
+    cfg = get_reduced(arch)
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = concrete_batch(cfg, SMALL)
+    logits, aux = jax.jit(lambda p, b: model.apply(p, b, RULES))(params, batch)
+    seq = SMALL.seq_len // 4 if cfg.is_encdec else SMALL.seq_len
+    assert logits.shape == (SMALL.global_batch, seq, padded_vocab(cfg))
+    assert bool(jnp.isfinite(logits).all()), "NaN/inf in logits"
+
+
+@pytest.mark.parametrize("arch", all_arch_names())
+def test_one_train_step(arch):
+    cfg = get_reduced(arch)
+    model = make_model(cfg, remat=True)
+    state = init_train_state(model, jax.random.PRNGKey(1))
+    step = jax.jit(make_train_step(model, OptConfig(lr=1e-3, warmup_steps=1),
+                                   RULES))
+    batch = concrete_batch(cfg, SMALL, seed=2)
+    state2, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert int(state2["step"]) == 1
+    # params actually changed
+    def l2diff(a, b):
+        return sum(float(jnp.abs(x - y).sum()) for x, y in zip(
+            jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)))
+    assert l2diff(state["params"], state2["params"]) > 0
+
+
+@pytest.mark.parametrize("arch", all_arch_names())
+def test_decode_step(arch):
+    cfg = get_reduced(arch)
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b, cache_len = 2, 16
+    frames = cfg.max_source_positions if cfg.is_encdec else 0
+    cache = model.init_cache(b, cache_len, frames=frames)
+    step = jax.jit(lambda p, c, bt: model.decode_step(p, c, bt, RULES))
+    batch = {"tokens": jnp.array([[1], [2]], jnp.int32),
+             "pos": jnp.array([0, 3], jnp.int32)}
+    if cfg.mrope:
+        batch["positions"] = jnp.zeros((b, 1, 3), jnp.int32)
+    logits, cache = step(params, cache, batch)
+    assert logits.shape == (b, padded_vocab(cfg))
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ["gemma2-9b", "yi-6b", "rwkv6-1.6b",
+                                  "zamba2-1.2b", "mixtral-8x22b"])
+def test_decode_matches_teacher_forcing(arch):
+    """Incremental decode with cache must reproduce the teacher-forced
+    forward logits position by position."""
+    cfg = get_reduced(arch)
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    b, s = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(4), (b, s), 0,
+                              cfg.vocab_size)
+    full_logits, _ = model.apply(params, {"tokens": toks}, RULES)
+
+    cache = model.init_cache(b, s)
+    step = jax.jit(lambda p, c, bt: model.decode_step(p, c, bt, RULES))
+    for i in range(s):
+        batch = {"tokens": toks[:, i:i + 1],
+                 "pos": jnp.full((b,), i, jnp.int32)}
+        logits_i, cache = step(params, cache, batch)
+        np.testing.assert_allclose(
+            np.asarray(logits_i, np.float32),
+            np.asarray(full_logits[:, i], np.float32),
+            rtol=2e-2, atol=2e-2,
+            err_msg=f"{arch} decode diverges from forward at position {i}")
+
+
+@pytest.mark.parametrize("arch", all_arch_names())
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned dimensions (never
+    instantiated here — dry-run exercises them via ShapeDtypeStructs)."""
+    cfg = get_config(arch)
+    expected = {
+        "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected, f"{arch}: {got} != {expected}"
+    if arch == "mixtral-8x22b":
+        assert cfg.moe.num_experts == 8 and cfg.moe.top_k == 2
+    if arch == "deepseek-moe-16b":
+        assert (cfg.moe.num_experts, cfg.moe.top_k,
+                cfg.moe.num_shared) == (64, 6, 2)
+    if arch == "zamba2-1.2b":
+        assert cfg.ssm.state_dim == 64
+    if arch == "whisper-medium":
+        assert cfg.encoder_layers == 24

@@ -1,0 +1,135 @@
+"""Hypothesis property tests for the two-level partition invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import build_dist_graph, build_formats, make_spec
+from repro.core.partition import (
+    balanced_boundaries, gather_vertex_values, scatter_vertex_values,
+)
+from repro.data.graphs import GraphData
+
+
+def graphs(max_n=80, max_e=400):
+    @st.composite
+    def _g(draw):
+        n = draw(st.integers(2, max_n))
+        e = draw(st.integers(1, max_e))
+        seed = draw(st.integers(0, 2**16))
+        rng = np.random.default_rng(seed)
+        src = rng.integers(0, n, e)
+        dst = rng.integers(0, n, e)
+        data = rng.random(e).astype(np.float32)
+        return GraphData(n, src, dst, data)
+    return _g()
+
+
+@settings(max_examples=25, deadline=None)
+@given(graphs(), st.integers(2, 6), st.integers(1, 16))
+def test_every_edge_in_exactly_one_chunk(g, p, batch_size):
+    p = min(p, g.num_vertices)
+    spec = make_spec(g, num_partitions=p, batch_size=batch_size)
+    dg = build_dist_graph(g, spec)
+    # total valid edges equals |E|
+    assert int(np.asarray(dg.edge_valid).sum()) == g.num_edges
+    # chunk_ptr covers exactly the per-partition edge counts, in order
+    chunk_edges = np.asarray(dg.chunk_edges)
+    assert chunk_edges.sum() == g.num_edges
+    # reconstruct the multiset of (src, dst) from the partitioned arrays
+    bounds = np.asarray(spec.boundaries)
+    esl = np.asarray(dg.edge_src_local)
+    esp = np.asarray(dg.edge_src_part)
+    edl = np.asarray(dg.edge_dst_local)
+    ev = np.asarray(dg.edge_valid)
+    rec = []
+    for q in range(p):
+        m = ev[q]
+        rec.append(np.stack([bounds[esp[q][m]] + esl[q][m],
+                             bounds[q] + edl[q][m]], 1))
+    rec = np.concatenate(rec)
+    orig = np.stack([g.src, g.dst], 1)
+    assert sorted(map(tuple, rec.tolist())) == sorted(map(tuple, orig.tolist()))
+
+
+@settings(max_examples=25, deadline=None)
+@given(graphs(), st.integers(2, 6))
+def test_need_bitmap_complete_and_tight(g, p):
+    """Filtering never drops a needed message and never keeps a useless one
+    (paper §4.3: need[p][q][v] <=> v has an out-edge into partition q)."""
+    p = min(p, g.num_vertices)
+    spec = make_spec(g, num_partitions=p, batch_size=8)
+    dg = build_dist_graph(g, spec)
+    need = np.asarray(dg.need)
+    bounds = np.asarray(spec.boundaries)
+    expected = np.zeros_like(need)
+    sp = spec.owner_of(g.src)
+    dp = spec.owner_of(g.dst)
+    sl = g.src - bounds[sp]
+    expected[sp, dp, sl] = True
+    assert (need == expected).all()
+    counts = np.asarray(dg.need_counts)
+    assert (counts == expected.sum(axis=2)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 100), st.integers(1, 8), st.floats(0.0, 20.0))
+def test_boundaries_cover_and_monotone(n, p, alpha):
+    p = min(p, n)
+    rng = np.random.default_rng(n * p)
+    out_deg = rng.integers(0, 10, n)
+    in_deg = rng.integers(0, 10, n)
+    b = balanced_boundaries(out_deg, in_deg, p, alpha)
+    assert b[0] == 0 and b[-1] == n
+    assert (np.diff(b) >= 1).all()
+    assert len(b) == p + 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(graphs(), st.integers(2, 5))
+def test_scatter_gather_roundtrip(g, p):
+    p = min(p, g.num_vertices)
+    spec = make_spec(g, num_partitions=p, batch_size=4)
+    vals = np.random.default_rng(0).random(g.num_vertices).astype(np.float32)
+    padded = scatter_vertex_values(spec, vals)
+    back = gather_vertex_values(spec, padded)
+    np.testing.assert_array_equal(vals, back)
+
+
+@settings(max_examples=20, deadline=None)
+@given(graphs(), st.integers(2, 5), st.integers(1, 8))
+def test_dcsr_reconstructs_edges(g, p, batch_size):
+    """DCSR entries (src, start, count) must tile each chunk exactly."""
+    p = min(p, g.num_vertices)
+    spec = make_spec(g, num_partitions=p, batch_size=batch_size)
+    dg = build_dist_graph(g, spec)
+    fm = build_formats(dg)
+    esl = np.asarray(dg.edge_src_local)
+    dsrc = np.asarray(fm.dcsr_src)
+    dstart = np.asarray(fm.dcsr_edge_start)
+    dcount = np.asarray(fm.dcsr_edge_count)
+    dvalid = np.asarray(fm.dcsr_valid)
+    for q in range(p):
+        covered = 0
+        for i in range(dsrc.shape[1]):
+            if not dvalid[q, i]:
+                continue
+            s, c = dstart[q, i], dcount[q, i]
+            # every edge in the run has the announced source
+            assert (esl[q, s:s + c] == dsrc[q, i]).all()
+            covered += c
+        assert covered == int(np.asarray(dg.edge_valid)[q].sum())
+
+
+@settings(max_examples=15, deadline=None)
+@given(graphs(), st.integers(2, 4))
+def test_csr_inflate_ratio_rule(g, p):
+    p = min(p, g.num_vertices)
+    spec = make_spec(g, num_partitions=p, batch_size=8)
+    dg = build_dist_graph(g, spec)
+    fm = build_formats(dg, inflate_ratio=32)
+    has_csr = np.asarray(fm.has_csr)
+    edges = np.asarray(dg.chunk_edges).astype(float)
+    sizes = spec.partition_sizes().astype(float)
+    v_src = np.broadcast_to(sizes[None, :, None], has_csr.shape)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        ratio = np.where(edges > 0, v_src / np.maximum(edges, 1), np.inf)
+    np.testing.assert_array_equal(has_csr, (ratio <= 32) & (edges > 0))

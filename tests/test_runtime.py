@@ -1,0 +1,114 @@
+"""Elasticity + straggler-mitigation tests (runtime layer)."""
+import numpy as np
+import pytest
+
+from repro.runtime.elastic import plan_elastic_mesh
+from repro.runtime.straggler import (
+    DeferralPolicy, plan_backup_shards, simulate_round,
+    simulate_training_with_stragglers,
+)
+
+
+def test_elastic_plan_shrinks_data_axis():
+    p = plan_elastic_mesh(512, model=16, pods=2)
+    assert p.shape == (2, 16, 16) and p.idle_devices == 0
+    # lose 64 chips: 448 = 2 pods x 14 x 16
+    p = plan_elastic_mesh(448, model=16, pods=2)
+    assert p.shape == (2, 14, 16) and p.idle_devices == 0
+    # lose 65: one partial DP group idles
+    p = plan_elastic_mesh(447, model=16, pods=2)
+    assert p.shape == (2, 13, 16)
+    assert p.idle_devices == 447 - 2 * 13 * 16
+    assert any("idle" in n for n in p.notes)
+
+
+def test_elastic_plan_never_breaks_model_axis():
+    p = plan_elastic_mesh(100, model=16)
+    assert p.shape == (6, 16)
+    with pytest.raises(ValueError):
+        plan_elastic_mesh(10, model=16)
+
+
+def test_deferral_preserves_monoid_fixpoint():
+    """Deferring a slow peer's messages one round must not change BFS."""
+    import subprocess, sys, os
+    code = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import make_spec, build_dist_graph, build_formats, Engine
+from repro.core import algorithms as alg
+from repro.data.graphs import rmat_graph
+from repro.runtime.straggler import deferred_merge
+
+g = rmat_graph(7, 8, seed=2, weighted=True)
+spec = make_spec(g, num_partitions=4, batch_size=8)
+dg = build_dist_graph(g, spec)
+eng = Engine(dg, build_formats(dg))
+lv_ref, _ = alg.bfs(eng, 0)
+
+# manual BFS loop where partition 2's messages arrive one round late
+inf = jnp.float32(np.finfo(np.float32).max)
+gid = eng.global_id
+state = eng.init_state(level=jnp.where(gid == 0, 0.0, inf))
+active = (gid == 0) & eng.graph.vertex_valid
+deferred = None
+for it in range(200):
+    # phase 1-2 by hand: messages from all partitions
+    # (we reuse process_edges but inject deferral by re-activating the
+    #  deferred sources next round — sound because MIN is idempotent)
+    state, active, upd, _ = eng.process_edges(
+        state,
+        signal_fn=lambda s, gid: s["level"] + 1.0,
+        slot_fn=lambda m, d: m,
+        monoid=alg.MIN,
+        apply_fn=lambda s, agg, has, gid: (
+            {"level": jnp.minimum(s["level"], agg)},
+            has & (agg < s["level"]),
+            (agg < s["level"]).astype(jnp.float32)),
+        active=active)
+    # defer partition 2's newly-active set by one round
+    mask2 = jnp.zeros_like(active).at[2].set(active[2])
+    held = mask2
+    active = active & ~mask2
+    if deferred is not None:
+        active = active | deferred
+    deferred = held
+    if float(upd) == 0 and not bool(jnp.any(active)):
+        break
+from repro.core.partition import gather_vertex_values
+lv = gather_vertex_values(spec, np.asarray(state["level"]))
+np.testing.assert_allclose(np.where(lv < 1e37, lv, -1),
+                           np.where(lv_ref < 1e37, lv_ref, -1))
+print("DEFERRAL_OK")
+"""
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=900,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert "DEFERRAL_OK" in r.stdout, (r.stdout[-500:], r.stderr[-2000:])
+
+
+def test_simulate_round_deadline():
+    lat = np.array([1.0, 1.1, 0.9, 1.0, 10.0])
+    deadline, arrived, m_def, m_all = simulate_round(lat, DeferralPolicy())
+    assert not arrived[-1] and arrived[:4].all()
+    assert m_def < m_all
+
+
+def test_simulate_round_min_peers_floor():
+    lat = np.array([1.0, 5.0, 5.0, 5.0])
+    pol = DeferralPolicy(deadline_factor=0.1, min_peers=0.75)
+    deadline, arrived, _, _ = simulate_round(lat, pol)
+    assert arrived.sum() >= int(np.ceil(0.75 * 4))
+
+
+def test_backup_shards_pick_slowest():
+    times = np.array([1.0, 9.0, 2.0, 8.0])
+    assert set(plan_backup_shards(times, 2)) == {1, 3}
+
+
+def test_straggler_simulation_shows_speedup():
+    out = simulate_training_with_stragglers(
+        np.ones(16), DeferralPolicy(), rounds=200)
+    assert out["mean_speedup"] > 1.0
+    assert 0.0 < out["deferral_rate"] < 0.5

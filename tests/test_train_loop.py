@@ -1,0 +1,118 @@
+"""Training substrate tests: optimizer math, loss descent, accumulation
+equivalence, checkpoint-resume."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.configs.shapes import ShapeSpec
+from repro.data.tokens import TokenPipeline
+from repro.models.model import make_model
+from repro.sharding.rules import make_rules
+from repro.train.loop import init_train_state, make_train_step
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update, lr_at
+
+RULES = make_rules(None)
+
+
+def test_adamw_matches_numpy_reference():
+    """One-parameter AdamW against a hand-rolled numpy implementation."""
+    cfg = OptConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                    grad_clip=1e9, warmup_steps=0, total_steps=10**9)
+    w = jnp.asarray([[2.0, -1.0]])
+    opt = adamw_init({"w": w})
+    m = np.zeros((1, 2)); v = np.zeros((1, 2)); wm = np.array([[2.0, -1.0]])
+    g_np = np.array([[0.5, -0.25]])
+    for step in range(5):
+        opt, _ = adamw_update({"w": jnp.asarray(g_np, jnp.float32)}, opt,
+                              cfg, jnp.asarray(step))
+        lr = float(lr_at(cfg, jnp.asarray(step)))
+        m = 0.9 * m + 0.1 * g_np
+        v = 0.99 * v + 0.01 * g_np**2
+        mhat = m / (1 - 0.9 ** (step + 1))
+        vhat = v / (1 - 0.99 ** (step + 1))
+        wm = wm - lr * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(np.asarray(opt["master"]["w"]), wm,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_weight_decay_skips_1d_params():
+    cfg = OptConfig(lr=0.1, weight_decay=0.5, grad_clip=1e9,
+                    warmup_steps=0)
+    params = {"w": jnp.ones((2, 2)), "scale": jnp.ones((2,))}
+    opt = adamw_init(params)
+    zero_g = jax.tree_util.tree_map(jnp.zeros_like, params)
+    opt, _ = adamw_update(zero_g, opt, cfg, jnp.asarray(0))
+    assert float(jnp.abs(opt["master"]["scale"] - 1.0).max()) == 0.0
+    assert float(jnp.abs(opt["master"]["w"] - 1.0).max()) > 0.0  # decayed
+
+
+def test_loss_decreases_on_learnable_data():
+    cfg = get_reduced("yi-6b")
+    model = make_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(
+        model, OptConfig(lr=3e-3, warmup_steps=5, total_steps=100), RULES))
+    pipe = TokenPipeline(cfg.vocab_size, 16, 8, seed=1)
+    losses = []
+    for i in range(30):
+        toks, tgt = pipe.batch_at(i)
+        state, metrics = step(state, {"tokens": jnp.asarray(toks),
+                                      "targets": jnp.asarray(tgt)})
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.2, losses[::6]
+
+
+def test_grad_accumulation_equivalent():
+    cfg = get_reduced("yi-6b")
+    model = make_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(2))
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=0)
+    s1 = jax.jit(make_train_step(model, opt_cfg, RULES, microbatches=1))
+    s2 = jax.jit(make_train_step(model, opt_cfg, RULES, microbatches=2))
+    pipe = TokenPipeline(cfg.vocab_size, 16, 8, seed=3)
+    toks, tgt = pipe.batch_at(0)
+    batch = {"tokens": jnp.asarray(toks), "targets": jnp.asarray(tgt)}
+    st1, m1 = s1(dict(state), batch)
+    st2, m2 = s2(dict(state), batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    # resulting parameters agree to accumulation-order tolerance
+    for a, b in zip(jax.tree_util.tree_leaves(st1["params"]),
+                    jax.tree_util.tree_leaves(st2["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-2, atol=5e-3)
+
+
+def test_checkpoint_resume_training(tmp_path):
+    """Restart from the block store resumes identically (paper §3.2
+    contract applied to the train loop)."""
+    from repro.ckpt import CheckpointManager
+    cfg = get_reduced("yi-6b")
+    model = make_model(cfg)
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=0)
+    step = jax.jit(make_train_step(model, opt_cfg, RULES))
+    pipe = TokenPipeline(cfg.vocab_size, 16, 8, seed=4)
+
+    state = init_train_state(model, jax.random.PRNGKey(5))
+    mgr = CheckpointManager(str(tmp_path))
+    for i in range(3):
+        toks, tgt = pipe.batch_at(i)
+        state, _ = step(state, {"tokens": jnp.asarray(toks),
+                                "targets": jnp.asarray(tgt)})
+    mgr.save(jax.tree_util.tree_map(np.asarray, state), step=3)
+    toks, tgt = pipe.batch_at(3)
+    state4, m4 = step(state, {"tokens": jnp.asarray(toks),
+                              "targets": jnp.asarray(tgt)})
+
+    # "crash"; restore and redo step 3 — deterministic data pipeline means
+    # the same batch is replayed
+    template = jax.tree_util.tree_map(np.asarray, state)
+    got_step, restored = mgr.restore_into(template)
+    assert got_step == 3
+    restored = jax.tree_util.tree_map(jnp.asarray, restored)
+    state4b, m4b = step(restored, {"tokens": jnp.asarray(toks),
+                                   "targets": jnp.asarray(tgt)})
+    np.testing.assert_allclose(float(m4["loss"]), float(m4b["loss"]),
+                               rtol=1e-5)
