@@ -15,7 +15,13 @@ from repro.core import algorithms as alg  # noqa: E402
 from repro.data.graphs import rmat_graph  # noqa: E402
 
 
-def build_engine(g, p, batch_size=None, config=EngineConfig()):
+def build_engine(g, p, batch_size=None, config=EngineConfig(),
+                 backend=None):
+    """backend overrides ``config.compute_backend`` ("segment" |
+    "block_csr") so benchmark drivers can sweep both compute paths."""
+    import dataclasses
+    if backend is not None:
+        config = dataclasses.replace(config, compute_backend=backend)
     spec = make_spec(g, num_partitions=p, batch_size=batch_size)
     dg = build_dist_graph(g, spec)
     return Engine(dg, build_formats(dg), config)

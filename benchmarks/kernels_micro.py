@@ -27,8 +27,38 @@ def main() -> list[str]:
     y = np.asarray(ops.spmv(blocks, x, tile=tile))
     err = np.abs(y[:n] - ref.ref_spmv_from_edges(src, dst, data, x, n)).max()
     dens = blocks["tiles"].size / max(e, 1)
-    rows.append(csv_row("kernel/csr_spmv_256v_4096e", t,
+    mode = "interp" if ops.default_interpret() else "compiled"
+    rows.append(csv_row(f"kernel/csr_spmv_256v_4096e[{mode}]", t,
                         f"err={err:.2e};tile_overhead={dens:.1f}x"))
+
+    # selective monoid combine (the engine's chunk-scheduled phase 4):
+    # all tiles live vs ~half the source blocks active
+    from repro.kernels.csr_spmv import build_tile_struct
+    slot_row, slot_col, rp, eslot = build_tile_struct(
+        dst // tile, src // tile, n // tile, n // tile)
+    s_cnt = slot_row.shape[0]
+    tv = np.zeros((s_cnt, tile, tile), np.float32)
+    np.add.at(tv, (eslot, dst % tile, src % tile), data)
+    tc = np.zeros((s_cnt, tile, tile), np.float32)
+    np.add.at(tc, (eslot, dst % tile, src % tile), 1.0)
+    mt = max(1, int((rp[1:] - rp[:-1]).max()))
+    from repro.kernels.csr_spmv import compact_live_tiles
+    for frac, tag in ((1.0, "dense"), (0.5, "half")):
+        col_live = rng.random(n // tile) < frac
+        live = col_live[slot_col]
+        idx, col_rt, cnt = compact_live_tiles(slot_row, slot_col, rp, live,
+                                              n // tile)
+        mask = np.repeat(col_live, tile).astype(np.float32)
+        args = (jnp.asarray(rp), jnp.asarray(idx), jnp.asarray(col_rt),
+                jnp.asarray(cnt, jnp.int32), jnp.asarray(tv), None,
+                jnp.asarray(tc), jnp.asarray(x * mask), jnp.asarray(mask))
+        run = lambda: ops.block_csr_combine(
+            *args, mode="add", tile=tile, max_tiles_per_row=mt)
+        _, t = timed(run)
+        val, hc = run()
+        live_edges = float(np.asarray(hc).sum())
+        rows.append(csv_row(f"kernel/csr_combine_{tag}[{mode}]", t,
+                            f"live_edges={live_edges:.0f}"))
 
     # flash attention
     q = jax.random.normal(jax.random.PRNGKey(1), (4, 256, 64), jnp.bfloat16)

@@ -1,12 +1,19 @@
 """DFOGraph core: two-level column-oriented partitioning, adaptive CSR/DCSR,
 filtered push message passing, signal/slot engine (the paper's contribution).
+
+Layering (DESIGN.md §3): ``phases`` holds the four ProcessEdges phase
+implementations on one partition's local view; ``executor`` composes them
+into the LOCAL and SHARD_MAP executors; ``engine`` is the public signal/slot
+API on top.
 """
 from repro.core.partition import (  # noqa: F401
     TwoLevelSpec, DistGraph, make_spec, build_dist_graph,
     scatter_vertex_values, gather_vertex_values, choose_batch_size,
+    row_block_batch_map,
 )
 from repro.core.formats import (  # noqa: F401
-    ChunkFormats, build_formats, storage_summary,
+    BlockTiles, BlockTilesHost, ChunkFormats, build_block_tiles,
+    build_formats, storage_summary,
 )
 from repro.core.engine import (  # noqa: F401
     ADD, MIN, MAX, Engine, EngineConfig, Monoid, accumulate_counters,

@@ -9,17 +9,25 @@ ProcessEdges runs the paper's four phases:
   4. processing          — ``slot`` contributions along edges are combined per
                            destination vertex and ``apply`` updates vertex state.
 
+The phase implementations live in :mod:`repro.core.phases`; the two
+executors that compose them live in :mod:`repro.core.executor`:
+  * ``LOCAL``     — one device; the partition axis is a leading array axis;
+    "network" traffic is accounted by counters (what *would* cross the wire).
+  * ``SHARD_MAP`` — the partition axis is a mesh axis; the inter-node pass is
+    a real ``lax.all_to_all`` on the interconnect.
+They differ only in how the exchange is realized and counters are reduced.
+
 TPU adaptation of the slot guarantee: the C++ system serializes slot calls
 per destination vertex (so no atomics are needed).  Here ``slot``
 contributions are reduced with a user-chosen **associative + commutative
 monoid** (add/min/max — all four paper algorithms fit), the data-race-free
 equivalent on a parallel machine.  See DESIGN.md §2.
 
-Two executors share the phase logic:
-  * ``LOCAL``     — one device; the partition axis is a leading array axis;
-    "network" traffic is accounted by counters (what *would* cross the wire).
-  * ``SHARD_MAP`` — the partition axis is a mesh axis; the inter-node pass is
-    a real ``lax.all_to_all`` on the interconnect.
+Phase 4 runs on a configurable compute backend
+(``EngineConfig.compute_backend``): the flat ``"segment"`` reference, or
+``"block_csr"`` — the Pallas block-CSR kernel over per-(source partition,
+destination batch) tiles that zero-skips chunks which received no messages
+(selective computation, §4.1/§4.4, realized on the compute path).
 
 Counters use float32: per-iteration magnitudes in our experiments stay far
 below 2**24; benchmark drivers accumulate across iterations in Python floats.
@@ -27,6 +35,7 @@ below 2**24; benchmark drivers accumulate across iterations in Python floats.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Dict
 
 import jax
@@ -34,8 +43,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.formats import ChunkFormats, runtime_choice_cost, read_bytes_model
-from repro.core.partition import DistGraph, TwoLevelSpec
+from repro.core import executor as _executor
+from repro.core.formats import ChunkFormats, build_block_tiles
+from repro.core.partition import DistGraph
+from repro.core.phases import batch_touched
 
 State = Dict[str, jnp.ndarray]      # name -> [P, V] stacked vertex arrays
 
@@ -72,6 +83,8 @@ class EngineConfig:
     msg_bytes: int = 4                     # payload bytes per message value
     enable_adaptive_formats: bool = True   # §4.1 runtime CSR/DCSR choice
     account_io: bool = True                # maintain modeled I/O counters
+    compute_backend: str = "segment"       # "segment" | "block_csr"
+    block_tile: int = 8                    # T for the block_csr backend
 
 
 COUNTER_KEYS = (
@@ -93,62 +106,13 @@ def accumulate_counters(acc: dict, new: dict) -> dict:
 
 
 # ---------------------------------------------------------------------------
-# Phase logic on one destination partition's local arrays (no leading axis)
-# ---------------------------------------------------------------------------
-
-def _phase_process(esp, esl, edl, edata, evalid, recv_msg, recv_mask,
-                   slot_fn, monoid, v_max):
-    """Phase 4: slot along edges + monoid combine per destination vertex.
-
-    esp/esl/edl/edata/evalid: per-edge arrays [E].
-    recv_msg/recv_mask: [P, V] messages (and presence) from each source part.
-    Returns (agg [V], has_msg [V], edges_touched scalar).
-    """
-    p_cnt = recv_msg.shape[0]
-    flat_msg = recv_msg.reshape(p_cnt * v_max)
-    flat_mask = recv_mask.reshape(p_cnt * v_max)
-    gidx = esp.astype(jnp.int32) * v_max + esl.astype(jnp.int32)
-    mv = jnp.take(flat_msg, gidx, mode="clip")               # [E]
-    em = jnp.take(flat_mask, gidx, mode="clip") & evalid     # [E]
-
-    contrib = slot_fn(mv, edata)                             # [E]
-    contrib = jnp.where(em, contrib, monoid.identity)
-    agg = monoid.segment(contrib, edl.astype(jnp.int32), v_max)
-    has = jax.ops.segment_max(em.astype(jnp.int32),
-                              edl.astype(jnp.int32), v_max) > 0
-    return agg, has, jnp.sum(em, dtype=jnp.float32)
-
-
-def _phase_dispatch(dsrc, dpart, dbatch, dvalid, recv_mask, v_max, b_cnt):
-    """Phase 3 accounting via the dispatching graph (DCSR entries).
-
-    Returns (chunk_active [P, B] — chunk has >=1 present source — and the
-    number of dispatched (message, batch) deliveries)."""
-    p_cnt = recv_mask.shape[0]
-    flat_mask = recv_mask.reshape(p_cnt * v_max)
-    gidx = dpart.astype(jnp.int32) * v_max + dsrc.astype(jnp.int32)
-    present = jnp.take(flat_mask, gidx, mode="clip") & dvalid  # [S]
-    cid = dpart.astype(jnp.int32) * b_cnt + dbatch.astype(jnp.int32)
-    chunk_active = jax.ops.segment_max(
-        present.astype(jnp.int32), cid, p_cnt * b_cnt).reshape(p_cnt, b_cnt) > 0
-    return chunk_active, jnp.sum(present, dtype=jnp.float32)
-
-
-def _batch_touched(mask, batch_size):
-    """Number of vertices in batches containing >=1 set bit (I/O model:
-    vertex data is loaded per batch, paper §4.4)."""
-    pad = (-mask.shape[-1]) % batch_size
-    m = jnp.pad(mask, [(0, 0)] * (mask.ndim - 1) + [(0, pad)])
-    batch_any = m.reshape(*m.shape[:-1], -1, batch_size).any(axis=-1)
-    return jnp.sum(batch_any, dtype=jnp.float32) * batch_size
-
-
-# ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
 
 class Engine:
     """Executes signal/slot programs over a two-level-partitioned graph."""
+
+    counter_keys = COUNTER_KEYS
 
     def __init__(self, graph: DistGraph, fmts: ChunkFormats,
                  config: EngineConfig = EngineConfig(),
@@ -165,6 +129,14 @@ class Engine:
             gid[p] = bounds[p] + np.arange(spec.v_max)
         self.global_id = jnp.asarray(gid)           # [P, V]
         self._distributed = mesh is not None
+        # block_csr backend state (built lazily on first use)
+        self._block = None
+        self._block_host = None
+        self._block_garrs = None
+        self._block_vals_cache: dict = {}
+        self._probe_cache: dict = {}
+        self._pe_cache: dict = {}
+        self._warned_slot_fallback = False
         if self._distributed:
             self._shard = NamedSharding(mesh, P(axis))
             put = lambda x: jax.device_put(x, self._shard)
@@ -194,6 +166,45 @@ class Engine:
             state = {k: jax.device_put(v, self._shard) for k, v in state.items()}
         return state
 
+    # -- block_csr backend plumbing ----------------------------------------
+    def _ensure_block(self):
+        if self._block is None:
+            self._block, self._block_host = build_block_tiles(
+                self.graph, tile=self.config.block_tile)
+            if self._distributed:
+                self._block_garrs = jax.device_put(self._block, self._shard)
+
+    def _block_slot_values(self, slot_fn, monoid):
+        """Probe + lower (slot_fn, monoid) to value tiles; returns
+        (mode, a_const, device arrays) or None for segment fallback."""
+        self._ensure_block()
+        pkey = _executor.slot_probe_key(slot_fn, monoid)
+        if pkey is not None and pkey in self._probe_cache:
+            probe = self._probe_cache[pkey]
+        else:
+            probe = _executor.probe_slot_affine(slot_fn, monoid,
+                                                self._block_host)
+            if pkey is not None:
+                self._probe_cache[pkey] = probe
+        if probe is None:
+            if not self._warned_slot_fallback:
+                warnings.warn(
+                    "compute_backend='block_csr' requires slot(m, d) affine "
+                    "in m (constant slope for min/max); falling back to the "
+                    "segment backend for this slot function.")
+                self._warned_slot_fallback = True
+            return None
+        key, mode, a_const, a, b = probe
+        if key not in self._block_vals_cache:
+            arrays_np = _executor.build_value_tiles(
+                self._block_host, monoid, mode, a, b)
+            arrays = {k: jnp.asarray(v) for k, v in arrays_np.items()}
+            if self._distributed:
+                arrays = {k: jax.device_put(v, self._shard)
+                          for k, v in arrays.items()}
+            self._block_vals_cache[key] = arrays
+        return mode, a_const, self._block_vals_cache[key]
+
     # -- ProcessVertices ----------------------------------------------------
     def process_vertices(self, state: State,
                          work_fn: Callable[[State, jnp.ndarray], tuple],
@@ -217,7 +228,7 @@ class Engine:
             if cfg.account_io:
                 arrays_bytes = sum(np.dtype(v.dtype).itemsize
                                    for v in state.values())
-                touched = _batch_touched(amask, spec.batch_size)
+                touched = batch_touched(amask, spec.batch_size)
                 counters["vertex_read_bytes"] = (
                     touched * arrays_bytes + amask.size / 8.0)
                 counters["vertex_write_bytes"] = touched * arrays_bytes
@@ -240,8 +251,8 @@ class Engine:
                     None if active is None else P(axis), P(axis), P(axis))
         out_specs = (jax.tree_util.tree_map(lambda _: P(axis), state),
                      P(), {k: P() for k in COUNTER_KEYS})
-        fn = jax.jit(jax.shard_map(inner, mesh=mesh, in_specs=in_specs,
-                                   out_specs=out_specs))
+        fn = jax.jit(_executor.shard_map_compat(
+            inner, mesh=mesh, in_specs=in_specs, out_specs=out_specs))
         return fn(state, active, self._garrs["vertex_valid"],
                   self._garrs["global_id"])
 
@@ -261,188 +272,42 @@ class Engine:
         ``updates``/``ret`` take effect only where a message arrived
         (has_msg); combine with ProcessVertices for unconditional updates.
         Returns (new_state, new_active, total_ret, counters)."""
+        backend = self.config.compute_backend
+        if backend not in ("segment", "block_csr"):
+            raise ValueError(f"unknown compute_backend: {backend!r}")
+        mode_meta, vals = None, None
+        if backend == "block_csr":
+            lowered = self._block_slot_values(slot_fn, monoid)
+            if lowered is None:
+                backend = "segment"
+            else:
+                mode, a_const, vals = lowered
+                mode_meta = (mode, a_const)
+        # Cache the built (jitted) executor per algorithm: fresh lambdas
+        # each iteration share code identity, so the step traces once per
+        # algorithm instead of once per ProcessEdges call.
+        keys = tuple(_executor.fn_code_key(f)
+                     for f in (signal_fn, slot_fn, apply_fn))
+        cache_key = None
+        if all(k is not None for k in keys):
+            cache_key = keys + (monoid.name, backend, mode_meta,
+                                active is not None)
+        fn = self._pe_cache.get(cache_key) if cache_key is not None else None
         if not self._distributed:
-            fn = self._local_pe(signal_fn, slot_fn, monoid, apply_fn)
-            return fn(state, active, self.graph, self.fmts, self.global_id)
-        fn = self._sharded_pe(signal_fn, slot_fn, monoid, apply_fn,
-                              active is not None)
-        return fn(state, active, self._garrs)
-
-    # ---------- single-device (stacked) implementation ----------
-    def _local_pe(self, signal_fn, slot_fn, monoid, apply_fn):
-        cfg = self.config
-        spec: TwoLevelSpec = self.graph.spec
-        p_cnt, v_max, b_cnt = (spec.num_partitions, spec.v_max,
-                               spec.num_batches)
-
-        @jax.jit
-        def step(state, active, g, fmts, global_id):
-            counters = zero_counters()
-            amask = g.vertex_valid if active is None else (active & g.vertex_valid)
-            # Phase 1: generate
-            msg = signal_fn(state, global_id)                        # [P, V]
-            m_p = jnp.sum(amask, axis=1, dtype=jnp.float32)          # [P]
-            counters["msgs_generated"] = jnp.sum(m_p)
-            counters["msg_disk_bytes"] = jnp.sum(m_p) * (cfg.msg_bytes + 4)
-
-            # Phase 2: filter + pass
-            base = jnp.broadcast_to(amask[:, None, :], (p_cnt, p_cnt, v_max))
-            need_counts = g.need_counts.astype(jnp.float32)
-            if cfg.enable_filtering:
-                filtered = amask[:, None, :] & g.need
-                skip = need_counts >= (cfg.filter_skip_threshold
-                                       * m_p[:, None])
-                sendmask = jnp.where(skip[:, :, None], base, filtered)
-            else:
-                sendmask = base
-            off_diag = ~jnp.eye(p_cnt, dtype=bool)[:, :, None]
-            counters["msgs_sent"] = jnp.sum(sendmask, dtype=jnp.float32)
-            counters["msgs_sent_nofilter"] = jnp.sum(base, dtype=jnp.float32)
-            counters["net_bytes"] = jnp.sum(
-                sendmask & off_diag, dtype=jnp.float32) * (cfg.msg_bytes + 4)
-            counters["net_bytes_nofilter"] = jnp.sum(
-                base & off_diag, dtype=jnp.float32) * (cfg.msg_bytes + 4)
-            recv_msg = jnp.where(sendmask, msg[:, None, :], 0).transpose(1, 0, 2)
-            recv_mask = sendmask.transpose(1, 0, 2)                   # [q, p, v]
-
-            # Phase 3: dispatch
-            chunk_active, dispatched = jax.vmap(
-                lambda ds, dp, db, dv, rm: _phase_dispatch(
-                    ds, dp, db, dv, rm, v_max, b_cnt))(
-                fmts.dcsr_src, fmts.dcsr_part, fmts.dcsr_batch,
-                fmts.dcsr_valid, recv_mask)
-            counters["msgs_dispatched"] = jnp.sum(dispatched)
-            counters["chunks_read"] = jnp.sum(chunk_active, dtype=jnp.float32)
-            if cfg.enable_adaptive_formats:
-                msgs_from = jnp.sum(recv_mask, axis=2).astype(jnp.int32)
-                use_csr, seek = runtime_choice_cost(fmts, spec, msgs_from)
-                counters["seek_cost"] = jnp.sum(
-                    jnp.where(chunk_active, seek, 0.0), dtype=jnp.float32)
-                counters["edge_read_bytes"] = read_bytes_model(
-                    fmts, use_csr, chunk_active).astype(jnp.float32)
-            else:
-                counters["edge_read_bytes"] = jnp.sum(jnp.where(
-                    chunk_active, fmts.csr_bytes, 0.0))
-
-            # Phase 4: process
-            agg, has, touched = jax.vmap(
-                lambda a, b, c, d, e, rm, rk: _phase_process(
-                    a, b, c, d, e, rm, rk, slot_fn, monoid, v_max))(
-                g.edge_src_part, g.edge_src_local, g.edge_dst_local,
-                g.edge_data, g.edge_valid, recv_msg, recv_mask)
-            counters["edges_touched"] = jnp.sum(touched)
-
-            updates, new_active, ret = apply_fn(state, agg, has, global_id)
-            new_state = dict(state)
-            upd_mask = has & g.vertex_valid
-            for k, v in updates.items():
-                new_state[k] = jnp.where(upd_mask, v, state[k])
-            new_active = new_active & g.vertex_valid
-            total = jnp.sum(jnp.where(upd_mask, ret, 0).astype(jnp.float32))
-            if cfg.account_io:
-                arrays_bytes = sum(np.dtype(v.dtype).itemsize
-                                   for v in state.values())
-                touched_v = _batch_touched(upd_mask, spec.batch_size)
-                counters["vertex_read_bytes"] = touched_v * arrays_bytes
-                counters["vertex_write_bytes"] = touched_v * arrays_bytes
-            return new_state, new_active, total, counters
-
-        return step
-
-    # ---------- shard_map (distributed) implementation ----------
-    def _sharded_pe(self, signal_fn, slot_fn, monoid, apply_fn, has_active):
-        cfg = self.config
-        spec: TwoLevelSpec = self.graph.spec
-        p_cnt, v_max, b_cnt = (spec.num_partitions, spec.v_max,
-                               spec.num_batches)
-        mesh, axis = self.mesh, self.axis
-
-        def step(state, active, garrs):
-            counters = zero_counters()
-            vertex_valid = garrs["vertex_valid"]               # [1, V]
-            amask = vertex_valid if active is None else (active & vertex_valid)
-            msg = signal_fn(state, garrs["global_id"])         # [1, V]
-            m_p = jnp.sum(amask, dtype=jnp.float32)
-            counters["msgs_generated"] = m_p
-            counters["msg_disk_bytes"] = m_p * (cfg.msg_bytes + 4)
-
-            need = garrs["need"][0]                            # [P, V]
-            base = jnp.broadcast_to(amask[0][None, :], (p_cnt, v_max))
-            my = jax.lax.axis_index(axis)
-            if cfg.enable_filtering:
-                filtered = amask[0][None, :] & need
-                my_need_counts = garrs["need_counts"][0].astype(jnp.float32)
-                skip = my_need_counts >= cfg.filter_skip_threshold * m_p
-                sendmask = jnp.where(skip[:, None], base, filtered)
-            else:
-                sendmask = base
-            not_self = (jnp.arange(p_cnt) != my)[:, None]
-            counters["msgs_sent"] = jnp.sum(sendmask, dtype=jnp.float32)
-            counters["msgs_sent_nofilter"] = jnp.sum(base, dtype=jnp.float32)
-            counters["net_bytes"] = jnp.sum(
-                sendmask & not_self, dtype=jnp.float32) * (cfg.msg_bytes + 4)
-            counters["net_bytes_nofilter"] = jnp.sum(
-                base & not_self, dtype=jnp.float32) * (cfg.msg_bytes + 4)
-
-            send_msg = jnp.where(sendmask, msg[0][None, :], 0)   # [P, V]
-            # Real interconnect exchange (paper phase 2 on the wire).
-            recv_msg = jax.lax.all_to_all(send_msg, axis, 0, 0, tiled=True)
-            recv_mask = jax.lax.all_to_all(
-                sendmask.astype(jnp.int8), axis, 0, 0, tiled=True) > 0
-
-            chunk_active, dispatched = _phase_dispatch(
-                garrs["dcsr_src"][0], garrs["dcsr_part"][0],
-                garrs["dcsr_batch"][0], garrs["dcsr_valid"][0],
-                recv_mask, v_max, b_cnt)
-            counters["msgs_dispatched"] = dispatched
-            counters["chunks_read"] = jnp.sum(chunk_active, dtype=jnp.float32)
-            if cfg.enable_adaptive_formats:
-                # Paper §4.1 runtime CSR/DCSR choice on this shard's chunks.
-                dptr = garrs["dcsr_ptr"][0]                    # [P, B+1]
-                nnz = (dptr[:, 1:] - dptr[:, :-1]).astype(jnp.float32)
-                v_src = jnp.asarray(spec.partition_sizes(),
-                                    jnp.float32)[:, None]      # [P, 1]
-                m = jnp.sum(recv_mask, axis=1).astype(jnp.float32)[:, None]
-                cost_dcsr = 2.0 * nnz
-                cost_csr = jnp.minimum(self.fmts.gamma * m, v_src)
-                use_csr = garrs["has_csr"][0] & (cost_csr < cost_dcsr)
-                seek = jnp.where(use_csr, cost_csr, cost_dcsr)
-                counters["seek_cost"] = jnp.sum(
-                    jnp.where(chunk_active, seek, 0.0), dtype=jnp.float32)
-                per_chunk = jnp.where(use_csr, garrs["csr_bytes"][0],
-                                      garrs["dcsr_bytes"][0])
-                counters["edge_read_bytes"] = jnp.sum(
-                    jnp.where(chunk_active, per_chunk, 0.0), dtype=jnp.float32)
-
-            agg, has, touched = _phase_process(
-                garrs["edge_src_part"][0], garrs["edge_src_local"][0],
-                garrs["edge_dst_local"][0], garrs["edge_data"][0],
-                garrs["edge_valid"][0], recv_msg, recv_mask,
-                slot_fn, monoid, v_max)
-            counters["edges_touched"] = touched
-            agg, has = agg[None, :], has[None, :]
-
-            updates, new_active, ret = apply_fn(state, agg, has,
-                                                garrs["global_id"])
-            new_state = dict(state)
-            upd_mask = has & vertex_valid
-            for k, v in updates.items():
-                new_state[k] = jnp.where(upd_mask, v, state[k])
-            new_active = new_active & vertex_valid
-            total = jnp.sum(jnp.where(upd_mask, ret, 0).astype(jnp.float32))
-            total = jax.lax.psum(total, axis)
-            counters = {k: jax.lax.psum(v, axis) for k, v in counters.items()}
-            return new_state, new_active, total, counters
-
-        def make(state):
-            in_specs = ({k: P(axis) for k in state},
-                        P(axis) if has_active else None,
-                        {k: P(axis) for k in self._garrs})
-            out_specs = ({k: P(axis) for k in state}, P(axis), P(),
-                         {k: P() for k in COUNTER_KEYS})
-            return jax.jit(jax.shard_map(step, mesh=mesh, in_specs=in_specs,
-                                         out_specs=out_specs))
-
-        def run(state, active, garrs):
-            return make(state)(state, active, garrs)
-        return run
+            if fn is None:
+                fn = _executor.make_local_pe(
+                    self, signal_fn, slot_fn, monoid, apply_fn, backend,
+                    mode_meta)
+                if cache_key is not None:
+                    self._pe_cache[cache_key] = fn
+            bt = self._block if backend == "block_csr" else None
+            return fn(state, active, self.graph, self.fmts, self.global_id,
+                      bt, vals)
+        if fn is None:
+            fn = _executor.make_sharded_pe(
+                self, signal_fn, slot_fn, monoid, apply_fn, backend,
+                mode_meta, active is not None)
+            if cache_key is not None:
+                self._pe_cache[cache_key] = fn
+        bt = self._block_garrs if backend == "block_csr" else None
+        return fn(state, active, self._garrs, bt, vals)

@@ -1,0 +1,404 @@
+"""Chunk-scheduled ProcessEdges executors (DESIGN.md §1).
+
+One shared phase pipeline (:mod:`repro.core.phases`) drives both executors:
+
+* ``make_local_pe``  — one device; the partition axis is a leading array
+  axis.  The inter-partition exchange is a vmap re-axis (``out_axes=1``
+  builds the receive-major [Q, P, V] view directly — no dense [P, P, V]
+  broadcast of the active mask and no send-major transpose), and
+  "network" traffic is accounted analytically by counters.
+* ``make_sharded_pe`` — the partition axis is a mesh axis; the exchange is
+  a real ``lax.all_to_all`` on the interconnect and counters are reduced
+  with ``lax.psum``.
+
+Phase 4 runs on one of two compute backends (``EngineConfig.compute_backend``):
+
+* ``"segment"``   — flat per-edge gather + ``segment_{sum,min,max}``; the
+  reference implementation.
+* ``"block_csr"`` — the Pallas block-CSR combine kernel over per-(source
+  partition, destination batch) tiles, zero-skipping tiles whose chunk
+  received no messages (the paper's selective computation realized on the
+  compute path, not just in the I/O counters).
+
+The block backend requires the slot function to be *affine in the message*
+per edge — ``slot(m, d) = a(d) * m + b(d)`` — which every monoid-compatible
+slot in the paper's four algorithms satisfies (DESIGN.md §2).  The slot is
+probed numerically; non-affine slots fall back to the segment backend with
+a warning.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import phases
+from repro.core.formats import BlockTilesHost
+from repro.core.partition import row_block_batch_map
+from repro.kernels.csr_spmv import default_interpret
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """jax.shard_map moved around across jax versions; Pallas calls inside
+    the mapped function additionally need replication checks disabled."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    try:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+    except TypeError:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+# ---------------------------------------------------------------------------
+# Slot lowering for the block-CSR backend (DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+def fn_code_key(fn):
+    """Hashable behavioral identity for a user callback, or None.
+
+    Algorithm loops create fresh lambdas every iteration; the code object
+    (plus consts, defaults, and closure values) identifies the behavior
+    across iterations so probes and jitted executors are cached per
+    algorithm, not re-built per call."""
+    try:
+        code = fn.__code__
+        key = (code.co_code, code.co_consts, fn.__defaults__,
+               tuple(c.cell_contents for c in (fn.__closure__ or ())))
+        hash(key)
+        return key
+    except Exception:
+        return None
+
+
+def slot_probe_key(slot_fn, monoid):
+    """Cache key for the affine-slot probe (see :func:`fn_code_key`)."""
+    key = fn_code_key(slot_fn)
+    return None if key is None else (monoid.name,) + key
+
+
+def probe_slot_affine(slot_fn, monoid, host: BlockTilesHost):
+    """Numerically probe ``slot(m, d) = a(d) * m + b(d)``.
+
+    Returns (cache_key, mode, a_const, a [P, E], b [P, E]) or None when the
+    slot is not affine in the message (or, for extremum monoids, when the
+    slope varies across edges so per-cell minima cannot be precombined)."""
+    d = jnp.asarray(host.edge_data)
+    b = np.asarray(slot_fn(jnp.zeros_like(d), d), np.float32)
+    a = np.asarray(slot_fn(jnp.ones_like(d), d), np.float32) - b
+    m = host.edge_valid
+    # Check the fitted line at non-integer points too: slots built from
+    # round/floor/mod are linear at integer probes but not in between.
+    for t in (2.0, 0.37282, 2.414214):
+        ft = np.asarray(slot_fn(jnp.full_like(d, t), d), np.float32)
+        if not np.allclose(ft[m], (t * a + b)[m], rtol=1e-4, atol=1e-5):
+            return None
+    a_const = 1.0
+    if monoid.name in ("min", "max"):
+        av = a[m]
+        if av.size:
+            a_const = float(av.flat[0])
+            if not np.allclose(av, a_const, rtol=1e-5, atol=1e-7):
+                return None
+        mode = monoid.name
+    elif monoid.name == "add":
+        mode = "add_b" if np.any(np.abs(b[m]) > 0) else "add"
+    else:
+        return None
+    key = hashlib.sha1(
+        monoid.name.encode() + a.tobytes() + b.tobytes()).hexdigest()
+    return key, mode, a_const, a, b
+
+
+def build_value_tiles(host: BlockTilesHost, monoid, mode: str,
+                      a: np.ndarray, b: np.ndarray) -> dict:
+    """Scatter the probed per-edge (a, b) into value tiles (numpy).
+
+    add / add_b : tiles_v[cell] = sum a_e (+ tiles_b[cell] = sum b_e) —
+                  parallel edges accumulate, so the tile matmul reproduces
+                  the per-edge segment sum exactly.
+    min / max   : tiles_b[cell] = extremum of b_e over the cell's edges
+                  (valid because the slope is constant), identity elsewhere.
+    """
+    p_cnt, _ = host.edge_slot.shape
+    s_max, t = host.s_max, host.tile
+    m = host.edge_valid
+    qi = np.broadcast_to(np.arange(p_cnt)[:, None], host.edge_slot.shape)[m]
+    cell = (qi, host.edge_slot[m], host.edge_roff[m], host.edge_coff[m])
+    out = {}
+    if mode in ("add", "add_b"):
+        tv = np.zeros((p_cnt, s_max, t, t), np.float32)
+        np.add.at(tv, cell, a[m])
+        out["tiles_v"] = tv
+        if mode == "add_b":
+            tb = np.zeros((p_cnt, s_max, t, t), np.float32)
+            np.add.at(tb, cell, b[m])
+            out["tiles_b"] = tb
+    else:
+        tb = np.full((p_cnt, s_max, t, t), monoid.identity, np.float32)
+        scatter = np.minimum if mode == "min" else np.maximum
+        scatter.at(tb, cell, b[m])
+        out["tiles_b"] = tb
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Shared destination-side pipeline (phases 3 + 4 on one partition's view)
+# ---------------------------------------------------------------------------
+
+def _dest_phases(d, recv_msg, recv_mask, *, slot_fn, monoid, spec, cfg,
+                 backend, part_sizes, gamma, mode_meta, rb_map, bt_static,
+                 interpret):
+    """Dispatch + process for one destination partition.
+
+    d: dict of this destination's arrays (DCSR dispatch/format slices, plus
+    per-edge arrays for the segment backend or tile arrays for block_csr).
+    Returns (agg [V], has [V], counter contributions dict)."""
+    v_max, b_cnt = spec.v_max, spec.num_batches
+    chunk_active, dispatched = phases.dispatch_one_dest(
+        d["dcsr_src"], d["dcsr_part"], d["dcsr_batch"], d["dcsr_valid"],
+        recv_mask, v_max, b_cnt)
+    c = {"msgs_dispatched": dispatched,
+         "chunks_read": jnp.sum(chunk_active, dtype=jnp.float32)}
+    if cfg.enable_adaptive_formats:
+        msgs_from = jnp.sum(recv_mask, axis=1).astype(jnp.int32)
+        c["seek_cost"], c["edge_read_bytes"] = phases.format_choice_one_dest(
+            d["dcsr_ptr"], d["has_csr"], d["csr_bytes"], d["dcsr_bytes"],
+            part_sizes, gamma, msgs_from, chunk_active)
+    else:
+        c["seek_cost"] = jnp.zeros((), jnp.float32)
+        c["edge_read_bytes"] = jnp.sum(
+            jnp.where(chunk_active, d["csr_bytes"], 0.0), dtype=jnp.float32)
+
+    if backend == "segment":
+        agg, has, touched = phases.process_segment_one_dest(
+            d["edge_src_part"], d["edge_src_local"], d["edge_dst_local"],
+            d["edge_data"], d["edge_valid"], recv_msg, recv_mask,
+            slot_fn, monoid, v_max)
+    else:
+        bt = {k: d[k] for k in ("slot_row", "slot_col", "slot_part",
+                                "slot_valid", "row_ptr", "tiles_cnt")}
+        vals = {"mode": mode_meta[0], "a": mode_meta[1],
+                "tiles_v": d.get("tiles_v"), "tiles_b": d.get("tiles_b")}
+        agg, has, touched = phases.process_block_one_dest(
+            bt, vals, recv_msg, recv_mask, chunk_active, monoid, rb_map,
+            tile=bt_static.tile, v_pad=bt_static.v_pad,
+            n_rows=bt_static.n_rows,
+            max_tiles_per_row=bt_static.max_tiles_per_row,
+            interpret=interpret)
+    c["edges_touched"] = touched
+    return agg, has, c
+
+
+def _apply_and_account(state, agg, has, global_id, vertex_valid, apply_fn,
+                       cfg, batch_size):
+    """Shared apply: masked state update + vertex-batch I/O accounting."""
+    updates, new_active, ret = apply_fn(state, agg, has, global_id)
+    new_state = dict(state)
+    upd_mask = has & vertex_valid
+    for k, v in updates.items():
+        new_state[k] = jnp.where(upd_mask, v, state[k])
+    new_active = new_active & vertex_valid
+    total = jnp.sum(jnp.where(upd_mask, ret, 0).astype(jnp.float32))
+    io = {}
+    if cfg.account_io:
+        arrays_bytes = sum(np.dtype(v.dtype).itemsize
+                           for v in state.values())
+        touched_v = phases.batch_touched(upd_mask, batch_size)
+        io["vertex_read_bytes"] = touched_v * arrays_bytes
+        io["vertex_write_bytes"] = touched_v * arrays_bytes
+    return new_state, new_active, total, io
+
+
+def _zero_counters(keys):
+    return {k: jnp.zeros((), jnp.float32) for k in keys}
+
+
+# ---------------------------------------------------------------------------
+# LOCAL executor (single device, stacked partition axis)
+# ---------------------------------------------------------------------------
+
+def make_local_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
+                  mode_meta):
+    cfg = engine.config
+    spec = engine.graph.spec
+    p_cnt = spec.num_partitions
+    gamma = engine.fmts.gamma
+    part_sizes = jnp.asarray(spec.partition_sizes(), jnp.float32)
+    bt_static = engine._block if backend == "block_csr" else None
+    rb_map = (jnp.asarray(row_block_batch_map(spec, bt_static.tile))
+              if backend == "block_csr" else None)
+    interpret = default_interpret()
+    counter_keys = engine.counter_keys
+    dp = functools.partial(
+        _dest_phases, slot_fn=slot_fn, monoid=monoid, spec=spec, cfg=cfg,
+        backend=backend, part_sizes=part_sizes, gamma=gamma,
+        mode_meta=mode_meta, rb_map=rb_map, bt_static=bt_static,
+        interpret=interpret)
+
+    @jax.jit
+    def step(state, active, g, fmts, global_id, bt, vals):
+        counters = _zero_counters(counter_keys)
+        amask = g.vertex_valid if active is None else (active & g.vertex_valid)
+        # Phase 1: generate
+        msg = signal_fn(state, global_id)                        # [P, V]
+        m_p = jnp.sum(amask, axis=1, dtype=jnp.float32)          # [P]
+        counters["msgs_generated"] = jnp.sum(m_p)
+        counters["msg_disk_bytes"] = jnp.sum(m_p) * (cfg.msg_bytes + 4)
+
+        # Phase 2: filter + pass, built receive-major per destination —
+        # no dense [P, P, V] broadcast of amask, no send-major transpose.
+        recv_mask = jax.vmap(
+            lambda a_, n_, nc_, mm: phases.filter_sendmask(
+                a_, n_, nc_, mm, cfg),
+            in_axes=(0, 0, 0, 0), out_axes=1)(
+            amask, g.need, g.need_counts, m_p)                   # [Q, P, V]
+        recv_msg = jnp.where(recv_mask, msg[None, :, :], 0)
+        total_sent = jnp.sum(recv_mask, dtype=jnp.float32)
+        self_sent = jnp.sum(jnp.diagonal(recv_mask, axis1=0, axis2=1),
+                            dtype=jnp.float32)
+        n_active = jnp.sum(amask, dtype=jnp.float32)
+        counters["msgs_sent"] = total_sent
+        counters["msgs_sent_nofilter"] = p_cnt * n_active
+        counters["net_bytes"] = (total_sent - self_sent) * (cfg.msg_bytes + 4)
+        counters["net_bytes_nofilter"] = ((p_cnt - 1) * n_active
+                                          * (cfg.msg_bytes + 4))
+
+        # Phases 3 + 4 per destination partition
+        d = dict(dcsr_src=fmts.dcsr_src, dcsr_part=fmts.dcsr_part,
+                 dcsr_batch=fmts.dcsr_batch, dcsr_valid=fmts.dcsr_valid,
+                 dcsr_ptr=fmts.dcsr_ptr, has_csr=fmts.has_csr,
+                 csr_bytes=fmts.csr_bytes, dcsr_bytes=fmts.dcsr_bytes)
+        if backend == "segment":
+            d.update(edge_src_part=g.edge_src_part,
+                     edge_src_local=g.edge_src_local,
+                     edge_dst_local=g.edge_dst_local,
+                     edge_data=g.edge_data, edge_valid=g.edge_valid)
+            agg, has, cd = jax.vmap(dp)(d, recv_msg, recv_mask)
+            cd = {k: jnp.sum(v) for k, v in cd.items()}
+        else:
+            d.update(slot_row=bt.slot_row, slot_col=bt.slot_col,
+                     slot_part=bt.slot_part, slot_valid=bt.slot_valid,
+                     row_ptr=bt.row_ptr, tiles_cnt=bt.tiles_cnt, **vals)
+            # the Pallas grid is per destination; unroll the (small) Q loop
+            outs = [dp(jax.tree_util.tree_map(lambda x: x[q], d),
+                       recv_msg[q], recv_mask[q]) for q in range(p_cnt)]
+            agg = jnp.stack([o[0] for o in outs])
+            has = jnp.stack([o[1] for o in outs])
+            cd = {k: sum(o[2][k] for o in outs) for k in outs[0][2]}
+        counters.update(cd)
+
+        new_state, new_active, total, io = _apply_and_account(
+            state, agg, has, global_id, g.vertex_valid, apply_fn, cfg,
+            spec.batch_size)
+        counters.update(io)
+        return new_state, new_active, total, counters
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# SHARD_MAP executor (partition axis = mesh axis, all_to_all exchange)
+# ---------------------------------------------------------------------------
+
+def make_sharded_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
+                    mode_meta, has_active):
+    cfg = engine.config
+    spec = engine.graph.spec
+    p_cnt = spec.num_partitions
+    mesh, axis = engine.mesh, engine.axis
+    gamma = engine.fmts.gamma
+    part_sizes = jnp.asarray(spec.partition_sizes(), jnp.float32)
+    bt_static = engine._block if backend == "block_csr" else None
+    rb_map = (jnp.asarray(row_block_batch_map(spec, bt_static.tile))
+              if backend == "block_csr" else None)
+    interpret = default_interpret()
+    counter_keys = engine.counter_keys
+    dp = functools.partial(
+        _dest_phases, slot_fn=slot_fn, monoid=monoid, spec=spec, cfg=cfg,
+        backend=backend, part_sizes=part_sizes, gamma=gamma,
+        mode_meta=mode_meta, rb_map=rb_map, bt_static=bt_static,
+        interpret=interpret)
+
+    def step(state, active, garrs, bt, vals):
+        counters = _zero_counters(counter_keys)
+        vertex_valid = garrs["vertex_valid"]               # [1, V]
+        amask = vertex_valid if active is None else (active & vertex_valid)
+        # Phase 1: generate
+        msg = signal_fn(state, garrs["global_id"])         # [1, V]
+        m_p = jnp.sum(amask, dtype=jnp.float32)
+        counters["msgs_generated"] = m_p
+        counters["msg_disk_bytes"] = m_p * (cfg.msg_bytes + 4)
+
+        # Phase 2: filter + real interconnect exchange
+        my = jax.lax.axis_index(axis)
+        sendmask = phases.filter_sendmask(
+            amask[0], garrs["need"][0], garrs["need_counts"][0], m_p, cfg)
+        not_self = (jnp.arange(p_cnt) != my)[:, None]
+        counters["msgs_sent"] = jnp.sum(sendmask, dtype=jnp.float32)
+        counters["msgs_sent_nofilter"] = p_cnt * m_p
+        counters["net_bytes"] = jnp.sum(
+            sendmask & not_self, dtype=jnp.float32) * (cfg.msg_bytes + 4)
+        counters["net_bytes_nofilter"] = ((p_cnt - 1) * m_p
+                                          * (cfg.msg_bytes + 4))
+        send_msg = jnp.where(sendmask, msg[0][None, :], 0)   # [P, V]
+        recv_msg = jax.lax.all_to_all(send_msg, axis, 0, 0, tiled=True)
+        recv_mask = jax.lax.all_to_all(
+            sendmask.astype(jnp.int8), axis, 0, 0, tiled=True) > 0
+
+        # Phases 3 + 4 on this shard's destination view
+        d = dict(dcsr_src=garrs["dcsr_src"][0], dcsr_part=garrs["dcsr_part"][0],
+                 dcsr_batch=garrs["dcsr_batch"][0],
+                 dcsr_valid=garrs["dcsr_valid"][0],
+                 dcsr_ptr=garrs["dcsr_ptr"][0], has_csr=garrs["has_csr"][0],
+                 csr_bytes=garrs["csr_bytes"][0],
+                 dcsr_bytes=garrs["dcsr_bytes"][0])
+        if backend == "segment":
+            d.update(edge_src_part=garrs["edge_src_part"][0],
+                     edge_src_local=garrs["edge_src_local"][0],
+                     edge_dst_local=garrs["edge_dst_local"][0],
+                     edge_data=garrs["edge_data"][0],
+                     edge_valid=garrs["edge_valid"][0])
+        else:
+            d.update(jax.tree_util.tree_map(
+                lambda x: x[0],
+                dict(slot_row=bt.slot_row, slot_col=bt.slot_col,
+                     slot_part=bt.slot_part, slot_valid=bt.slot_valid,
+                     row_ptr=bt.row_ptr, tiles_cnt=bt.tiles_cnt, **vals)))
+        agg, has, cd = dp(d, recv_msg, recv_mask)
+        counters.update(cd)
+        agg, has = agg[None, :], has[None, :]
+
+        new_state, new_active, total, io = _apply_and_account(
+            state, agg, has, garrs["global_id"], vertex_valid, apply_fn,
+            cfg, spec.batch_size)
+        counters.update(io)
+        total = jax.lax.psum(total, axis)
+        counters = {k: jax.lax.psum(v, axis) for k, v in counters.items()}
+        return new_state, new_active, total, counters
+
+    jitted = {}
+
+    def run(state, active, garrs, bt, vals):
+        skey = (tuple(sorted(state)), bt is None,
+                None if vals is None else tuple(sorted(vals)))
+        fn = jitted.get(skey)
+        if fn is None:
+            in_specs = ({k: P(axis) for k in state},
+                        P(axis) if has_active else None,
+                        {k: P(axis) for k in garrs},
+                        None if bt is None else P(axis),
+                        None if vals is None else {k: P(axis) for k in vals})
+            out_specs = ({k: P(axis) for k in state}, P(axis), P(),
+                         {k: P() for k in counter_keys})
+            fn = jax.jit(shard_map_compat(step, mesh=mesh,
+                                          in_specs=in_specs,
+                                          out_specs=out_specs))
+            jitted[skey] = fn
+        return fn(state, active, garrs, bt, vals)
+    return run

@@ -169,6 +169,139 @@ def build_formats(g: DistGraph, *, inflate_ratio: float = DEFAULT_INFLATE_RATIO,
     )
 
 
+# ---------------------------------------------------------------------------
+# Block-CSR compute tiles (DESIGN.md §4) — the TPU-native edge format the
+# engine's block_csr backend feeds to the Pallas combine kernel.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BlockTiles:
+    """Per-destination-partition block-CSR tile structure, padded + stacked.
+
+    For destination partition q the incoming adjacency is a [v_pad x
+    P * v_pad] matrix (rows = local dst vertices, columns = source vertices
+    laid out per-partition, each padded to ``v_pad``), tiled into T x T
+    blocks; only nonempty tiles get a slot.  Slots are sorted by (row block,
+    column block); ``row_ptr`` gives each row block's slot range.  The
+    *value* tiles depend on the running (slot_fn, monoid) and are lowered at
+    runtime (executor.probe_slot_affine + executor.build_value_tiles);
+    only the structure and the
+    valid-edge multiplicity tiles (``tiles_cnt``) are static.
+    """
+    # --- per-slot, [P, S_max] ---
+    slot_row: jnp.ndarray         # int32, destination row block
+    slot_col: jnp.ndarray         # int32, global source column block
+    slot_part: jnp.ndarray        # int32, source partition of the column
+    slot_valid: jnp.ndarray       # bool, padding mask
+    # --- [P, R + 1] ---
+    row_ptr: jnp.ndarray          # int32 slot offsets per row block
+    # --- [P, S_max, T, T] ---
+    tiles_cnt: jnp.ndarray        # float32 valid-edge multiplicity per cell
+    # --- static metadata (hashable) ---
+    tile: int
+    v_pad: int
+    n_rows: int
+    n_col_blocks: int
+    s_max: int
+    max_tiles_per_row: int
+
+
+register_static_dataclass(
+    BlockTiles,
+    data_fields=["slot_row", "slot_col", "slot_part", "slot_valid",
+                 "row_ptr", "tiles_cnt"],
+    static_fields=["tile", "v_pad", "n_rows", "n_col_blocks", "s_max",
+                   "max_tiles_per_row"],
+)
+
+
+@dataclasses.dataclass
+class BlockTilesHost:
+    """Host-side per-edge -> tile-cell mapping (NOT a pytree; kept on the
+    engine so per-algorithm value tiles are one numpy scatter to build)."""
+    edge_slot: np.ndarray         # int32 [P, E] slot of each edge's cell
+    edge_roff: np.ndarray         # int32 [P, E] row offset within the tile
+    edge_coff: np.ndarray         # int32 [P, E] col offset within the tile
+    edge_valid: np.ndarray        # bool  [P, E]
+    edge_data: np.ndarray         # f32   [P, E]
+    s_max: int
+    tile: int
+
+
+def build_block_tiles(g: DistGraph, *, tile: int = 8
+                      ) -> tuple[BlockTiles, BlockTilesHost]:
+    """Host-side preprocessing: per destination partition, group the (dst
+    batch x src partition) adjacency into T x T block-CSR tiles (reusing the
+    kernel-side :func:`build_tile_struct` core)."""
+    from repro.kernels.csr_spmv import build_tile_struct
+    from repro.utils import ceil_div
+
+    spec = g.spec
+    p_cnt, v_max = spec.num_partitions, spec.v_max
+    t = tile
+    v_pad = ceil_div(v_max, t) * t
+    pb = v_pad // t                   # column blocks per source partition
+    n_rows = v_pad // t
+    n_col_blocks = p_cnt * pb
+
+    esl = np.asarray(g.edge_src_local)
+    esp = np.asarray(g.edge_src_part)
+    edl = np.asarray(g.edge_dst_local)
+    evalid = np.asarray(g.edge_valid)
+    edata = np.asarray(g.edge_data)
+    e_max = esl.shape[1]
+
+    per_q = []
+    edge_slot = np.full((p_cnt, e_max), 0, np.int32)
+    for q in range(p_cnt):
+        m = evalid[q]
+        v, u, p = edl[q][m], esl[q][m], esp[q][m]
+        slot_row, slot_col, row_ptr, eslot = build_tile_struct(
+            v // t, p * pb + u // t, n_rows, n_col_blocks)
+        edge_slot[q, m] = eslot
+        per_q.append((slot_row, slot_col, row_ptr))
+
+    s_max = max(1, max(sr.shape[0] for sr, _, _ in per_q))
+    max_tpr = max(1, max(int((rp[1:] - rp[:-1]).max()) for _, _, rp in per_q))
+
+    slot_row = np.full((p_cnt, s_max), n_rows - 1, np.int32)
+    slot_col = np.zeros((p_cnt, s_max), np.int32)
+    slot_part = np.zeros((p_cnt, s_max), np.int32)
+    slot_valid = np.zeros((p_cnt, s_max), bool)
+    row_ptr = np.zeros((p_cnt, n_rows + 1), np.int32)
+    tiles_cnt = np.zeros((p_cnt, s_max, t, t), np.float32)
+    for q, (sr, sc, rp) in enumerate(per_q):
+        n = sr.shape[0]
+        slot_row[q, :n] = sr
+        slot_col[q, :n] = sc
+        slot_part[q, :n] = sc // pb
+        slot_valid[q, :n] = True
+        row_ptr[q] = rp
+        m = evalid[q]
+        np.add.at(tiles_cnt[q],
+                  (edge_slot[q][m], edl[q][m] % t, esl[q][m] % t), 1.0)
+
+    bt = BlockTiles(
+        slot_row=jnp.asarray(slot_row),
+        slot_col=jnp.asarray(slot_col),
+        slot_part=jnp.asarray(slot_part),
+        slot_valid=jnp.asarray(slot_valid),
+        row_ptr=jnp.asarray(row_ptr),
+        tiles_cnt=jnp.asarray(tiles_cnt),
+        tile=t, v_pad=v_pad, n_rows=n_rows, n_col_blocks=n_col_blocks,
+        s_max=s_max, max_tiles_per_row=max_tpr,
+    )
+    host = BlockTilesHost(
+        edge_slot=edge_slot,
+        edge_roff=(edl % t).astype(np.int32),
+        edge_coff=(esl % t).astype(np.int32),
+        edge_valid=evalid,
+        edge_data=edata,
+        s_max=s_max, tile=t,
+    )
+    return bt, host
+
+
 def storage_summary(fmts: ChunkFormats, g: DistGraph) -> dict:
     """Totals for the Fig.5-style I/O claims: adaptive store vs raw pairs."""
     has_csr = np.asarray(fmts.has_csr)
@@ -195,38 +328,3 @@ def storage_summary(fmts: ChunkFormats, g: DistGraph) -> dict:
                 adaptive_over_csr_all=adaptive_read / max(csr_all, 1.0),
                 stored_bytes=float(np.asarray(fmts.stored_bytes).sum()),
                 csr_chunk_fraction=float(has_csr.mean()))
-
-
-def runtime_choice_cost(fmts: ChunkFormats, spec: TwoLevelSpec,
-                        msgs_from: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Paper §4.1 runtime selection, vectorized over chunks.
-
-    msgs_from: int32 [P(dst), P(src)] — number of messages each destination
-    partition received from each source partition this iteration (|M|).
-
-    Returns (use_csr [P, P, B] bool, seek_cost [P, P, B] float32): whether to
-    read the CSR (when available) and the modeled seek cost of the winner.
-    """
-    nnz = jnp.asarray(fmts.dcsr_ptr[:, :, 1:] - fmts.dcsr_ptr[:, :, :-1],
-                      jnp.float32)                       # |V_src, outdeg!=0| per chunk
-    v_src = jnp.asarray(spec.partition_sizes(), jnp.float32)[None, :, None]
-    m = msgs_from.astype(jnp.float32)[:, :, None]
-    cost_dcsr = 2.0 * nnz
-    cost_csr = jnp.minimum(fmts.gamma * m, v_src)
-    csr_avail = jnp.asarray(fmts.has_csr)
-    use_csr = csr_avail & (cost_csr < cost_dcsr)
-    seek_cost = jnp.where(use_csr, cost_csr, cost_dcsr)
-    return use_csr, seek_cost
-
-
-def read_bytes_model(fmts: ChunkFormats, use_csr: jnp.ndarray,
-                     chunk_active: jnp.ndarray) -> jnp.ndarray:
-    """Modeled bytes read from HBM for edge data this iteration.
-
-    chunk_active: bool [P, P, B] — chunk has at least one incoming message
-    whose source appears in it (selective I/O: untouched chunks cost nothing).
-    """
-    csr_b = jnp.asarray(fmts.csr_bytes, jnp.float32)
-    dcsr_b = jnp.asarray(fmts.dcsr_bytes, jnp.float32)
-    per_chunk = jnp.where(use_csr, csr_b, dcsr_b)
-    return jnp.sum(jnp.where(chunk_active, per_chunk, 0.0))

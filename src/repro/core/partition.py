@@ -272,6 +272,26 @@ def build_dist_graph(graph: GraphData, spec: TwoLevelSpec) -> DistGraph:
     )
 
 
+def row_block_batch_map(spec: TwoLevelSpec, tile: int) -> np.ndarray:
+    """Static [R, B] bool map: tile row block r (rows r*T .. (r+1)*T - 1 of
+    the padded destination axis) overlaps intra-node batch k.
+
+    The block-CSR compute backend schedules tiles, the I/O model schedules
+    (src partition, dst batch) chunks; this map translates runtime
+    ``chunk_active`` into live tile rows.  When ``batch_size`` is a multiple
+    of ``tile`` each row maps to exactly one batch (the intended layout);
+    otherwise a row conservatively activates with any overlapping batch."""
+    v_pad = ceil_div(spec.v_max, tile) * tile
+    n_rows = v_pad // tile
+    out = np.zeros((n_rows, spec.num_batches), bool)
+    for r in range(n_rows):
+        k_lo = (r * tile) // spec.batch_size
+        k_hi = min((r * tile + tile - 1) // spec.batch_size,
+                   spec.num_batches - 1)
+        out[r, k_lo:k_hi + 1] = True
+    return out
+
+
 def scatter_vertex_values(spec: TwoLevelSpec, values: np.ndarray,
                           fill=0) -> np.ndarray:
     """Global [N] vertex values -> padded [P, V_max]."""

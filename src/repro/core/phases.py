@@ -1,0 +1,205 @@
+"""ProcessEdges phase implementations shared by both executors (DESIGN.md §1).
+
+The paper's four phases (§4.2–§4.4) are expressed here on the *local view*
+of one partition — no executor-specific leading axis:
+
+  1. generating          — active vertices produce messages (``signal``),
+  2. inter-node pass     — ``filter_sendmask`` decides, per destination,
+                           which messages cross the wire (paper §4.3),
+  3. intra-node dispatch — ``dispatch_one_dest`` routes messages to
+                           destination batches via the dispatching graph
+                           (= the DCSR arrays, §4.2),
+  4. processing          — ``process_segment_one_dest`` (flat segment
+                           reference) or ``process_block_one_dest`` (the
+                           Pallas block-CSR kernel) combine ``slot``
+                           contributions per destination vertex.
+
+The executors in :mod:`repro.core.executor` differ only in how the
+inter-partition exchange between phase 2 and phase 3 is realized (a vmap
+re-axis for LOCAL, ``lax.all_to_all`` for SHARD_MAP) and how counters are
+reduced (leading-axis sums vs ``lax.psum``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.csr_spmv import block_csr_combine
+
+# ---------------------------------------------------------------------------
+# Phase 2: message filtering (paper §4.3)
+# ---------------------------------------------------------------------------
+
+
+def filter_sendmask(amask, need, need_counts, m, cfg):
+    """One source partition's send decision toward every destination.
+
+    amask [V] bool: this partition's active (message-producing) vertices.
+    need [Q, V] bool: need-bitmaps — v has >=1 out-edge into partition q.
+    need_counts [Q] int: |L_pq| need-list lengths.
+    m scalar: |M_p| = number of messages this partition generated.
+
+    Returns sendmask [Q, V]: which messages travel to each destination.
+    The filter is skipped (send everything) when the need-list is not
+    substantially smaller than the message file (paper's 2x threshold)."""
+    base = jnp.broadcast_to(amask[None, :], need.shape)
+    if not cfg.enable_filtering:
+        return base
+    filtered = amask[None, :] & need
+    skip = need_counts.astype(jnp.float32) >= (
+        cfg.filter_skip_threshold * m)
+    return jnp.where(skip[:, None], base, filtered)
+
+
+# ---------------------------------------------------------------------------
+# Phase 3: intra-node dispatch over the dispatching graph (paper §4.2)
+# ---------------------------------------------------------------------------
+
+
+def dispatch_one_dest(dsrc, dpart, dbatch, dvalid, recv_mask, v_max, b_cnt):
+    """Phase 3 accounting via the dispatching graph (DCSR entries).
+
+    Returns (chunk_active [P, B] — chunk has >=1 present source — and the
+    number of dispatched (message, batch) deliveries)."""
+    p_cnt = recv_mask.shape[0]
+    flat_mask = recv_mask.reshape(p_cnt * v_max)
+    gidx = dpart.astype(jnp.int32) * v_max + dsrc.astype(jnp.int32)
+    present = jnp.take(flat_mask, gidx, mode="clip") & dvalid  # [S]
+    cid = dpart.astype(jnp.int32) * b_cnt + dbatch.astype(jnp.int32)
+    chunk_active = jax.ops.segment_max(
+        present.astype(jnp.int32), cid, p_cnt * b_cnt).reshape(p_cnt, b_cnt) > 0
+    return chunk_active, jnp.sum(present, dtype=jnp.float32)
+
+
+def format_choice_one_dest(dcsr_ptr, has_csr, csr_bytes, dcsr_bytes,
+                           part_sizes, gamma, msgs_from, chunk_active):
+    """Paper §4.1 runtime CSR/DCSR selection for one destination partition.
+
+    dcsr_ptr [P, B+1]; has_csr/csr_bytes/dcsr_bytes [P, B]; part_sizes [P];
+    msgs_from [P] — messages received from each source partition.
+
+    Returns (seek_cost scalar, edge_read_bytes scalar) over active chunks."""
+    nnz = (dcsr_ptr[:, 1:] - dcsr_ptr[:, :-1]).astype(jnp.float32)
+    v_src = part_sizes.astype(jnp.float32)[:, None]            # [P, 1]
+    m = msgs_from.astype(jnp.float32)[:, None]
+    cost_dcsr = 2.0 * nnz
+    cost_csr = jnp.minimum(gamma * m, v_src)
+    use_csr = has_csr & (cost_csr < cost_dcsr)
+    seek = jnp.where(use_csr, cost_csr, cost_dcsr)
+    seek_cost = jnp.sum(jnp.where(chunk_active, seek, 0.0),
+                        dtype=jnp.float32)
+    per_chunk = jnp.where(use_csr, csr_bytes, dcsr_bytes)
+    read_bytes = jnp.sum(jnp.where(chunk_active, per_chunk, 0.0),
+                         dtype=jnp.float32)
+    return seek_cost, read_bytes
+
+
+# ---------------------------------------------------------------------------
+# Phase 4 (reference): flat segment combine over per-edge arrays
+# ---------------------------------------------------------------------------
+
+
+def process_segment_one_dest(esp, esl, edl, edata, evalid, recv_msg,
+                             recv_mask, slot_fn, monoid, v_max):
+    """Phase 4: slot along edges + monoid combine per destination vertex.
+
+    esp/esl/edl/edata/evalid: per-edge arrays [E].
+    recv_msg/recv_mask: [P, V] messages (and presence) from each source part.
+    Returns (agg [V], has_msg [V], edges_touched scalar)."""
+    p_cnt = recv_msg.shape[0]
+    flat_msg = recv_msg.reshape(p_cnt * v_max)
+    flat_mask = recv_mask.reshape(p_cnt * v_max)
+    gidx = esp.astype(jnp.int32) * v_max + esl.astype(jnp.int32)
+    mv = jnp.take(flat_msg, gidx, mode="clip")               # [E]
+    em = jnp.take(flat_mask, gidx, mode="clip") & evalid     # [E]
+
+    contrib = slot_fn(mv, edata)                             # [E]
+    contrib = jnp.where(em, contrib, monoid.identity)
+    agg = monoid.segment(contrib, edl.astype(jnp.int32), v_max)
+    has = jax.ops.segment_max(em.astype(jnp.int32),
+                              edl.astype(jnp.int32), v_max) > 0
+    return agg, has, jnp.sum(em, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Phase 4 (block-CSR): selective Pallas tile combine (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+
+def process_block_one_dest(bt, vals, recv_msg, recv_mask, chunk_active,
+                           monoid, rb_map, *, tile, v_pad, n_rows,
+                           max_tiles_per_row, interpret):
+    """Phase 4 through :func:`repro.kernels.csr_spmv.block_csr_combine`.
+
+    bt: dict of this destination's tile-structure arrays
+        (slot_row/slot_col/slot_part/slot_valid [S], row_ptr [R+1],
+        tiles_cnt [S, T, T]).
+    vals: dict with the slot-lowered value tiles for the running
+        (slot_fn, monoid) — ``mode`` plus ``tiles_v``/``tiles_b``/``a``
+        (see executor.probe_slot_affine + executor.build_value_tiles).
+    chunk_active [P, B]: phase-3 output; tiles belonging to chunks that
+        received no message are compacted out of the kernel's row sweep
+        (zero-skip — the selective-computation claim on the compute side).
+    rb_map [R, B] bool (static): row block r overlaps destination batch k.
+
+    Returns (agg [V], has_msg [V], edges_touched scalar)."""
+    v_max = recv_msg.shape[1]
+    identity = float(monoid.identity)
+    mode = vals["mode"]
+
+    # Selective schedule: a tile is live iff its (src partition, dst batch)
+    # chunk is active.  Live tiles are compacted to the front of their row's
+    # slot range (slots are stored row-sorted, so an exclusive cumsum of the
+    # live mask gives each live tile's target position — no sort needed) so
+    # the kernel's row pointer sweeps live tiles only.
+    rb_active = jnp.einsum("pk,rk->pr", chunk_active.astype(jnp.float32),
+                           rb_map.astype(jnp.float32)) > 0      # [P, R]
+    live = bt["slot_valid"] & rb_active[bt["slot_part"], bt["slot_row"]]
+    row = bt["slot_row"].astype(jnp.int32)
+    livei = live.astype(jnp.int32)
+    row_cnt = jax.ops.segment_sum(livei, row, n_rows)
+    cnt_cum = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(row_cnt)])
+    rank = jnp.cumsum(livei) - livei        # exclusive rank among live slots
+    n_slots = live.shape[0]
+    dest = jnp.where(live, bt["row_ptr"][row] + (rank - cnt_cum[row]),
+                     n_slots)               # dead slots dropped
+    slots = jnp.arange(n_slots, dtype=jnp.int32)
+    tile_idx = jnp.zeros((n_slots,), jnp.int32).at[dest].set(
+        slots, mode="drop")
+    tile_col = jnp.zeros((n_slots,), jnp.int32).at[dest].set(
+        bt["slot_col"].astype(jnp.int32), mode="drop")
+
+    # Source vectors: per-partition spans padded to v_pad, then flattened so
+    # column block c = p * (v_pad // T) + u // T never straddles partitions.
+    pad = ((0, 0), (0, v_pad - v_max))
+    mask_p = jnp.pad(recv_mask, pad)
+    msg_p = jnp.pad(recv_msg, pad)
+    xc = mask_p.astype(jnp.float32).reshape(-1)
+    if mode in ("add", "add_b"):
+        xv = jnp.where(mask_p, msg_p, 0.0).reshape(-1)
+    else:
+        xv = jnp.where(mask_p, vals["a"] * msg_p, identity).reshape(-1)
+
+    val, hascnt = block_csr_combine(
+        bt["row_ptr"], tile_idx, tile_col, row_cnt,
+        vals.get("tiles_v"), vals.get("tiles_b"), bt["tiles_cnt"],
+        xv, xc, mode=mode, tile=tile, max_tiles_per_row=max_tiles_per_row,
+        identity=identity, interpret=interpret)
+    agg = val[:v_max]
+    has = hascnt[:v_max] > 0.5
+    return agg, has, jnp.sum(hascnt, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Vertex-batch I/O model (paper §4.4)
+# ---------------------------------------------------------------------------
+
+
+def batch_touched(mask, batch_size):
+    """Number of vertices in batches containing >=1 set bit (I/O model:
+    vertex data is loaded per batch, paper §4.4)."""
+    pad = (-mask.shape[-1]) % batch_size
+    m = jnp.pad(mask, [(0, 0)] * (mask.ndim - 1) + [(0, pad)])
+    batch_any = m.reshape(*m.shape[:-1], -1, batch_size).any(axis=-1)
+    return jnp.sum(batch_any, dtype=jnp.float32) * batch_size

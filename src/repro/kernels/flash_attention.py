@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.csr_spmv import CompilerParams, default_interpret
+
 NEG_INF = -1e30
 
 
@@ -35,10 +37,10 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bkv: int, seq_kv: int,
 
     def body(kv_i, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(kv_i * bkv, bkv),
-                            slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(kv_i * bkv, bkv),
-                            slice(None))).astype(jnp.float32)
+        k = pl.load(k_ref, (pl.dslice(0, 1), pl.dslice(kv_i * bkv, bkv),
+                            slice(None)))[0].astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(0, 1), pl.dslice(kv_i * bkv, bkv),
+                            slice(None)))[0].astype(jnp.float32)
         s = q @ k.T                                    # [bq, bkv]
         if softcap:
             s = jnp.tanh(s / softcap) * softcap
@@ -63,7 +65,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bkv: int, seq_kv: int,
     else:
         hi = n_kv
     m, l, acc = jax.lax.fori_loop(0, hi, body, (m, l, acc))
-    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None])[None].astype(
+        o_ref.dtype)
 
 
 @functools.partial(
@@ -72,8 +75,10 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bkv: int, seq_kv: int,
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, window: int = 0,
                     softcap: float = 0.0, bq: int = 128, bkv: int = 128,
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: bool | None = None) -> jnp.ndarray:
     """q: [BH, Sq, D]; k/v: [BH, Skv, D].  Returns [BH, Sq, D]."""
+    if interpret is None:
+        interpret = default_interpret()
     bh, sq, d = q.shape
     skv = k.shape[1]
     bq = min(bq, sq)
@@ -95,6 +100,6 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         out_specs=pl.BlockSpec((1, bq, d), lambda b, i: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
     )(q, k, v)

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.csr_spmv import CompilerParams, default_interpret
+
 
 def _kernel(q_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref, s_scratch,
             *, chunk: int, include_current: bool, has_bonus: bool,
@@ -58,7 +60,7 @@ def _kernel(q_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref, s_scratch,
         a = a + jnp.where(row[:, None] == row[None, :],
                           diag[:, None], 0.0)
     y = y + a @ v
-    y_ref[0] = y.astype(y_ref.dtype)
+    y_ref[...] = y[None].astype(y_ref.dtype)
 
     # state update: S = exp(l_last)^T * S_in + (k * exp(l_last - lc))^T v
     s_new = jnp.exp(l_last).T * s_in + (k * jnp.exp(l_last - lc)).T @ v
@@ -66,15 +68,17 @@ def _kernel(q_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_out_ref, s_scratch,
 
     @pl.when(c == n_chunks - 1)
     def _final():
-        s_out_ref[0] = s_new.astype(s_out_ref.dtype)
+        s_out_ref[...] = s_new[None].astype(s_out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "include_current",
                                              "interpret"))
 def gla_chunked(q, k, v, w, u=None, *, chunk: int = 64,
-                include_current: bool = True, interpret: bool = True):
+                include_current: bool = True, interpret: bool | None = None):
     """q/k/w: [BH, T, Dk]; v: [BH, T, Dv]; u: [BH, Dk] bonus or None.
     Returns (y [BH, T, Dv], final_state [BH, Dk, Dv])."""
+    if interpret is None:
+        interpret = default_interpret()
     bh, t, dk = q.shape
     dv = v.shape[-1]
     assert t % chunk == 0, (t, chunk)
@@ -106,7 +110,7 @@ def gla_chunked(q, k, v, w, u=None, *, chunk: int = 64,
         ],
         scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(q, k, v, w, u)
     return y, s

@@ -1,20 +1,20 @@
 """Jitted public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True in this CPU container (kernels execute via the
-Pallas interpreter); on real TPU pass interpret=False (or set
-REPRO_PALLAS_COMPILE=1) to lower through Mosaic.
+``interpret`` defaults to backend auto-detection: kernels execute via the
+Pallas interpreter off-TPU (e.g. this CPU container) and lower through
+Mosaic on real TPU, so benchmarks measure the compiled kernel where it
+exists.  ``REPRO_PALLAS_COMPILE=1`` forces compilation everywhere.
 """
 from __future__ import annotations
 
-import os
-
 import jax.numpy as jnp
 
-from repro.kernels.csr_spmv import block_csr_spmv, build_block_csr  # noqa: F401
+from repro.kernels.csr_spmv import (  # noqa: F401
+    block_csr_combine, block_csr_spmv, build_block_csr, build_tile_struct,
+    default_interpret,
+)
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
 from repro.kernels.gla_chunk import gla_chunked  # noqa: F401
-
-_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
 
 
 def spmv(graph_blocks: dict, x: jnp.ndarray, *, tile: int,
@@ -27,18 +27,18 @@ def spmv(graph_blocks: dict, x: jnp.ndarray, *, tile: int,
         jnp.asarray(x, jnp.float32),
         tile=tile,
         max_tiles_per_row=graph_blocks["max_tiles_per_row"],
-        interpret=_INTERPRET if interpret is None else interpret)
+        interpret=interpret)
 
 
 def attention(q, k, v, *, causal=True, window=0, softcap=0.0,
               interpret: bool | None = None):
     return flash_attention(
         q, k, v, causal=causal, window=window, softcap=softcap,
-        interpret=_INTERPRET if interpret is None else interpret)
+        interpret=interpret)
 
 
 def gla(q, k, v, w, u=None, *, chunk=64, include_current=True,
         interpret: bool | None = None):
     return gla_chunked(
         q, k, v, w, u, chunk=chunk, include_current=include_current,
-        interpret=_INTERPRET if interpret is None else interpret)
+        interpret=interpret)

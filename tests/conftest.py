@@ -1,0 +1,6 @@
+"""Make ``python -m pytest`` work without a manual PYTHONPATH: the package
+lives in src/ (no installation step in this repo)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

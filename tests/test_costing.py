@@ -44,10 +44,16 @@ def build(scan_unroll):
              "step": jax.ShapeDtypeStruct((), jnp.int32)}
     return model, step, state, batch, params_struct
 
+def flops_of(compiled):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # older jax returns [dict]
+        ca = ca[0]
+    return float(ca.get("flops"))
+
 model, step, state, batch, params_struct = build(1)
 with mesh:
     c1 = jax.jit(step).lower(state, batch).compile()
-f1 = float(c1.cost_analysis().get("flops"))
+f1 = flops_of(c1)
 body = stage_body_costs(model, params_struct, rules, mesh, kind="train",
                         batch_struct=batch,
                         collective_fn=collective_bytes_from_hlo)
@@ -57,7 +63,7 @@ corrected = corrected_totals(
 _, step_u, state_u, batch_u, _ = build(True)
 with mesh:
     cu = jax.jit(step_u).lower(state_u, batch_u).compile()
-fu = float(cu.cost_analysis().get("flops"))
+fu = flops_of(cu)
 
 ratio = corrected / fu
 print(f"scanned={f1:.4e} corrected={corrected:.4e} unrolled={fu:.4e} "

@@ -125,3 +125,84 @@ def test_gla_kernel_matches_model_core():
                                np.asarray(y_model), rtol=2e-4, atol=2e-4)
     np.testing.assert_allclose(np.asarray(s_kern).reshape(b, h, d, d),
                                np.asarray(s_model), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# selective monoid combine kernel (the engine's chunk-scheduled phase 4)
+# ---------------------------------------------------------------------------
+
+def _combine_setup(seed=0, T=8, R=3, C=4, e=150):
+    from repro.kernels.csr_spmv import build_tile_struct
+    rng = np.random.default_rng(seed)
+    n, m = R * T, C * T
+    src = rng.integers(0, m, e)
+    dst = rng.integers(0, n, e)
+    w = rng.random(e).astype(np.float32)
+    slot_row, slot_col, rp, eslot = build_tile_struct(
+        dst // T, src // T, R, C)
+    mask = rng.random(m) < 0.6
+    x = rng.random(m).astype(np.float32)
+    # compact live tiles (live = column block has >=1 present source)
+    from repro.kernels.csr_spmv import compact_live_tiles
+    col_has = np.array([mask[c * T:(c + 1) * T].any() for c in range(C)])
+    live = col_has[slot_col]
+    idx, col, cnt = compact_live_tiles(slot_row, slot_col, rp, live, R)
+    mt = max(1, int((rp[1:] - rp[:-1]).max()))
+    return (src, dst, w, slot_row, slot_col, rp, eslot, mask, x,
+            idx, col, cnt, mt, n, T, R, C)
+
+
+def test_block_csr_combine_add_selective():
+    from repro.kernels.csr_spmv import block_csr_combine
+    (src, dst, w, slot_row, slot_col, rp, eslot, mask, x,
+     idx, col, cnt, mt, n, T, R, C) = _combine_setup()
+    S = slot_row.shape[0]
+    tv = np.zeros((S, T, T), np.float32)
+    np.add.at(tv, (eslot, dst % T, src % T), w)
+    tc = np.zeros((S, T, T), np.float32)
+    np.add.at(tc, (eslot, dst % T, src % T), 1.0)
+    xm = np.where(mask, x, 0).astype(np.float32)
+    val, hc = block_csr_combine(
+        jnp.asarray(rp), jnp.asarray(idx), jnp.asarray(col),
+        jnp.asarray(cnt), jnp.asarray(tv), None, jnp.asarray(tc),
+        jnp.asarray(xm), jnp.asarray(mask, jnp.float32),
+        mode="add", tile=T, max_tiles_per_row=mt, identity=0.0,
+        interpret=True)
+    ref = np.zeros(n)
+    refc = np.zeros(n)
+    for s_, d_, w_ in zip(src, dst, w):
+        if mask[s_]:
+            ref[d_] += w_ * x[s_]
+            refc[d_] += 1
+    np.testing.assert_allclose(np.asarray(val), ref, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hc), refc)
+
+
+@pytest.mark.parametrize("mode", ["min", "max"])
+def test_block_csr_combine_extremum_selective(mode):
+    from repro.kernels.csr_spmv import block_csr_combine
+    (src, dst, w, slot_row, slot_col, rp, eslot, mask, x,
+     idx, col, cnt, mt, n, T, R, C) = _combine_setup(seed=1)
+    S = slot_row.shape[0]
+    big = float(np.finfo(np.float32).max)
+    ident = big if mode == "min" else -big
+    tb = np.full((S, T, T), ident, np.float32)
+    scat = np.minimum if mode == "min" else np.maximum
+    scat.at(tb, (eslot, dst % T, src % T), w)
+    tc = np.zeros((S, T, T), np.float32)
+    np.add.at(tc, (eslot, dst % T, src % T), 1.0)
+    xb = np.where(mask, x, ident).astype(np.float32)
+    val, hc = block_csr_combine(
+        jnp.asarray(rp), jnp.asarray(idx), jnp.asarray(col),
+        jnp.asarray(cnt), None, jnp.asarray(tb), jnp.asarray(tc),
+        jnp.asarray(xb), jnp.asarray(mask, jnp.float32),
+        mode=mode, tile=T, max_tiles_per_row=mt, identity=ident,
+        interpret=True)
+    comb = min if mode == "min" else max
+    ref = np.full(n, ident)
+    for s_, d_, w_ in zip(src, dst, w):
+        if mask[s_]:
+            ref[d_] = comb(ref[d_], x[s_] + w_)
+    has = np.asarray(hc)[:n] > 0
+    np.testing.assert_allclose(np.asarray(val)[:n][has], ref[has], atol=1e-5)
+    assert (np.abs(np.asarray(val)[:n][~has]) >= 1e37).all()

@@ -1,5 +1,8 @@
 """Hypothesis property tests for the two-level partition invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import build_dist_graph, build_formats, make_spec
