@@ -5,15 +5,23 @@ Paper's headline numbers on RMAT-32 PR x 5 iterations, 8 nodes:
     filtering vs one update per active edge);
   - adaptive CSR/DCSR reduces edge I/O to 38.6%.
 We reproduce both ratios structurally on an RMAT graph that fits this host.
+
+The OOC section runs the same PageRank on the disk-backed executor and
+reports the *measured* storage traffic next to the analytic model — equal
+columns are the fully-out-of-core claim ("only necessary disk requests"),
+made by the storage tier itself rather than by a cost model.
 """
 from __future__ import annotations
+
+import tempfile
 
 import numpy as np
 
 from benchmarks.engines_common import bench_graph, build_engine, csv_row, timed
-from repro.core import EngineConfig, storage_summary
+from repro.core import ChunkStore, Engine, EngineConfig, storage_summary
 from repro.core import algorithms as alg
 from repro.core.baselines import ChaosLikeEngine
+from repro.core.engine import MEASURED_PAIRS
 
 
 def main(scale=11) -> list[str]:
@@ -53,6 +61,20 @@ def main(scale=11) -> list[str]:
         c.edge_read_bytes, 1)
     rows.append(csv_row("f5/edge_bytes_ratio_vs_chaos", 0.0,
                         f"ratio={edge_ratio:.4f}"))
+
+    # fully-out-of-core: measured disk traffic vs the analytic model,
+    # reusing the partitioning + formats already built for the DFO run
+    with tempfile.TemporaryDirectory() as root:
+        store = ChunkStore.build(eng.graph, eng.fmts, root)
+        ooc = Engine(eng.graph, eng.fmts, EngineConfig(executor="ooc"),
+                     store=store)
+        (pr_o, st_o), t_o = timed(lambda: alg.pagerank(ooc, 5))
+        np.testing.assert_allclose(pr, pr_o, rtol=1e-4, atol=1e-7)
+        for mk, ak in MEASURED_PAIRS:
+            rows.append(csv_row(
+                f"f5/ooc/{ak}", t_o if ak == "chunks_read" else 0.0,
+                f"modeled={st_o.counters[ak]:.0f};"
+                f"measured={st_o.counters[mk]:.0f}"))
     return rows
 
 

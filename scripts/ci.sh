@@ -6,6 +6,13 @@
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
+# The OOC parity suite (tests/test_chunkstore.py) writes chunk stores and
+# vertex spills via pytest's tmp factory; point TMPDIR at a dedicated
+# scratch dir so every byte is reclaimed even if pytest is killed mid-run.
+SCRATCH=$(mktemp -d)
+trap 'rm -rf "$SCRATCH"' EXIT
+export TMPDIR="$SCRATCH"
+
 OUT=$(mktemp)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
     --continue-on-collection-errors 2>&1 | tee "$OUT"
@@ -43,4 +50,14 @@ if [ -n "$NEW" ]; then
     echo "$NEW" >&2
     exit 1
 fi
+
+# The OOC measured-vs-modeled parity suite is the fully-out-of-core gate;
+# run it standalone so a regression there fails loudly even when someone
+# edits the baseline file.
+if ! PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
+    tests/test_chunkstore.py; then
+    echo "CI FAIL: OOC parity suite (tests/test_chunkstore.py)" >&2
+    exit 1
+fi
+
 echo "CI OK: no regressions vs baseline ($(wc -l < "$CURRENT") known failures)"

@@ -34,6 +34,8 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.utils import atomic_write_json
+
 DEFAULT_BLOCK_BYTES = 1 << 22       # 4 MiB
 
 
@@ -48,10 +50,22 @@ def _flatten_with_paths(tree: Any) -> dict[str, np.ndarray]:
 
 
 class BlockStore:
-    """Content-addressed block storage with manifest checkpoints."""
+    """Content-addressed block storage with manifest checkpoints.
+
+    ``keep`` retention semantics (every ``save`` prunes):
+      * ``keep >= 1`` — retain the ``keep`` most recent manifests; older
+        manifests are deleted and blocks reachable from no retained
+        manifest are garbage-collected.
+      * ``keep == 0`` — retention disabled: every manifest (and therefore
+        every block) is kept forever.  Explicitly *not* "keep nothing":
+        a store that deleted its own latest checkpoint could never
+        recover, so 0 is reserved for the unbounded mode.
+    """
 
     def __init__(self, root: str, keep: int = 2,
                  block_bytes: int = DEFAULT_BLOCK_BYTES):
+        if keep < 0:
+            raise ValueError(f"keep must be >= 0 (0 = retain all), got {keep}")
         self.root = root
         self.keep = keep
         self.block_bytes = block_bytes
@@ -99,10 +113,7 @@ class BlockStore:
                 "blocks": hashes,
             }
         mpath = os.path.join(self.root, "manifests", f"{step:012d}.json")
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(mpath))
-        with os.fdopen(fd, "w") as f:
-            json.dump(manifest, f)
-        os.replace(tmp, mpath)            # atomic commit point
+        atomic_write_json(mpath, manifest)   # atomic commit point
         self._gc()
         return dict(blocks_written=written, blocks_reused=reused,
                     bytes_written=bytes_written)
@@ -131,8 +142,10 @@ class BlockStore:
 
     # -- reference-counted GC -------------------------------------------------
     def _gc(self) -> None:
+        if self.keep == 0:
+            return                        # unbounded retention: nothing to do
         steps = self.steps()
-        drop = steps[:-self.keep] if self.keep else []
+        drop = steps[:-self.keep]
         for s in drop:
             os.remove(os.path.join(self.root, "manifests", f"{s:012d}.json"))
         live: set[str] = set()

@@ -1,10 +1,11 @@
 """DFOGraph core: two-level column-oriented partitioning, adaptive CSR/DCSR,
 filtered push message passing, signal/slot engine (the paper's contribution).
 
-Layering (DESIGN.md §3): ``phases`` holds the four ProcessEdges phase
-implementations on one partition's local view; ``executor`` composes them
-into the LOCAL and SHARD_MAP executors; ``engine`` is the public signal/slot
-API on top.
+Layering (DESIGN.md §1, §6): ``phases`` holds the four ProcessEdges phase
+implementations on one partition's local view; ``chunkstore`` is the storage
+tier (on-disk chunk store, vertex spill, and the ChunkSource contract);
+``executor`` composes phases + storage into the LOCAL, SHARD_MAP, and OOC
+executors; ``engine`` is the public signal/slot API on top.
 """
 from repro.core.partition import (  # noqa: F401
     TwoLevelSpec, DistGraph, make_spec, build_dist_graph,
@@ -14,6 +15,10 @@ from repro.core.partition import (  # noqa: F401
 from repro.core.formats import (  # noqa: F401
     BlockTiles, BlockTilesHost, ChunkFormats, build_block_tiles,
     build_formats, storage_summary,
+)
+from repro.core.chunkstore import (  # noqa: F401
+    ChunkPrefetcher, ChunkStore, DiskChunkSource, HBMChunkSource,
+    VertexSpill,
 )
 from repro.core.engine import (  # noqa: F401
     ADD, MIN, MAX, Engine, EngineConfig, Monoid, accumulate_counters,

@@ -1,0 +1,539 @@
+"""On-disk storage tier for fully-out-of-core execution (paper §4.1–§4.4).
+
+This is the layer that turns the engine's I/O *model* into an I/O *system*:
+edge chunks and vertex arrays live on disk, the executor issues only the
+reads the selective schedule marks necessary, and every request is counted
+in **measured** bytes that the engine cross-checks against the analytic
+counters (DESIGN.md §6).
+
+Three pieces:
+
+* :class:`ChunkStore` — every (src partition ``p``, dst batch ``k``) edge
+  chunk of destination partition ``q`` is serialized into ``edges_q{q}.bin``
+  as ``[DCSR pairs | CSR idx (when accepted) | payload]`` with the format
+  decision of :func:`repro.core.formats.build_formats` baked into an
+  atomically-written JSON manifest.  The section sizes equal the analytic
+  model's ``dcsr_bytes`` / ``csr_bytes`` *exactly* (the payload is shared by
+  both representations), so measured reads can match modeled reads byte for
+  byte.  Reads go through a memory map and are decoded back to the
+  ``(src_local, dst_local, data)`` triples of the in-HBM edge arrays —
+  bit-identical round trip.
+
+* :class:`VertexSpill` — per-batch disk residence for the vertex state
+  arrays (one memmap per array, padded to whole batches) plus the active
+  bitmap file.  The OOC executor reads only batches containing active
+  vertices at generate time and only updated batches at apply time (paper
+  §4.4), and writes back only updated batches.
+
+* :class:`ChunkPrefetcher` — a thread-based double-buffered pipeline: while
+  the executor combines dst-batch *i*, the worker thread reads and decodes
+  the chunks of dst-batch *i+1* from the store (disk I/O overlapped with the
+  Pallas combine).
+
+The **ChunkSource contract** (DESIGN.md §6) is how executors see storage:
+:class:`HBMChunkSource` adapts the existing device arrays (LOCAL /
+SHARD_MAP read everything from HBM and account analytically),
+:class:`DiskChunkSource` adapts the chunk store (OOC streams chunks and
+measures).  Dispatch metadata (the DCSR dispatching graph of §4.2) and
+per-chunk format stats stay memory-resident in both — like the paper's
+in-memory bitmaps, they are control state, not bulk data.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import queue
+import threading
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.formats import ChunkFormats
+from repro.core.partition import DistGraph
+from repro.utils import atomic_write_json, ceil_div
+
+EDGE_DT = np.dtype([("dst", "<i4"), ("data", "<f4")])   # 8 B per edge
+PAIR_DT = np.dtype([("src", "<i4"), ("idx", "<i4")])    # 8 B per DCSR entry
+MANIFEST_NAME = "manifest.json"
+MANIFEST_VERSION = 1
+
+
+def bitmap_nbytes(num_rows: int, num_cols: int) -> int:
+    """Exact on-disk size of a [rows, cols] bitmap packed per row."""
+    return num_rows * ceil_div(num_cols, 8)
+
+
+# ---------------------------------------------------------------------------
+# ChunkStore: edge chunks on disk
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _ChunkLayout:
+    """Per-destination chunk directory decoded from the manifest."""
+    offset: np.ndarray     # int64 [P, B], -1 for empty chunks
+    nnz: np.ndarray        # int64 [P, B] DCSR pair count
+    edges: np.ndarray      # int64 [P, B] payload entries
+    has_csr: np.ndarray    # bool  [P, B]
+
+
+class ChunkStore:
+    """Disk-resident (src partition, dst batch) edge chunks + manifest.
+
+    File layout per destination partition q (``edges_q{q}.bin``): chunks are
+    laid out in (p, k) order; each nonempty chunk occupies one contiguous
+    region::
+
+        [DCSR pairs: nnz * 8 B] [CSR idx: (|V_p| + 1) * 4 B, if has_csr]
+        [payload: E * 8 B  ((dst, data) per edge, CSR-by-source order)]
+
+    A DCSR read touches ``pairs + payload`` = the model's ``dcsr_bytes``; a
+    CSR read touches ``idx + payload`` = ``csr_bytes``.  Reads are mmap
+    slices; measured counters (``chunks_read`` / ``bytes_read``) are
+    maintained under a lock so the prefetch thread can read concurrently.
+    """
+
+    def __init__(self, root: str, manifest: dict):
+        self.root = root
+        self.manifest = manifest
+        p_cnt = manifest["num_partitions"]
+        b_cnt = manifest["num_batches"]
+        self.num_partitions = p_cnt
+        self.num_batches = b_cnt
+        self.part_sizes = np.asarray(manifest["partition_sizes"], np.int64)
+        self._layout = []
+        for q in range(p_cnt):
+            offset = np.full((p_cnt, b_cnt), -1, np.int64)
+            nnz = np.zeros((p_cnt, b_cnt), np.int64)
+            edges = np.zeros((p_cnt, b_cnt), np.int64)
+            has_csr = np.zeros((p_cnt, b_cnt), bool)
+            for p, k, off, nz, ne, hc in manifest["chunks"][q]:
+                offset[p, k] = off
+                nnz[p, k] = nz
+                edges[p, k] = ne
+                has_csr[p, k] = bool(hc)
+            self._layout.append(_ChunkLayout(offset, nnz, edges, has_csr))
+        self._mm: dict[int, np.memmap] = {}
+        self._lock = threading.Lock()
+        self.chunks_read = 0
+        self.bytes_read = 0
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def build(cls, g: DistGraph, fmts: ChunkFormats, root: str) -> "ChunkStore":
+        """Preprocessing: serialize every nonempty chunk; commit manifest."""
+        spec = g.spec
+        p_cnt, b_cnt = spec.num_partitions, spec.num_batches
+        part_sizes = spec.partition_sizes()
+        os.makedirs(root, exist_ok=True)
+        chunk_ptr = np.asarray(g.chunk_ptr)
+        src_l = np.asarray(g.edge_src_local)
+        dst_l = np.asarray(g.edge_dst_local)
+        data = np.asarray(g.edge_data)
+        has_csr = np.asarray(fmts.has_csr)
+
+        chunks_meta: list[list] = []
+        for q in range(p_cnt):
+            meta_q = []
+            off = 0
+            with open(os.path.join(root, f"edges_q{q}.bin"), "wb") as f:
+                for p in range(p_cnt):
+                    v_src = int(part_sizes[p])
+                    for k in range(b_cnt):
+                        s = int(chunk_ptr[q, p, k])
+                        e = int(chunk_ptr[q, p, k + 1])
+                        if e <= s:
+                            continue
+                        seg_src = src_l[q, s:e]
+                        # DCSR pairs: run-length by src (edges are sorted by
+                        # (src, dst) inside a chunk — partition.py's order)
+                        change = np.flatnonzero(np.diff(seg_src)) + 1
+                        starts = np.concatenate([[0], change]).astype(np.int32)
+                        pairs = np.empty(starts.shape[0], PAIR_DT)
+                        pairs["src"] = seg_src[starts]
+                        pairs["idx"] = starts
+                        f.write(pairs.tobytes())
+                        nbytes = pairs.nbytes
+                        if has_csr[q, p, k]:
+                            idx = np.zeros(v_src + 1, np.int32)
+                            np.add.at(idx, seg_src + 1, 1)
+                            idx = np.cumsum(idx, dtype=np.int32)
+                            f.write(idx.tobytes())
+                            nbytes += idx.nbytes
+                        payload = np.empty(e - s, EDGE_DT)
+                        payload["dst"] = dst_l[q, s:e]
+                        payload["data"] = data[q, s:e]
+                        f.write(payload.tobytes())
+                        nbytes += payload.nbytes
+                        meta_q.append([p, k, off, int(pairs.shape[0]),
+                                       int(e - s), bool(has_csr[q, p, k])])
+                        off += nbytes
+            chunks_meta.append(meta_q)
+
+        manifest = dict(
+            version=MANIFEST_VERSION,
+            num_partitions=p_cnt,
+            num_batches=b_cnt,
+            v_max=spec.v_max,
+            batch_size=spec.batch_size,
+            partition_sizes=[int(x) for x in part_sizes],
+            inflate_ratio=fmts.inflate_ratio,
+            gamma=fmts.gamma,
+            chunks=chunks_meta,
+        )
+        atomic_write_json(os.path.join(root, MANIFEST_NAME), manifest)
+        return cls(root, manifest)
+
+    @classmethod
+    def open(cls, root: str) -> "ChunkStore":
+        with open(os.path.join(root, MANIFEST_NAME)) as f:
+            manifest = json.load(f)
+        if manifest.get("version") != MANIFEST_VERSION:
+            raise ValueError(
+                f"chunkstore manifest version {manifest.get('version')!r} "
+                f"!= {MANIFEST_VERSION}")
+        return cls(root, manifest)
+
+    # -- reads ---------------------------------------------------------------
+    def _map(self, q: int) -> np.memmap:
+        mm = self._mm.get(q)
+        if mm is None:
+            mm = np.memmap(os.path.join(self.root, f"edges_q{q}.bin"),
+                           dtype=np.uint8, mode="r")
+            self._mm[q] = mm
+        return mm
+
+    def chunk_stored_nbytes(self, q: int, p: int, k: int) -> tuple[int, int]:
+        """(dcsr_read_bytes, csr_read_bytes) for a chunk; csr part is 0 when
+        no CSR representation is stored.  Mirrors the analytic byte model."""
+        lay = self._layout[q]
+        if lay.offset[p, k] < 0:
+            return 0, 0
+        pay = int(lay.edges[p, k]) * EDGE_DT.itemsize
+        dcsr = int(lay.nnz[p, k]) * PAIR_DT.itemsize + pay
+        csr = ((int(self.part_sizes[p]) + 1) * 4 + pay
+               if lay.has_csr[p, k] else 0)
+        return dcsr, csr
+
+    def read_chunk(self, q: int, p: int, k: int, use_csr: bool):
+        """Read one chunk; returns (src_local, dst_local, data, nbytes).
+
+        ``use_csr`` selects the representation actually read (the runtime
+        seek-cost decision); asking for CSR where none is stored is a bug in
+        the caller's format choice and raises.
+        """
+        lay = self._layout[q]
+        off = int(lay.offset[p, k])
+        if off < 0:
+            raise KeyError(f"chunk ({q}, {p}, {k}) is empty")
+        nnz = int(lay.nnz[p, k])
+        n_e = int(lay.edges[p, k])
+        v_src = int(self.part_sizes[p])
+        mm = self._map(q)
+        pairs_nb = nnz * PAIR_DT.itemsize
+        idx_nb = (v_src + 1) * 4 if lay.has_csr[p, k] else 0
+        pay_off = off + pairs_nb + idx_nb
+        payload = np.frombuffer(mm[pay_off:pay_off + n_e * EDGE_DT.itemsize],
+                                dtype=EDGE_DT)
+        if use_csr:
+            if not lay.has_csr[p, k]:
+                raise ValueError(
+                    f"chunk ({q}, {p}, {k}) has no CSR representation")
+            idx = np.frombuffer(mm[off + pairs_nb:off + pairs_nb + idx_nb],
+                                dtype="<i4")
+            src = np.repeat(np.arange(v_src, dtype=np.int32), np.diff(idx))
+            nbytes = idx_nb + payload.nbytes
+        else:
+            pairs = np.frombuffer(mm[off:off + pairs_nb], dtype=PAIR_DT)
+            runs = np.append(pairs["idx"][1:], np.int32(n_e)) - pairs["idx"]
+            src = np.repeat(pairs["src"], runs)
+            nbytes = pairs_nb + payload.nbytes
+        with self._lock:
+            self.chunks_read += 1
+            self.bytes_read += nbytes
+        return (src, payload["dst"].copy(), payload["data"].copy(), nbytes)
+
+    def reset_io_counters(self) -> None:
+        with self._lock:
+            self.chunks_read = 0
+            self.bytes_read = 0
+
+
+# ---------------------------------------------------------------------------
+# VertexSpill: vertex arrays on disk, batch-granular access
+# ---------------------------------------------------------------------------
+
+class VertexSpill:
+    """Per-batch disk residence for the [P, V] vertex state arrays.
+
+    Each array is one memmap of shape [P, num_batches * batch_size] (padded
+    to whole batches so a touched batch is always a full-stride read/write),
+    plus ``active.bits`` — the row-packed active bitmap.  ``load`` is the
+    unmeasured preprocessing sync; ``read``/``write``/``read_bitmap``/
+    ``write_bitmap`` are the measured per-request entry points the OOC
+    executor issues.
+    """
+
+    def __init__(self, root: str, num_partitions: int, num_batches: int,
+                 batch_size: int, v_max: int):
+        self.root = root
+        self.p_cnt = num_partitions
+        self.b_cnt = num_batches
+        self.batch_size = batch_size
+        self.v_max = v_max
+        self.v_pad = num_batches * batch_size
+        os.makedirs(root, exist_ok=True)
+        self._mm: dict[str, np.memmap] = {}
+        self.bytes_read = 0
+        self.bytes_written = 0
+
+    def _path(self, name: str) -> str:
+        return os.path.join(self.root, f"vertex_{name}.bin")
+
+    def load(self, state: dict[str, np.ndarray]) -> None:
+        """Full (unmeasured) sync of caller state into the spill files."""
+        self._mm = {}
+        for name, arr in state.items():
+            arr = np.asarray(arr)
+            assert arr.shape == (self.p_cnt, self.v_max), (name, arr.shape)
+            mm = np.memmap(self._path(name), dtype=arr.dtype, mode="w+",
+                           shape=(self.p_cnt, self.v_pad))
+            mm[:, :self.v_max] = arr
+            mm[:, self.v_max:] = np.zeros((), arr.dtype)
+            self._mm[name] = mm
+
+    def names(self) -> list[str]:
+        return list(self._mm)
+
+    def arrays_bytes(self) -> int:
+        """Per-vertex byte width across all spilled arrays (model constant)."""
+        return sum(mm.dtype.itemsize for mm in self._mm.values())
+
+    def state_views(self) -> dict[str, np.ndarray]:
+        """Zero-copy [P, v_max] views of the authoritative on-disk state."""
+        return {name: mm[:, :self.v_max] for name, mm in self._mm.items()}
+
+    def read(self, batch_mask: np.ndarray) -> dict[str, np.ndarray]:
+        """Measured read of every batch with a set bit in ``batch_mask``
+        [P, B].  Returns padded [P, v_pad] copies, zeros where unread."""
+        bs = self.batch_size
+        out = {}
+        touched = int(batch_mask.sum())
+        for name, mm in self._mm.items():
+            arr = np.zeros((self.p_cnt, self.v_pad), mm.dtype)
+            for p, k in zip(*np.nonzero(batch_mask)):
+                arr[p, k * bs:(k + 1) * bs] = mm[p, k * bs:(k + 1) * bs]
+            out[name] = arr
+            self.bytes_read += touched * bs * mm.dtype.itemsize
+        return out
+
+    def write(self, updates: dict[str, np.ndarray], batch_mask: np.ndarray
+              ) -> None:
+        """Measured write-back of touched batches from padded [P, v_pad]
+        (or [P, v_max]) arrays."""
+        bs = self.batch_size
+        touched = int(batch_mask.sum())
+        for name, arr in updates.items():
+            mm = self._mm[name]
+            arr = np.asarray(arr, mm.dtype)
+            if arr.shape[1] != self.v_pad:
+                pad = np.zeros((self.p_cnt, self.v_pad), mm.dtype)
+                pad[:, :arr.shape[1]] = arr
+                arr = pad
+            for p, k in zip(*np.nonzero(batch_mask)):
+                mm[p, k * bs:(k + 1) * bs] = arr[p, k * bs:(k + 1) * bs]
+            self.bytes_written += touched * bs * mm.dtype.itemsize
+
+    def merge_write(self, padded_state: dict[str, np.ndarray],
+                    updates: dict[str, np.ndarray], mask: np.ndarray,
+                    batch_mask: np.ndarray) -> None:
+        """Masked update + measured write-back, the one shared path for
+        ProcessEdges apply and ProcessVertices: ``np.where(mask, update,
+        old)`` into the padded arrays previously returned by :meth:`read`,
+        then write the touched batches.  ``mask``/``updates`` are [P, v_max];
+        arrays without an update are written back unchanged."""
+        for name, v in updates.items():
+            av = padded_state[name]
+            av[:, :self.v_max] = np.where(mask, np.asarray(v, av.dtype),
+                                          av[:, :self.v_max])
+        self.write(padded_state, batch_mask)
+
+    # -- active bitmap -------------------------------------------------------
+    def bitmap_nbytes(self) -> int:
+        return bitmap_nbytes(self.p_cnt, self.v_max)
+
+    def write_bitmap(self, mask: np.ndarray) -> None:
+        packed = np.packbits(np.asarray(mask, bool), axis=1)
+        with open(os.path.join(self.root, "active.bits"), "wb") as f:
+            f.write(packed.tobytes())
+        self.bytes_written += packed.nbytes
+
+    def read_bitmap(self) -> np.ndarray | None:
+        path = os.path.join(self.root, "active.bits")
+        row = ceil_div(self.v_max, 8)
+        if not os.path.exists(path):
+            self.bytes_read += self.p_cnt * row   # a fresh file reads zeros
+            return None
+        packed = np.fromfile(path, np.uint8).reshape(self.p_cnt, row)
+        self.bytes_read += packed.nbytes
+        return np.unpackbits(packed, axis=1)[:, :self.v_max].astype(bool)
+
+    def reset_io_counters(self) -> None:
+        self.bytes_read = 0
+        self.bytes_written = 0
+
+
+# ---------------------------------------------------------------------------
+# ChunkSource contract: how executors see storage (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+class HBMChunkSource:
+    """Everything-resident realization: LOCAL / SHARD_MAP read edge chunks
+    and dispatch metadata straight from device arrays; I/O is analytic."""
+
+    kind = "hbm"
+
+    def __init__(self, graph: DistGraph, fmts: ChunkFormats):
+        self.graph = graph
+        self.fmts = fmts
+
+    DEST_KEYS = ("dcsr_src", "dcsr_part", "dcsr_batch", "dcsr_valid",
+                 "dcsr_ptr", "has_csr", "csr_bytes", "dcsr_bytes")
+    EDGE_KEYS = ("edge_src_part", "edge_src_local", "edge_dst_local",
+                 "edge_data", "edge_valid")
+
+    @staticmethod
+    def _get(obj, key):
+        return obj[key] if isinstance(obj, dict) else getattr(obj, key)
+
+    @classmethod
+    def dest_arrays(cls, fmts) -> dict:
+        """Dispatch-graph + format-decision arrays for phases 3/3.5 (works
+        on a ChunkFormats pytree or a dict of shard-resident arrays)."""
+        return {k: cls._get(fmts, k) for k in cls.DEST_KEYS}
+
+    @classmethod
+    def edge_arrays(cls, g) -> dict:
+        """Per-edge arrays for the segment compute backend."""
+        return {k: cls._get(g, k) for k in cls.EDGE_KEYS}
+
+
+class DiskChunkSource:
+    """Disk realization: bulk edge data streams from a :class:`ChunkStore`;
+    dispatch metadata and format stats stay memory-resident (host numpy)."""
+
+    kind = "disk"
+
+    def __init__(self, store: ChunkStore, graph: DistGraph,
+                 fmts: ChunkFormats):
+        self.store = store
+        self.graph = graph
+        self.fmts = fmts
+        self.dcsr_src = np.asarray(fmts.dcsr_src)
+        self.dcsr_part = np.asarray(fmts.dcsr_part)
+        self.dcsr_batch = np.asarray(fmts.dcsr_batch)
+        self.dcsr_valid = np.asarray(fmts.dcsr_valid)
+        self.dcsr_ptr = np.asarray(fmts.dcsr_ptr)
+        self.has_csr = np.asarray(fmts.has_csr)
+        self.csr_bytes = np.asarray(fmts.csr_bytes, np.float64)
+        self.dcsr_bytes = np.asarray(fmts.dcsr_bytes, np.float64)
+
+    def read_chunk(self, q: int, p: int, k: int, use_csr: bool):
+        return self.store.read_chunk(q, p, k, use_csr)
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered prefetch pipeline
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BatchWork:
+    """One dst-batch work item: the chunks the selective schedule marked
+    active, decoded and concatenated by the prefetch thread."""
+    q: int
+    k: int
+    src: np.ndarray        # int32 [E] source local ids
+    part: np.ndarray       # int32 [E] source partitions
+    dst: np.ndarray        # int32 [E] destination local ids
+    data: np.ndarray       # f32  [E] edge payloads
+    nbytes: int            # measured bytes read for this item
+    n_chunks: int
+
+
+class ChunkPrefetcher:
+    """Thread-based double-buffered chunk reader.
+
+    ``schedule`` is a list of ``(q, k, [(p, use_csr), ...])`` items in
+    processing order; the worker thread keeps at most ``depth`` decoded
+    items ahead of the consumer, so disk reads for batch *i+1* overlap the
+    combine of batch *i*.  Worker exceptions re-raise in the consumer.
+    """
+
+    _DONE = object()
+
+    def __init__(self, source: DiskChunkSource, schedule, depth: int = 2):
+        self._source = source
+        self._schedule = schedule
+        self._queue: queue.Queue = queue.Queue(maxsize=max(1, depth))
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _put(self, item) -> bool:
+        """Blocking put that aborts when the consumer closed the pipeline
+        (so an abandoned iteration never strands the worker on a full
+        queue, leaking the thread + its decoded buffers)."""
+        while not self._stop.is_set():
+            try:
+                self._queue.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _run(self):
+        try:
+            for q, k, chunks in self._schedule:
+                srcs, parts, dsts, datas = [], [], [], []
+                nbytes = 0
+                for p, use_csr in chunks:
+                    s, d, w, nb = self._source.read_chunk(q, p, k, use_csr)
+                    srcs.append(s)
+                    parts.append(np.full(s.shape[0], p, np.int32))
+                    dsts.append(d)
+                    datas.append(w)
+                    nbytes += nb
+                cat = lambda xs, dt: (np.concatenate(xs) if xs
+                                      else np.zeros(0, dt))
+                if not self._put(BatchWork(
+                        q=q, k=k, src=cat(srcs, np.int32),
+                        part=cat(parts, np.int32), dst=cat(dsts, np.int32),
+                        data=cat(datas, np.float32), nbytes=nbytes,
+                        n_chunks=len(chunks))):
+                    return
+            self._put(self._DONE)
+        except BaseException as exc:   # propagate to the consumer
+            self._put(exc)
+
+    def close(self) -> None:
+        """Tear the pipeline down (idempotent; called automatically when
+        iteration ends — normally, via break, or via an exception)."""
+        self._stop.set()
+        while True:                    # unblock a worker stuck on put()
+            try:
+                self._queue.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join()
+
+    def __iter__(self) -> Iterator[BatchWork]:
+        try:
+            while True:
+                item = self._queue.get()
+                if item is self._DONE:
+                    return
+                if isinstance(item, BaseException):
+                    raise item
+                yield item
+        finally:
+            self.close()

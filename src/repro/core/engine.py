@@ -43,10 +43,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+import os
+
 from repro.core import executor as _executor
+from repro.core.chunkstore import (
+    ChunkStore, DiskChunkSource, HBMChunkSource, VertexSpill,
+)
 from repro.core.formats import ChunkFormats, build_block_tiles
 from repro.core.partition import DistGraph
-from repro.core.phases import batch_touched
+from repro.core.phases import batch_touched, bitmap_model_bytes
 
 State = Dict[str, jnp.ndarray]      # name -> [P, V] stacked vertex arrays
 
@@ -85,6 +90,10 @@ class EngineConfig:
     account_io: bool = True                # maintain modeled I/O counters
     compute_backend: str = "segment"       # "segment" | "block_csr"
     block_tile: int = 8                    # T for the block_csr backend
+    executor: str = "auto"                 # "auto" (local / shard_map by
+    #                                        mesh) | "ooc" (needs a store)
+    verify_io: bool = True                 # OOC: raise if measured != model
+    ooc_prefetch_depth: int = 2            # double-buffered by default
 
 
 COUNTER_KEYS = (
@@ -93,6 +102,21 @@ COUNTER_KEYS = (
     "msgs_dispatched", "edges_touched", "chunks_read",
     "edge_read_bytes", "vertex_read_bytes", "vertex_write_bytes",
     "msg_disk_bytes", "seek_cost",
+)
+
+# Measured twins of the modeled I/O counters, reported by the OOC executor
+# (what the storage tier actually served) and cross-checked against the
+# analytic model when EngineConfig.verify_io is on.
+MEASURED_KEYS = (
+    "measured_chunks_read", "measured_edge_read_bytes",
+    "measured_vertex_read_bytes", "measured_vertex_write_bytes",
+)
+
+MEASURED_PAIRS = (
+    ("measured_chunks_read", "chunks_read"),
+    ("measured_edge_read_bytes", "edge_read_bytes"),
+    ("measured_vertex_read_bytes", "vertex_read_bytes"),
+    ("measured_vertex_write_bytes", "vertex_write_bytes"),
 )
 
 
@@ -116,7 +140,8 @@ class Engine:
 
     def __init__(self, graph: DistGraph, fmts: ChunkFormats,
                  config: EngineConfig = EngineConfig(),
-                 mesh: Mesh | None = None, axis: str = "part"):
+                 mesh: Mesh | None = None, axis: str = "part",
+                 store: ChunkStore | None = None):
         self.graph = graph
         self.fmts = fmts
         self.config = config
@@ -129,6 +154,35 @@ class Engine:
             gid[p] = bounds[p] + np.arange(spec.v_max)
         self.global_id = jnp.asarray(gid)           # [P, V]
         self._distributed = mesh is not None
+        self.source = HBMChunkSource(graph, fmts)
+        self.counter_keys = COUNTER_KEYS
+        if config.executor == "ooc":
+            self.counter_keys = COUNTER_KEYS + MEASURED_KEYS
+        # OOC executor state (DESIGN.md §6)
+        if config.executor not in ("auto", "ooc"):
+            raise ValueError(f"unknown executor: {config.executor!r}")
+        self._ooc = config.executor == "ooc"
+        self.store = store
+        if self._ooc:
+            if self._distributed:
+                raise ValueError("executor='ooc' is single-host; the "
+                                 "SHARD_MAP executor is selected by `mesh`")
+            if store is None:
+                raise ValueError("executor='ooc' requires a ChunkStore "
+                                 "(ChunkStore.build(graph, fmts, root))")
+            if not config.enable_adaptive_formats:
+                raise ValueError(
+                    "executor='ooc' requires enable_adaptive_formats: the "
+                    "non-adaptive model prices DCSR-only chunks at 0 bytes, "
+                    "which no physical read can match")
+            if not config.account_io:
+                raise ValueError("executor='ooc' requires account_io (the "
+                                 "measured/modeled cross-check needs both)")
+            self.ooc_source = DiskChunkSource(store, graph, fmts)
+            self.spill = VertexSpill(
+                os.path.join(store.root, "vertex"), spec.num_partitions,
+                spec.num_batches, spec.batch_size, spec.v_max)
+            self._ooc_last_state = None
         # block_csr backend state (built lazily on first use)
         self._block = None
         self._block_host = None
@@ -141,23 +195,14 @@ class Engine:
             self._shard = NamedSharding(mesh, P(axis))
             put = lambda x: jax.device_put(x, self._shard)
             self._garrs = dict(
-                edge_src_part=put(graph.edge_src_part),
-                edge_src_local=put(graph.edge_src_local),
-                edge_dst_local=put(graph.edge_dst_local),
-                edge_data=put(graph.edge_data),
-                edge_valid=put(graph.edge_valid),
                 vertex_valid=put(graph.vertex_valid),
                 need=put(graph.need),
-                dcsr_src=put(fmts.dcsr_src),
-                dcsr_part=put(fmts.dcsr_part),
-                dcsr_batch=put(fmts.dcsr_batch),
-                dcsr_valid=put(fmts.dcsr_valid),
-                dcsr_ptr=put(fmts.dcsr_ptr),
-                has_csr=put(fmts.has_csr),
-                csr_bytes=put(fmts.csr_bytes),
-                dcsr_bytes=put(fmts.dcsr_bytes),
                 need_counts=put(graph.need_counts),
                 global_id=put(self.global_id),
+                **{k: put(v) for k, v in
+                   HBMChunkSource.dest_arrays(fmts).items()},
+                **{k: put(v) for k, v in
+                   HBMChunkSource.edge_arrays(graph).items()},
             )
 
     def init_state(self, **arrays: jnp.ndarray) -> State:
@@ -165,6 +210,31 @@ class Engine:
         if self._distributed:
             state = {k: jax.device_put(v, self._shard) for k, v in state.items()}
         return state
+
+    # -- OOC state residency ------------------------------------------------
+    def _sync_ooc_state(self, state: State) -> None:
+        """Make the spill authoritative for ``state``.
+
+        States returned by OOC calls are recognized by identity and skipped
+        (they are views of the spill already); anything else — the initial
+        ``init_state`` dict or caller-constructed arrays — is loaded as an
+        unmeasured preprocessing sync."""
+        if state is self._ooc_last_state:
+            return
+        self.spill.load({k: np.asarray(v) for k, v in state.items()})
+        self.spill.write_bitmap(np.asarray(self.graph.vertex_valid))
+        self.spill.reset_io_counters()
+
+    def _check_measured(self, counters: dict) -> None:
+        """Cross-check measured storage traffic against the analytic model
+        (the fully-out-of-core claim, enforced every call)."""
+        if not self.config.verify_io:
+            return
+        for mk, ak in MEASURED_PAIRS:
+            if abs(float(counters[mk]) - float(counters[ak])) > 0.5:
+                raise RuntimeError(
+                    f"OOC measured/model I/O mismatch: {mk}="
+                    f"{counters[mk]:.1f} vs {ak}={counters[ak]:.1f}")
 
     # -- block_csr backend plumbing ----------------------------------------
     def _ensure_block(self):
@@ -174,26 +244,33 @@ class Engine:
             if self._distributed:
                 self._block_garrs = jax.device_put(self._block, self._shard)
 
-    def _block_slot_values(self, slot_fn, monoid):
-        """Probe + lower (slot_fn, monoid) to value tiles; returns
-        (mode, a_const, device arrays) or None for segment fallback."""
-        self._ensure_block()
+    def _probe_slot(self, slot_fn, monoid):
+        """Cached affine-slot probe; warns once and returns None when the
+        slot cannot be lowered to tiles (segment fallback)."""
         pkey = _executor.slot_probe_key(slot_fn, monoid)
         if pkey is not None and pkey in self._probe_cache:
             probe = self._probe_cache[pkey]
         else:
-            probe = _executor.probe_slot_affine(slot_fn, monoid,
-                                                self._block_host)
+            probe = _executor.probe_slot_affine(
+                slot_fn, monoid, np.asarray(self.graph.edge_data),
+                np.asarray(self.graph.edge_valid))
             if pkey is not None:
                 self._probe_cache[pkey] = probe
+        if probe is None and not self._warned_slot_fallback:
+            warnings.warn(
+                "compute_backend='block_csr' requires slot(m, d) affine "
+                "in m (constant slope for min/max); falling back to the "
+                "segment backend for this slot function.")
+            self._warned_slot_fallback = True
+        return probe
+
+    def _block_slot_values(self, slot_fn, monoid):
+        """Probe + lower (slot_fn, monoid) to value tiles; returns
+        (mode, a_const, device arrays) or None for segment fallback."""
+        probe = self._probe_slot(slot_fn, monoid)
         if probe is None:
-            if not self._warned_slot_fallback:
-                warnings.warn(
-                    "compute_backend='block_csr' requires slot(m, d) affine "
-                    "in m (constant slope for min/max); falling back to the "
-                    "segment backend for this slot function.")
-                self._warned_slot_fallback = True
             return None
+        self._ensure_block()
         key, mode, a_const, a, b = probe
         if key not in self._block_vals_cache:
             arrays_np = _executor.build_value_tiles(
@@ -216,6 +293,8 @@ class Engine:
         no active vertex are skipped in the I/O model (paper §4.4)."""
         g, cfg = self.graph, self.config
         spec = g.spec
+        if self._ooc:
+            return self._ooc_process_vertices(state, work_fn, active)
 
         def step(state, active, vertex_valid, global_id):
             amask = vertex_valid if active is None else (active & vertex_valid)
@@ -230,7 +309,7 @@ class Engine:
                                    for v in state.values())
                 touched = batch_touched(amask, spec.batch_size)
                 counters["vertex_read_bytes"] = (
-                    touched * arrays_bytes + amask.size / 8.0)
+                    touched * arrays_bytes + bitmap_model_bytes(amask))
                 counters["vertex_write_bytes"] = touched * arrays_bytes
             return new_state, total, counters
 
@@ -256,6 +335,43 @@ class Engine:
         return fn(state, active, self._garrs["vertex_valid"],
                   self._garrs["global_id"])
 
+    def _ooc_process_vertices(self, state, work_fn, active):
+        """ProcessVertices against the disk-resident vertex spill: measured
+        bitmap + active-batch reads, compute, measured write-back."""
+        spec = self.graph.spec
+        bs, b_cnt = spec.batch_size, spec.num_batches
+        v_max = spec.v_max
+        self._sync_ooc_state(state)
+        spill = self.spill
+        sr0, sw0 = spill.bytes_read, spill.bytes_written
+        vertex_valid = np.asarray(self.graph.vertex_valid)
+        amask = (vertex_valid if active is None
+                 else np.asarray(active, bool) & vertex_valid)
+        counters = {k: 0.0 for k in self.counter_keys}
+
+        spill.read_bitmap()                                     # measured
+        batches = _executor._batch_any(amask, bs, b_cnt)
+        rstate_pad = spill.read(batches)                        # measured
+        rstate = {k: v[:, :v_max] for k, v in rstate_pad.items()}
+        updates, ret = work_fn({k: jnp.asarray(v)
+                                for k, v in rstate.items()},
+                               self.global_id)
+        spill.merge_write(rstate_pad, updates, amask, batches)  # measured
+        total = float(np.where(amask,
+                               np.asarray(ret, np.float32), 0.0).sum())
+
+        arrays_bytes = spill.arrays_bytes()
+        touched = float(batches.sum()) * bs
+        counters["vertex_read_bytes"] = (touched * arrays_bytes
+                                         + bitmap_model_bytes(amask))
+        counters["vertex_write_bytes"] = touched * arrays_bytes
+        counters["measured_vertex_read_bytes"] = spill.bytes_read - sr0
+        counters["measured_vertex_write_bytes"] = spill.bytes_written - sw0
+        self._check_measured(counters)
+        new_state = spill.state_views()
+        self._ooc_last_state = new_state
+        return new_state, total, counters
+
     # -- ProcessEdges ---------------------------------------------------------
     def process_edges(self, state: State,
                       signal_fn: Callable[[State, jnp.ndarray], jnp.ndarray],
@@ -275,6 +391,9 @@ class Engine:
         backend = self.config.compute_backend
         if backend not in ("segment", "block_csr"):
             raise ValueError(f"unknown compute_backend: {backend!r}")
+        if self._ooc:
+            return self._ooc_process_edges(state, signal_fn, slot_fn,
+                                           monoid, apply_fn, active, backend)
         mode_meta, vals = None, None
         if backend == "block_csr":
             lowered = self._block_slot_values(slot_fn, monoid)
@@ -311,3 +430,32 @@ class Engine:
                 self._pe_cache[cache_key] = fn
         bt = self._block_garrs if backend == "block_csr" else None
         return fn(state, active, self._garrs, bt, vals)
+
+    def _ooc_process_edges(self, state, signal_fn, slot_fn, monoid,
+                           apply_fn, active, backend):
+        """OOC realization of :meth:`process_edges` (DESIGN.md §6)."""
+        mode_meta = None
+        if backend == "block_csr":
+            probe = self._probe_slot(slot_fn, monoid)
+            if probe is None:
+                backend = "segment"
+            else:
+                _, mode, a_const, _, _ = probe
+                mode_meta = (mode, a_const)
+        keys = tuple(_executor.fn_code_key(f)
+                     for f in (signal_fn, slot_fn, apply_fn))
+        cache_key = None
+        if all(k is not None for k in keys):
+            cache_key = ("ooc",) + keys + (monoid.name, backend, mode_meta)
+        fn = self._pe_cache.get(cache_key) if cache_key is not None else None
+        if fn is None:
+            fn = _executor.make_ooc_pe(
+                self, signal_fn, slot_fn, monoid, apply_fn, backend,
+                mode_meta)
+            if cache_key is not None:
+                self._pe_cache[cache_key] = fn
+        self._sync_ooc_state(state)
+        new_state, new_active, total, counters = fn(active)
+        self._check_measured(counters)
+        self._ooc_last_state = new_state
+        return new_state, new_active, total, counters

@@ -1,6 +1,8 @@
-"""Chunk-scheduled ProcessEdges executors (DESIGN.md §1).
+"""Chunk-scheduled ProcessEdges executors (DESIGN.md §1, §6).
 
-One shared phase pipeline (:mod:`repro.core.phases`) drives both executors:
+One shared phase pipeline (:mod:`repro.core.phases`) drives three executors;
+storage is reached through the ChunkSource contract of
+:mod:`repro.core.chunkstore`:
 
 * ``make_local_pe``  — one device; the partition axis is a leading array
   axis.  The inter-partition exchange is a vmap re-axis (``out_axes=1``
@@ -10,6 +12,12 @@ One shared phase pipeline (:mod:`repro.core.phases`) drives both executors:
 * ``make_sharded_pe`` — the partition axis is a mesh axis; the exchange is
   a real ``lax.all_to_all`` on the interconnect and counters are reduced
   with ``lax.psum``.
+* ``make_ooc_pe``    — fully-out-of-core: edge chunks and vertex arrays are
+  disk-resident (:class:`~repro.core.chunkstore.ChunkStore` /
+  :class:`~repro.core.chunkstore.VertexSpill`); the executor walks
+  dst-batches streaming only the chunks the selective schedule marks
+  active, overlapping reads with compute via a double-buffered prefetch
+  thread, and reports **measured** I/O counters next to the analytic ones.
 
 Phase 4 runs on one of two compute backends (``EngineConfig.compute_backend``):
 
@@ -37,9 +45,13 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import phases
+from repro.core.chunkstore import ChunkPrefetcher, HBMChunkSource
 from repro.core.formats import BlockTilesHost
 from repro.core.partition import row_block_batch_map
-from repro.kernels.csr_spmv import default_interpret
+from repro.kernels.csr_spmv import (
+    block_csr_combine, build_tile_struct, default_interpret,
+)
+from repro.utils import ceil_div
 
 
 def shard_map_compat(f, mesh, in_specs, out_specs):
@@ -82,16 +94,17 @@ def slot_probe_key(slot_fn, monoid):
     return None if key is None else (monoid.name,) + key
 
 
-def probe_slot_affine(slot_fn, monoid, host: BlockTilesHost):
+def probe_slot_affine(slot_fn, monoid, edge_data, edge_valid):
     """Numerically probe ``slot(m, d) = a(d) * m + b(d)``.
 
+    edge_data/edge_valid: host [P, E] arrays (padding masked by edge_valid).
     Returns (cache_key, mode, a_const, a [P, E], b [P, E]) or None when the
     slot is not affine in the message (or, for extremum monoids, when the
     slope varies across edges so per-cell minima cannot be precombined)."""
-    d = jnp.asarray(host.edge_data)
+    d = jnp.asarray(edge_data)
     b = np.asarray(slot_fn(jnp.zeros_like(d), d), np.float32)
     a = np.asarray(slot_fn(jnp.ones_like(d), d), np.float32) - b
-    m = host.edge_valid
+    m = np.asarray(edge_valid)
     # Check the fitted line at non-integer points too: slots built from
     # round/floor/mod are linear at integer probes but not in between.
     for t in (2.0, 0.37282, 2.414214):
@@ -196,8 +209,14 @@ def _dest_phases(d, recv_msg, recv_mask, *, slot_fn, monoid, spec, cfg,
 
 
 def _apply_and_account(state, agg, has, global_id, vertex_valid, apply_fn,
-                       cfg, batch_size):
-    """Shared apply: masked state update + vertex-batch I/O accounting."""
+                       cfg, batch_size, amask):
+    """Shared apply: masked state update + vertex-batch I/O accounting.
+
+    The vertex I/O model (paper §4.4, mirrored byte-for-byte by the OOC
+    executor's spill requests): the generating phase reads the active
+    bitmap plus the vertex arrays of batches containing active vertices;
+    apply reads and writes the arrays of updated batches and writes the
+    new-active bitmap."""
     updates, new_active, ret = apply_fn(state, agg, has, global_id)
     new_state = dict(state)
     upd_mask = has & vertex_valid
@@ -209,9 +228,12 @@ def _apply_and_account(state, agg, has, global_id, vertex_valid, apply_fn,
     if cfg.account_io:
         arrays_bytes = sum(np.dtype(v.dtype).itemsize
                            for v in state.values())
+        bitmap = phases.bitmap_model_bytes(amask)
         touched_v = phases.batch_touched(upd_mask, batch_size)
-        io["vertex_read_bytes"] = touched_v * arrays_bytes
-        io["vertex_write_bytes"] = touched_v * arrays_bytes
+        gen_v = phases.batch_touched(amask, batch_size)
+        io["vertex_read_bytes"] = ((gen_v + touched_v) * arrays_bytes
+                                   + bitmap)
+        io["vertex_write_bytes"] = touched_v * arrays_bytes + bitmap
     return new_state, new_active, total, io
 
 
@@ -269,16 +291,10 @@ def make_local_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
         counters["net_bytes_nofilter"] = ((p_cnt - 1) * n_active
                                           * (cfg.msg_bytes + 4))
 
-        # Phases 3 + 4 per destination partition
-        d = dict(dcsr_src=fmts.dcsr_src, dcsr_part=fmts.dcsr_part,
-                 dcsr_batch=fmts.dcsr_batch, dcsr_valid=fmts.dcsr_valid,
-                 dcsr_ptr=fmts.dcsr_ptr, has_csr=fmts.has_csr,
-                 csr_bytes=fmts.csr_bytes, dcsr_bytes=fmts.dcsr_bytes)
+        # Phases 3 + 4 per destination partition (in-HBM ChunkSource)
+        d = HBMChunkSource.dest_arrays(fmts)
         if backend == "segment":
-            d.update(edge_src_part=g.edge_src_part,
-                     edge_src_local=g.edge_src_local,
-                     edge_dst_local=g.edge_dst_local,
-                     edge_data=g.edge_data, edge_valid=g.edge_valid)
+            d.update(HBMChunkSource.edge_arrays(g))
             agg, has, cd = jax.vmap(dp)(d, recv_msg, recv_mask)
             cd = {k: jnp.sum(v) for k, v in cd.items()}
         else:
@@ -295,7 +311,7 @@ def make_local_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
 
         new_state, new_active, total, io = _apply_and_account(
             state, agg, has, global_id, g.vertex_valid, apply_fn, cfg,
-            spec.batch_size)
+            spec.batch_size, amask)
         counters.update(io)
         return new_state, new_active, total, counters
 
@@ -351,19 +367,11 @@ def make_sharded_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
         recv_mask = jax.lax.all_to_all(
             sendmask.astype(jnp.int8), axis, 0, 0, tiled=True) > 0
 
-        # Phases 3 + 4 on this shard's destination view
-        d = dict(dcsr_src=garrs["dcsr_src"][0], dcsr_part=garrs["dcsr_part"][0],
-                 dcsr_batch=garrs["dcsr_batch"][0],
-                 dcsr_valid=garrs["dcsr_valid"][0],
-                 dcsr_ptr=garrs["dcsr_ptr"][0], has_csr=garrs["has_csr"][0],
-                 csr_bytes=garrs["csr_bytes"][0],
-                 dcsr_bytes=garrs["dcsr_bytes"][0])
+        # Phases 3 + 4 on this shard's destination view (in-HBM ChunkSource)
+        d = {k: v[0] for k, v in HBMChunkSource.dest_arrays(garrs).items()}
         if backend == "segment":
-            d.update(edge_src_part=garrs["edge_src_part"][0],
-                     edge_src_local=garrs["edge_src_local"][0],
-                     edge_dst_local=garrs["edge_dst_local"][0],
-                     edge_data=garrs["edge_data"][0],
-                     edge_valid=garrs["edge_valid"][0])
+            d.update({k: v[0]
+                      for k, v in HBMChunkSource.edge_arrays(garrs).items()})
         else:
             d.update(jax.tree_util.tree_map(
                 lambda x: x[0],
@@ -376,7 +384,7 @@ def make_sharded_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
 
         new_state, new_active, total, io = _apply_and_account(
             state, agg, has, garrs["global_id"], vertex_valid, apply_fn,
-            cfg, spec.batch_size)
+            cfg, spec.batch_size, amask)
         counters.update(io)
         total = jax.lax.psum(total, axis)
         counters = {k: jax.lax.psum(v, axis) for k, v in counters.items()}
@@ -384,7 +392,7 @@ def make_sharded_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
 
     jitted = {}
 
-    def run(state, active, garrs, bt, vals):
+    def run_sharded(state, active, garrs, bt, vals):
         skey = (tuple(sorted(state)), bt is None,
                 None if vals is None else tuple(sorted(vals)))
         fn = jitted.get(skey)
@@ -401,4 +409,298 @@ def make_sharded_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
                                           out_specs=out_specs))
             jitted[skey] = fn
         return fn(state, active, garrs, bt, vals)
-    return run
+    return run_sharded
+
+
+# ---------------------------------------------------------------------------
+# OOC executor (disk-resident chunks + vertex spill, streamed dst-batches)
+# ---------------------------------------------------------------------------
+
+def _batch_any(mask, batch_size, num_batches):
+    """[P, V] bool -> [P, B]: which intra-node batches contain a set bit."""
+    p_cnt = mask.shape[0]
+    pad = num_batches * batch_size - mask.shape[1]
+    m = np.pad(np.asarray(mask, bool), ((0, 0), (0, pad)))
+    return m.reshape(p_cnt, num_batches, batch_size).any(axis=2)
+
+
+def _max_tiles_per_batch_row(g, tile, pb):
+    """Static bound: max distinct (column-block) tiles in any (destination,
+    dst batch, batch-local row block) — sizes the OOC per-batch Pallas
+    grids so every batch compiles to the same shape."""
+    spec = g.spec
+    bs = spec.batch_size
+    p_cnt = spec.num_partitions
+    ncb = p_cnt * pb
+    n_rows_b = ceil_div(bs, tile)
+    esl = np.asarray(g.edge_src_local)
+    esp = np.asarray(g.edge_src_part)
+    edl = np.asarray(g.edge_dst_local)
+    ev = np.asarray(g.edge_valid)
+    best = 1
+    for q in range(p_cnt):
+        m = ev[q]
+        if not m.any():
+            continue
+        dst = edl[q][m]
+        k = dst // bs
+        row = (dst % bs) // tile
+        col = esp[q][m].astype(np.int64) * pb + esl[q][m] // tile
+        key = (k.astype(np.int64) * n_rows_b + row) * ncb + col
+        uniq = np.unique(key)
+        cnt = np.bincount(uniq // ncb)
+        if cnt.size:
+            best = max(best, int(cnt.max()))
+    return best
+
+
+def _ooc_combine_batch(work, xv_q, xc_q, slot_fn, monoid, mode,
+                       *, tile, pb, n_rows_b, max_tpr, bs, interpret):
+    """Phase 4 for one streamed dst-batch through the Pallas combine kernel.
+
+    The streamed chunk edges are laid out into a fixed-shape rectangular
+    block-CSR (n_rows_b * max_tpr slots) so every batch reuses one compiled
+    kernel; value tiles are scattered from the per-edge affine coefficients
+    (a, b) evaluated on the streamed edge data (affinity was certified by
+    the engine's slot probe)."""
+    t = tile
+    identity = float(monoid.identity)
+    dst_b = work.dst - work.k * bs
+    d = jnp.asarray(work.data)
+    b_e = np.asarray(slot_fn(jnp.zeros_like(d), d), np.float32)
+    a_e = np.asarray(slot_fn(jnp.ones_like(d), d), np.float32) - b_e
+
+    n_col_blocks = xc_q.shape[0] // t
+    slot_row, slot_col, rp, eslot = build_tile_struct(
+        dst_b // t, work.part.astype(np.int64) * pb + work.src // t,
+        n_rows_b, n_col_blocks)
+    s_cnt = slot_row.shape[0]
+    n_slots = n_rows_b * max_tpr
+    padded_slot = (slot_row.astype(np.int64) * max_tpr
+                   + (np.arange(s_cnt) - rp[slot_row]))
+    tile_col = np.zeros((n_slots,), np.int32)
+    tile_col[padded_slot] = slot_col
+    row_cnt = (rp[1:] - rp[:-1]).astype(np.int32)
+    row_ptr = np.arange(0, n_slots + 1, max_tpr, dtype=np.int32)
+    tile_idx = np.arange(n_slots, dtype=np.int32)
+
+    cells = (padded_slot[eslot], dst_b % t, work.src % t)
+    tiles_cnt = np.zeros((n_slots, t, t), np.float32)
+    np.add.at(tiles_cnt, cells, 1.0)
+    tiles_v = tiles_b = None
+    if mode in ("add", "add_b"):
+        tiles_v = np.zeros((n_slots, t, t), np.float32)
+        np.add.at(tiles_v, cells, a_e)
+        if mode == "add_b":
+            tiles_b = np.zeros((n_slots, t, t), np.float32)
+            np.add.at(tiles_b, cells, b_e)
+    else:
+        tiles_b = np.full((n_slots, t, t), identity, np.float32)
+        scatter = np.minimum if mode == "min" else np.maximum
+        scatter.at(tiles_b, cells, b_e)
+
+    to_j = lambda x: None if x is None else jnp.asarray(x)
+    val, hc = block_csr_combine(
+        jnp.asarray(row_ptr), jnp.asarray(tile_idx), jnp.asarray(tile_col),
+        jnp.asarray(row_cnt), to_j(tiles_v), to_j(tiles_b),
+        jnp.asarray(tiles_cnt), jnp.asarray(xv_q), jnp.asarray(xc_q),
+        mode=mode, tile=t, max_tiles_per_row=max_tpr, identity=identity,
+        interpret=interpret)
+    return np.asarray(val), np.asarray(hc)
+
+
+def make_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
+                mode_meta):
+    """Fully-out-of-core ProcessEdges (DESIGN.md §6).
+
+    Phases 1–3 run host-side on the in-memory control state (active masks,
+    need-bitmaps, the DCSR dispatching graph — the paper's memory-resident
+    metadata); bulk data moves through measured requests only: vertex
+    arrays batch-by-batch via the spill, edge chunks via the store with a
+    double-buffered prefetch thread feeding phase 4.  Analytic counters are
+    computed with the same formulas as the in-HBM executors; ``measured_*``
+    counters report the bytes the storage tier actually served."""
+    cfg = engine.config
+    g = engine.graph
+    spec = g.spec
+    source = engine.ooc_source
+    spill = engine.spill
+    p_cnt, v_max = spec.num_partitions, spec.v_max
+    b_cnt, bs = spec.num_batches, spec.batch_size
+    need = np.asarray(g.need)
+    need_counts = np.asarray(g.need_counts).astype(np.float64)
+    vertex_valid = np.asarray(g.vertex_valid)
+    global_id = engine.global_id
+    part_sizes = jnp.asarray(spec.partition_sizes(), jnp.float32)
+    gamma = engine.fmts.gamma
+    identity = float(monoid.identity)
+    mb = cfg.msg_bytes + 4
+    interpret = default_interpret()
+    tile = cfg.block_tile
+    if backend == "block_csr":
+        v_pad_t = ceil_div(v_max, tile) * tile
+        pb = v_pad_t // tile
+        n_rows_b = ceil_div(bs, tile)
+        max_tpr = _max_tiles_per_batch_row(g, tile, pb)
+        mode, a_const = mode_meta
+
+    def step(active):
+        counters = {k: 0.0 for k in engine.counter_keys}
+        sr0, sw0 = spill.bytes_read, spill.bytes_written
+        amask = (vertex_valid if active is None
+                 else np.asarray(active, bool) & vertex_valid)
+        arrays_bytes = spill.arrays_bytes()
+        bitmap = float(spill.bitmap_nbytes())
+
+        # Phase 1: generate — read the active bitmap + active batches
+        spill.read_bitmap()                                     # measured
+        gen_batches = _batch_any(amask, bs, b_cnt)
+        gstate = {k: v[:, :v_max]
+                  for k, v in spill.read(gen_batches).items()}  # measured
+        # unread (inactive) batches hold zeros; their message values are
+        # garbage by contract (recv_mask never selects them) — silence the
+        # 0/0-style warnings that garbage can trigger in numpy signal fns
+        with np.errstate(all="ignore"):
+            msg = np.asarray(signal_fn(gstate, global_id), np.float32)
+        m_p = amask.sum(axis=1).astype(np.float64)
+        counters["msgs_generated"] = float(m_p.sum())
+        counters["msg_disk_bytes"] = float(m_p.sum()) * mb
+
+        # Phase 2: filter (receive-major [Q, P, V]; traffic is analytic —
+        # single host, nothing crosses a wire)
+        recv_mask = np.empty((p_cnt, p_cnt, v_max), bool)
+        for p in range(p_cnt):
+            base = np.broadcast_to(amask[p][None], (p_cnt, v_max))
+            if cfg.enable_filtering:
+                filt = amask[p][None] & need[p]
+                skip = need_counts[p] >= cfg.filter_skip_threshold * m_p[p]
+                recv_mask[:, p] = np.where(skip[:, None], base, filt)
+            else:
+                recv_mask[:, p] = base
+        total_sent = float(recv_mask.sum())
+        self_sent = float(recv_mask[np.arange(p_cnt), np.arange(p_cnt)].sum())
+        n_active = float(amask.sum())
+        counters["msgs_sent"] = total_sent
+        counters["msgs_sent_nofilter"] = p_cnt * n_active
+        counters["net_bytes"] = (total_sent - self_sent) * mb
+        counters["net_bytes_nofilter"] = (p_cnt - 1) * n_active * mb
+
+        # Phase 3: dispatch over the memory-resident dispatching graph
+        chunk_active = np.zeros((p_cnt, p_cnt, b_cnt), bool)
+        dispatched = 0
+        for q in range(p_cnt):
+            present = (recv_mask[q][source.dcsr_part[q], source.dcsr_src[q]]
+                       & source.dcsr_valid[q])
+            dispatched += int(present.sum())
+            chunk_active[q][source.dcsr_part[q][present],
+                            source.dcsr_batch[q][present]] = True
+        counters["msgs_dispatched"] = float(dispatched)
+        counters["chunks_read"] = float(chunk_active.sum())
+
+        # Phase 3.5: runtime format choice — the exact decision drives the
+        # disk reads below, so measured bytes match the model by design.
+        msgs_from = recv_mask.sum(axis=2)                       # [Q, P]
+        use_csr = np.zeros((p_cnt, p_cnt, b_cnt), bool)
+        for q in range(p_cnt):
+            uc, seek, per_chunk = phases.format_choice_matrix(
+                jnp.asarray(source.dcsr_ptr[q]),
+                jnp.asarray(source.has_csr[q]),
+                jnp.asarray(source.csr_bytes[q], jnp.float32),
+                jnp.asarray(source.dcsr_bytes[q], jnp.float32),
+                part_sizes, gamma, jnp.asarray(msgs_from[q], jnp.float32))
+            use_csr[q] = np.asarray(uc)
+            act = chunk_active[q]
+            counters["seek_cost"] += float(np.asarray(seek)[act].sum())
+            counters["edge_read_bytes"] += float(
+                np.asarray(per_chunk)[act].sum())
+
+        # Phase 4: stream active chunks dst-batch by dst-batch, double-
+        # buffered; combine with the monoid (numpy segment scatter) or the
+        # Pallas block-CSR kernel.
+        schedule = []
+        for q in range(p_cnt):
+            for k in range(b_cnt):
+                ps = np.nonzero(chunk_active[q, :, k])[0]
+                if ps.size:
+                    schedule.append(
+                        (q, k, [(int(p), bool(use_csr[q, p, k]))
+                                for p in ps]))
+        agg = np.full((p_cnt, v_max), identity, np.float32)
+        has = np.zeros((p_cnt, v_max), bool)
+        edges_touched = 0.0
+        if backend == "block_csr":
+            xvq, xcq = {}, {}
+
+            def vectors(q):
+                if q not in xvq:
+                    mask_p = np.zeros((p_cnt, v_pad_t), bool)
+                    mask_p[:, :v_max] = recv_mask[q]
+                    msg_p = np.zeros((p_cnt, v_pad_t), np.float32)
+                    msg_p[:, :v_max] = np.where(recv_mask[q], msg, 0.0)
+                    xcq[q] = mask_p.astype(np.float32).reshape(-1)
+                    if mode in ("add", "add_b"):
+                        xvq[q] = msg_p.reshape(-1)
+                    else:
+                        xvq[q] = np.where(mask_p, a_const * msg_p,
+                                          identity).reshape(-1)
+                return xvq[q], xcq[q]
+
+        for w in ChunkPrefetcher(source, schedule,
+                                 depth=cfg.ooc_prefetch_depth):
+            pm = recv_mask[w.q, w.part, w.src]
+            if backend == "segment":
+                mv = msg[w.part, w.src]
+                contrib = np.asarray(
+                    slot_fn(jnp.asarray(mv), jnp.asarray(w.data)),
+                    np.float32)
+                dsts = w.dst[pm]
+                if dsts.size:
+                    scatter = {"add": np.add, "min": np.minimum,
+                               "max": np.maximum}[monoid.name]
+                    scatter.at(agg[w.q], dsts, contrib[pm])
+                    has[w.q][dsts] = True
+                edges_touched += float(pm.sum())
+            else:
+                xv_q, xc_q = vectors(w.q)
+                val, hc = _ooc_combine_batch(
+                    w, xv_q, xc_q, slot_fn, monoid, mode,
+                    tile=tile, pb=pb, n_rows_b=n_rows_b, max_tpr=max_tpr,
+                    bs=bs, interpret=interpret)
+                lo = w.k * bs
+                hi = min(lo + bs, v_max)
+                agg[w.q, lo:hi] = val[:hi - lo]
+                has[w.q, lo:hi] = hc[:hi - lo] > 0.5
+                edges_touched += float(hc.sum())
+            counters["measured_chunks_read"] += w.n_chunks
+            counters["measured_edge_read_bytes"] += w.nbytes
+        counters["edges_touched"] = edges_touched
+
+        # Apply: read updated batches, masked update, write back + bitmap
+        upd_mask = has & vertex_valid
+        upd_batches = _batch_any(upd_mask, bs, b_cnt)
+        astate_pad = spill.read(upd_batches)                    # measured
+        astate = {k: v[:, :v_max] for k, v in astate_pad.items()}
+        state_j = {k: jnp.asarray(v) for k, v in astate.items()}
+        updates, new_active, ret = apply_fn(
+            state_j, jnp.asarray(agg), jnp.asarray(has), global_id)
+        spill.merge_write(astate_pad, updates, upd_mask,
+                          upd_batches)                          # measured
+        new_active = np.asarray(new_active, bool) & vertex_valid
+        spill.write_bitmap(new_active)                          # measured
+        total = float(np.where(upd_mask,
+                               np.asarray(ret, np.float32), 0.0).sum())
+
+        # Modeled vertex I/O (same formulas as _apply_and_account) next to
+        # the measured bytes the spill actually served.
+        gen_v = float(gen_batches.sum()) * bs
+        upd_v = float(upd_batches.sum()) * bs
+        counters["vertex_read_bytes"] = ((gen_v + upd_v) * arrays_bytes
+                                         + bitmap)
+        counters["vertex_write_bytes"] = upd_v * arrays_bytes + bitmap
+        counters["measured_vertex_read_bytes"] = spill.bytes_read - sr0
+        counters["measured_vertex_write_bytes"] = spill.bytes_written - sw0
+
+        new_state = spill.state_views()
+        return new_state, new_active, total, counters
+
+    return step

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.csr_spmv import block_csr_combine
 
@@ -71,14 +72,18 @@ def dispatch_one_dest(dsrc, dpart, dbatch, dvalid, recv_mask, v_max, b_cnt):
     return chunk_active, jnp.sum(present, dtype=jnp.float32)
 
 
-def format_choice_one_dest(dcsr_ptr, has_csr, csr_bytes, dcsr_bytes,
-                           part_sizes, gamma, msgs_from, chunk_active):
-    """Paper §4.1 runtime CSR/DCSR selection for one destination partition.
+def format_choice_matrix(dcsr_ptr, has_csr, csr_bytes, dcsr_bytes,
+                         part_sizes, gamma, msgs_from):
+    """Paper §4.1 per-chunk runtime CSR/DCSR selection for one destination.
 
     dcsr_ptr [P, B+1]; has_csr/csr_bytes/dcsr_bytes [P, B]; part_sizes [P];
     msgs_from [P] — messages received from each source partition.
 
-    Returns (seek_cost scalar, edge_read_bytes scalar) over active chunks."""
+    Returns (use_csr [P, B], seek [P, B], read_bytes [P, B]).  This is the
+    single source of truth for the decision: the in-HBM executors reduce it
+    to counters (:func:`format_choice_one_dest`), the OOC executor issues
+    the corresponding disk reads — measured bytes match modeled bytes
+    because both come from here."""
     nnz = (dcsr_ptr[:, 1:] - dcsr_ptr[:, :-1]).astype(jnp.float32)
     v_src = part_sizes.astype(jnp.float32)[:, None]            # [P, 1]
     m = msgs_from.astype(jnp.float32)[:, None]
@@ -86,9 +91,20 @@ def format_choice_one_dest(dcsr_ptr, has_csr, csr_bytes, dcsr_bytes,
     cost_csr = jnp.minimum(gamma * m, v_src)
     use_csr = has_csr & (cost_csr < cost_dcsr)
     seek = jnp.where(use_csr, cost_csr, cost_dcsr)
+    per_chunk = jnp.where(use_csr, csr_bytes, dcsr_bytes)
+    return use_csr, seek, per_chunk
+
+
+def format_choice_one_dest(dcsr_ptr, has_csr, csr_bytes, dcsr_bytes,
+                           part_sizes, gamma, msgs_from, chunk_active):
+    """Reduce :func:`format_choice_matrix` over active chunks.
+
+    Returns (seek_cost scalar, edge_read_bytes scalar)."""
+    _, seek, per_chunk = format_choice_matrix(
+        dcsr_ptr, has_csr, csr_bytes, dcsr_bytes, part_sizes, gamma,
+        msgs_from)
     seek_cost = jnp.sum(jnp.where(chunk_active, seek, 0.0),
                         dtype=jnp.float32)
-    per_chunk = jnp.where(use_csr, csr_bytes, dcsr_bytes)
     read_bytes = jnp.sum(jnp.where(chunk_active, per_chunk, 0.0),
                          dtype=jnp.float32)
     return seek_cost, read_bytes
@@ -203,3 +219,13 @@ def batch_touched(mask, batch_size):
     m = jnp.pad(mask, [(0, 0)] * (mask.ndim - 1) + [(0, pad)])
     batch_any = m.reshape(*m.shape[:-1], -1, batch_size).any(axis=-1)
     return jnp.sum(batch_any, dtype=jnp.float32) * batch_size
+
+
+def bitmap_model_bytes(mask) -> float:
+    """On-disk bytes of the row-packed active bitmap for a [..., V] mask.
+
+    Static (shape-only), so it folds to a constant under jit; equals what
+    :meth:`repro.core.chunkstore.VertexSpill.write_bitmap` physically
+    writes, keeping measured == modeled exact."""
+    rows = int(np.prod(mask.shape[:-1])) if mask.ndim > 1 else 1
+    return float(rows * ((mask.shape[-1] + 7) // 8))

@@ -2,11 +2,28 @@
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import tempfile
 import time
 from typing import Any, Callable, Iterable
 
 import jax
 import numpy as np
+
+
+def atomic_write_json(path: str, obj: Any) -> None:
+    """Write JSON via tmp-file + rename so a crash mid-write never leaves a
+    truncated file behind (the blockstore/chunkstore manifest commit point)."""
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(obj, f)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+        raise
 
 
 def register_static_dataclass(cls, data_fields: Iterable[str], static_fields: Iterable[str]):

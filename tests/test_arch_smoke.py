@@ -70,8 +70,18 @@ def test_decode_step(arch):
                                   "zamba2-1.2b", "mixtral-8x22b"])
 def test_decode_matches_teacher_forcing(arch):
     """Incremental decode with cache must reproduce the teacher-forced
-    forward logits position by position."""
-    cfg = get_reduced(arch)
+    forward logits position by position.
+
+    Runs in float32: this is an *algorithmic* cache-parity property, and
+    the chunked-parallel sequence form vs. the per-token recurrence are
+    equal only up to reassociation (cumsum-of-log-decays vs. iterated
+    exp products).  Under bfloat16 a ~1e-6 f32 difference occasionally
+    lands on a bf16 rounding boundary of a layer output; the flipped ulp
+    then amplifies through the residual stack (observed up to ~0.3 on
+    rwkv6 logits) — loose-tolerance bf16 comparison would both fail
+    spuriously and mask real plumbing bugs that f32 at 1e-4 catches."""
+    import dataclasses
+    cfg = dataclasses.replace(get_reduced(arch), dtype="float32")
     model = make_model(cfg)
     params = model.init(jax.random.PRNGKey(3))
     b, s = 2, 8
@@ -88,7 +98,7 @@ def test_decode_matches_teacher_forcing(arch):
         np.testing.assert_allclose(
             np.asarray(logits_i, np.float32),
             np.asarray(full_logits[:, i], np.float32),
-            rtol=2e-2, atol=2e-2,
+            rtol=1e-4, atol=1e-4,
             err_msg=f"{arch} decode diverges from forward at position {i}")
 
 

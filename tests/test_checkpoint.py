@@ -53,6 +53,42 @@ def test_gc_reference_counting(tmp_path):
     assert on_disk == live                # exactly the referenced blocks
 
 
+def test_keep_zero_retains_everything(tmp_path):
+    """keep=0 is the unbounded-retention mode: no manifest is ever pruned
+    and no block is ever garbage-collected."""
+    store = BlockStore(str(tmp_path), keep=0)
+    for s in range(5):
+        store.save(tree(s), step=s)
+    assert store.steps() == [0, 1, 2, 3, 4]
+    # every historical checkpoint stays restorable
+    for s in range(5):
+        got = store.restore(s)
+        np.testing.assert_array_equal(got["a"], tree(s)["a"])
+    # all manifests' blocks are still on disk
+    live = set()
+    for s in store.steps():
+        m = json.load(open(os.path.join(str(tmp_path), "manifests",
+                                        f"{s:012d}.json")))
+        for meta in m["arrays"].values():
+            live.update(meta["blocks"])
+    on_disk = {n[:-4] for n in os.listdir(os.path.join(str(tmp_path),
+                                                       "blocks"))}
+    assert live <= on_disk
+
+
+def test_keep_prunes_to_newest_n(tmp_path):
+    """keep=N retains exactly the N most recent manifests."""
+    store = BlockStore(str(tmp_path), keep=2)
+    for s in range(5):
+        store.save(tree(s), step=s)
+    assert store.steps() == [3, 4]
+
+
+def test_negative_keep_rejected(tmp_path):
+    with pytest.raises(ValueError, match="keep"):
+        BlockStore(str(tmp_path), keep=-1)
+
+
 def test_restore_latest_after_partial_write(tmp_path):
     """Crash mid-checkpoint leaves the previous manifest intact."""
     store = BlockStore(str(tmp_path), keep=3)
