@@ -13,10 +13,17 @@ SCRATCH=$(mktemp -d)
 trap 'rm -rf "$SCRATCH"' EXIT
 export TMPDIR="$SCRATCH"
 
+# Per-suite wall time is printed after each pytest run so slow regressions
+# are visible in the CI log history.
+suite_timer_start() { SUITE_T0=$(date +%s); }
+suite_timer_end() { echo "suite timing: $1 took $(( $(date +%s) - SUITE_T0 ))s"; }
+
 OUT=$(mktemp)
+suite_timer_start
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
     --continue-on-collection-errors 2>&1 | tee "$OUT"
 STATUS=${PIPESTATUS[0]}
+suite_timer_end "full suite"
 
 # pytest: 0 = all passed, 1 = some tests failed (gated by the baseline
 # below); anything else (interrupted, internal error, usage error, no
@@ -54,10 +61,38 @@ fi
 # The OOC measured-vs-modeled parity suite is the fully-out-of-core gate;
 # run it standalone so a regression there fails loudly even when someone
 # edits the baseline file.
+suite_timer_start
 if ! PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
     tests/test_chunkstore.py; then
     echo "CI FAIL: OOC parity suite (tests/test_chunkstore.py)" >&2
     exit 1
 fi
+suite_timer_end "OOC parity suite"
+
+# The distributed parity suite (dist_ooc worker shards + sparse exchange,
+# shard_map-vs-local, filter-never-drops property) is the distributed
+# fully-out-of-core gate; 8 forced host devices so the shard_map paths run
+# on a real (emulated) mesh.
+suite_timer_start
+DIST_OUT=$(mktemp)
+if ! XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
+    tests/test_dist_ooc.py tests/test_distributed_engine.py \
+    tests/test_filter_property.py 2>&1 | tee "$DIST_OUT"; then
+    echo "CI FAIL: distributed parity suite (tests/test_dist_ooc.py," \
+         "tests/test_distributed_engine.py, tests/test_filter_property.py)" >&2
+    exit 1
+fi
+# The hypothesis-based filter property suite importorskips when the module
+# is absent (some dev containers cannot pip install); make that loud so a
+# broken hypothesis install on a real CI host cannot silently skip the
+# never-drop-a-message property.
+if grep -q "skipped" "$DIST_OUT" && \
+   ! python -c "import hypothesis" 2>/dev/null; then
+    echo "CI WARNING: hypothesis not installed —" \
+         "tests/test_filter_property.py was SKIPPED, the filter" \
+         "never-drops property did not run" >&2
+fi
+suite_timer_end "distributed parity suite"
 
 echo "CI OK: no regressions vs baseline ($(wc -l < "$CURRENT") known failures)"

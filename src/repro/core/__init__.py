@@ -1,10 +1,12 @@
 """DFOGraph core: two-level column-oriented partitioning, adaptive CSR/DCSR,
 filtered push message passing, signal/slot engine (the paper's contribution).
 
-Layering (DESIGN.md §1, §6): ``phases`` holds the four ProcessEdges phase
-implementations on one partition's local view; ``chunkstore`` is the storage
-tier (on-disk chunk store, vertex spill, and the ChunkSource contract);
-``executor`` composes phases + storage into the LOCAL, SHARD_MAP, and OOC
+Layering (DESIGN.md §1, §6, §7): ``phases`` holds the four ProcessEdges
+phase implementations on one partition's local view; ``chunkstore`` is the
+storage tier (on-disk chunk store + per-worker shards, vertex spill, and
+the ChunkSource contract); ``exchange`` is the inter-worker message wire
+(adaptive pair/slab encodings, measured bytes); ``executor`` composes
+phases + storage + exchange into the LOCAL, SHARD_MAP, OOC, and DIST_OOC
 executors; ``engine`` is the public signal/slot API on top.
 """
 from repro.core.partition import (  # noqa: F401
@@ -17,8 +19,11 @@ from repro.core.formats import (  # noqa: F401
     build_formats, storage_summary,
 )
 from repro.core.chunkstore import (  # noqa: F401
-    ChunkPrefetcher, ChunkStore, DiskChunkSource, HBMChunkSource,
-    VertexSpill,
+    ChunkPrefetcher, ChunkStore, ChunkStoreError, DiskChunkSource,
+    HBMChunkSource, ShardedChunkStore, VertexSpill,
+)
+from repro.core.exchange import (  # noqa: F401
+    DecodeAhead, Exchange, batch_wire_bytes, decode_batch, encode_batch,
 )
 from repro.core.engine import (  # noqa: F401
     ADD, MIN, MAX, Engine, EngineConfig, Monoid, accumulate_counters,

@@ -45,7 +45,7 @@ import json
 import os
 import queue
 import threading
-from typing import Iterator
+from typing import Iterator, Sequence
 
 import numpy as np
 
@@ -56,7 +56,14 @@ from repro.utils import atomic_write_json, ceil_div
 EDGE_DT = np.dtype([("dst", "<i4"), ("data", "<f4")])   # 8 B per edge
 PAIR_DT = np.dtype([("src", "<i4"), ("idx", "<i4")])    # 8 B per DCSR entry
 MANIFEST_NAME = "manifest.json"
+SHARD_MANIFEST_NAME = "shards.json"
 MANIFEST_VERSION = 1
+
+
+class ChunkStoreError(RuntimeError):
+    """A chunk store on disk is unreadable or structurally broken (missing /
+    truncated manifest, missing edge files, shard mismatch).  Always names
+    the offending path."""
 
 
 def bitmap_nbytes(num_rows: int, num_cols: int) -> int:
@@ -101,8 +108,16 @@ class ChunkStore:
         self.num_partitions = p_cnt
         self.num_batches = b_cnt
         self.part_sizes = np.asarray(manifest["partition_sizes"], np.int64)
-        self._layout = []
+        # A full store owns every destination partition; a worker shard
+        # (build_sharded) owns a subset and holds edge files only for those.
+        self.partitions = tuple(manifest.get("partitions",
+                                             range(p_cnt)))
+        owned = set(self.partitions)
+        self._layout: list[_ChunkLayout | None] = []
         for q in range(p_cnt):
+            if q not in owned:
+                self._layout.append(None)
+                continue
             offset = np.full((p_cnt, b_cnt), -1, np.int64)
             nnz = np.zeros((p_cnt, b_cnt), np.int64)
             edges = np.zeros((p_cnt, b_cnt), np.int64)
@@ -118,13 +133,28 @@ class ChunkStore:
         self.chunks_read = 0
         self.bytes_read = 0
 
+    def _layout_of(self, q: int) -> _ChunkLayout:
+        lay = self._layout[q]
+        if lay is None:
+            raise ChunkStoreError(
+                f"destination partition {q} is not owned by the chunk store "
+                f"shard at {self.root} (owns {list(self.partitions)})")
+        return lay
+
     # -- construction --------------------------------------------------------
     @classmethod
-    def build(cls, g: DistGraph, fmts: ChunkFormats, root: str) -> "ChunkStore":
-        """Preprocessing: serialize every nonempty chunk; commit manifest."""
+    def build(cls, g: DistGraph, fmts: ChunkFormats, root: str,
+              partitions: Sequence[int] | None = None) -> "ChunkStore":
+        """Preprocessing: serialize every nonempty chunk; commit manifest.
+
+        ``partitions`` restricts the store to a subset of destination
+        partitions (a worker shard for the dist_ooc executor); by default
+        the store owns all of them."""
         spec = g.spec
         p_cnt, b_cnt = spec.num_partitions, spec.num_batches
         part_sizes = spec.partition_sizes()
+        owned = (list(range(p_cnt)) if partitions is None
+                 else [int(q) for q in partitions])
         os.makedirs(root, exist_ok=True)
         chunk_ptr = np.asarray(g.chunk_ptr)
         src_l = np.asarray(g.edge_src_local)
@@ -132,8 +162,8 @@ class ChunkStore:
         data = np.asarray(g.edge_data)
         has_csr = np.asarray(fmts.has_csr)
 
-        chunks_meta: list[list] = []
-        for q in range(p_cnt):
+        chunks_meta: dict[int, list] = {}
+        for q in owned:
             meta_q = []
             off = 0
             with open(os.path.join(root, f"edges_q{q}.bin"), "wb") as f:
@@ -168,7 +198,7 @@ class ChunkStore:
                         meta_q.append([p, k, off, int(pairs.shape[0]),
                                        int(e - s), bool(has_csr[q, p, k])])
                         off += nbytes
-            chunks_meta.append(meta_q)
+            chunks_meta[q] = meta_q
 
         manifest = dict(
             version=MANIFEST_VERSION,
@@ -179,20 +209,68 @@ class ChunkStore:
             partition_sizes=[int(x) for x in part_sizes],
             inflate_ratio=fmts.inflate_ratio,
             gamma=fmts.gamma,
-            chunks=chunks_meta,
+            partitions=owned,
+            chunks=[chunks_meta.get(q, []) for q in range(p_cnt)],
         )
         atomic_write_json(os.path.join(root, MANIFEST_NAME), manifest)
         return cls(root, manifest)
 
     @classmethod
-    def open(cls, root: str) -> "ChunkStore":
-        with open(os.path.join(root, MANIFEST_NAME)) as f:
-            manifest = json.load(f)
-        if manifest.get("version") != MANIFEST_VERSION:
+    def build_sharded(cls, g: DistGraph, fmts: ChunkFormats, root: str,
+                      num_workers: int) -> "ShardedChunkStore":
+        """Preprocessing for the dist_ooc executor: W worker shards, each
+        with its **own** root (``root/w{w}/``) holding the edge chunks of
+        the contiguous block of destination partitions it owns."""
+        spec = g.spec
+        p_cnt = spec.num_partitions
+        if num_workers < 1 or p_cnt % num_workers != 0:
             raise ValueError(
-                f"chunkstore manifest version {manifest.get('version')!r} "
-                f"!= {MANIFEST_VERSION}")
-        return cls(root, manifest)
+                f"num_workers={num_workers} must divide "
+                f"num_partitions={p_cnt} (contiguous ownership blocks)")
+        per = p_cnt // num_workers
+        shards = []
+        for w in range(num_workers):
+            owned = list(range(w * per, (w + 1) * per))
+            shards.append(cls.build(g, fmts, os.path.join(root, f"w{w}"),
+                                    partitions=owned))
+        atomic_write_json(
+            os.path.join(root, SHARD_MANIFEST_NAME),
+            dict(version=MANIFEST_VERSION, num_workers=num_workers,
+                 num_partitions=p_cnt))
+        return ShardedChunkStore(root, shards)
+
+    @classmethod
+    def open(cls, root: str) -> "ChunkStore":
+        path = os.path.join(root, MANIFEST_NAME)
+        try:
+            with open(path) as f:
+                manifest = json.load(f)
+        except OSError as exc:
+            raise ChunkStoreError(
+                f"cannot read chunk store manifest {path}: {exc}") from exc
+        except json.JSONDecodeError as exc:
+            raise ChunkStoreError(
+                f"chunk store manifest {path} is truncated or corrupt "
+                f"(invalid JSON: {exc})") from exc
+        if manifest.get("version") != MANIFEST_VERSION:
+            raise ChunkStoreError(
+                f"chunk store manifest {path}: version "
+                f"{manifest.get('version')!r} != {MANIFEST_VERSION}")
+        missing = [k for k in ("num_partitions", "num_batches",
+                               "partition_sizes", "chunks")
+                   if k not in manifest]
+        if missing:
+            raise ChunkStoreError(
+                f"chunk store manifest {path} is truncated or corrupt "
+                f"(missing keys: {missing})")
+        store = cls(root, manifest)
+        for q in store.partitions:
+            epath = os.path.join(root, f"edges_q{q}.bin")
+            if not os.path.exists(epath):
+                raise ChunkStoreError(
+                    f"chunk store at {root} is missing edge file {epath} "
+                    f"(manifest owns destination partition {q})")
+        return store
 
     # -- reads ---------------------------------------------------------------
     def _map(self, q: int) -> np.memmap:
@@ -206,7 +284,7 @@ class ChunkStore:
     def chunk_stored_nbytes(self, q: int, p: int, k: int) -> tuple[int, int]:
         """(dcsr_read_bytes, csr_read_bytes) for a chunk; csr part is 0 when
         no CSR representation is stored.  Mirrors the analytic byte model."""
-        lay = self._layout[q]
+        lay = self._layout_of(q)
         if lay.offset[p, k] < 0:
             return 0, 0
         pay = int(lay.edges[p, k]) * EDGE_DT.itemsize
@@ -222,7 +300,7 @@ class ChunkStore:
         seek-cost decision); asking for CSR where none is stored is a bug in
         the caller's format choice and raises.
         """
-        lay = self._layout[q]
+        lay = self._layout_of(q)
         off = int(lay.offset[p, k])
         if off < 0:
             raise KeyError(f"chunk ({q}, {p}, {k}) is empty")
@@ -257,6 +335,75 @@ class ChunkStore:
         with self._lock:
             self.chunks_read = 0
             self.bytes_read = 0
+
+
+class ShardedChunkStore:
+    """W per-worker :class:`ChunkStore` shards under one root (dist_ooc).
+
+    Worker ``w`` owns the contiguous block of ``P / W`` destination
+    partitions ``[w * P/W, (w+1) * P/W)`` and its shard holds only those
+    partitions' edge files — each worker issues disk requests exclusively
+    against its own root, the distributed analogue of the paper's
+    per-node storage."""
+
+    def __init__(self, root: str, shards: list[ChunkStore]):
+        self.root = root
+        self.shards = shards
+        self.num_workers = len(shards)
+        self.num_partitions = shards[0].num_partitions
+        self.per_worker = self.num_partitions // self.num_workers
+        # THE partition -> worker ownership map (contiguous blocks); the
+        # engine and executors index this array rather than re-deriving it.
+        self.worker_of = np.repeat(np.arange(self.num_workers),
+                                   self.per_worker)
+        for w, s in enumerate(shards):
+            expect = tuple(range(w * self.per_worker,
+                                 (w + 1) * self.per_worker))
+            if tuple(s.partitions) != expect:
+                raise ChunkStoreError(
+                    f"shard {s.root} owns partitions {list(s.partitions)}, "
+                    f"expected {list(expect)} for worker {w}")
+
+    @classmethod
+    def open(cls, root: str) -> "ShardedChunkStore":
+        path = os.path.join(root, SHARD_MANIFEST_NAME)
+        try:
+            with open(path) as f:
+                meta = json.load(f)
+        except OSError as exc:
+            raise ChunkStoreError(
+                f"cannot read shard manifest {path}: {exc}") from exc
+        except json.JSONDecodeError as exc:
+            raise ChunkStoreError(
+                f"shard manifest {path} is truncated or corrupt "
+                f"(invalid JSON: {exc})") from exc
+        missing = [k for k in ("version", "num_workers", "num_partitions")
+                   if k not in meta]
+        if missing:
+            raise ChunkStoreError(
+                f"shard manifest {path} is truncated or corrupt "
+                f"(missing keys: {missing})")
+        if meta["version"] != MANIFEST_VERSION:
+            raise ChunkStoreError(
+                f"shard manifest {path}: version {meta['version']!r} "
+                f"!= {MANIFEST_VERSION}")
+        if not isinstance(meta["num_workers"], int) \
+                or meta["num_workers"] < 1:
+            raise ChunkStoreError(
+                f"shard manifest {path}: num_workers "
+                f"{meta['num_workers']!r} is not a positive integer")
+        shards = [ChunkStore.open(os.path.join(root, f"w{w}"))
+                  for w in range(meta["num_workers"])]
+        if shards[0].num_partitions != meta["num_partitions"]:
+            raise ChunkStoreError(
+                f"shard manifest {path}: num_partitions "
+                f"{meta['num_partitions']} does not match the worker "
+                f"shards' manifests ({shards[0].num_partitions})")
+        return cls(root, shards)
+
+    def reset_io_counters(self) -> None:
+        for s in self.shards:
+            s.reset_io_counters()
 
 
 # ---------------------------------------------------------------------------

@@ -9,12 +9,17 @@ ProcessEdges runs the paper's four phases:
   4. processing          — ``slot`` contributions along edges are combined per
                            destination vertex and ``apply`` updates vertex state.
 
-The phase implementations live in :mod:`repro.core.phases`; the two
+The phase implementations live in :mod:`repro.core.phases`; the four
 executors that compose them live in :mod:`repro.core.executor`:
   * ``LOCAL``     — one device; the partition axis is a leading array axis;
     "network" traffic is accounted by counters (what *would* cross the wire).
   * ``SHARD_MAP`` — the partition axis is a mesh axis; the inter-node pass is
     a real ``lax.all_to_all`` on the interconnect.
+  * ``OOC``       — single host, disk-resident chunks + vertex spill with
+    measured I/O cross-checked against the model (DESIGN.md §6).
+  * ``DIST_OOC``  — W workers with their own chunk-store shards and spills;
+    the inter-node pass is a need-list-filtered sparse exchange with
+    adaptively encoded, *measured* wire bytes (DESIGN.md §7).
 They differ only in how the exchange is realized and counters are reduced.
 
 TPU adaptation of the slot guarantee: the C++ system serializes slot calls
@@ -36,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
+from collections.abc import Mapping
 from typing import Callable, Dict
 
 import jax
@@ -47,8 +53,10 @@ import os
 
 from repro.core import executor as _executor
 from repro.core.chunkstore import (
-    ChunkStore, DiskChunkSource, HBMChunkSource, VertexSpill,
+    ChunkStore, DiskChunkSource, HBMChunkSource, ShardedChunkStore,
+    VertexSpill,
 )
+from repro.core.exchange import WIRE_MSG_BYTES
 from repro.core.formats import ChunkFormats, build_block_tiles
 from repro.core.partition import DistGraph
 from repro.core.phases import batch_touched, bitmap_model_bytes
@@ -91,9 +99,12 @@ class EngineConfig:
     compute_backend: str = "segment"       # "segment" | "block_csr"
     block_tile: int = 8                    # T for the block_csr backend
     executor: str = "auto"                 # "auto" (local / shard_map by
-    #                                        mesh) | "ooc" (needs a store)
+    #                                        mesh) | "ooc" (needs a store) |
+    #                                        "dist_ooc" (sharded store +
+    #                                        num_workers)
     verify_io: bool = True                 # OOC: raise if measured != model
     ooc_prefetch_depth: int = 2            # double-buffered by default
+    num_workers: int = 1                   # W for executor="dist_ooc"
 
 
 COUNTER_KEYS = (
@@ -104,9 +115,9 @@ COUNTER_KEYS = (
     "msg_disk_bytes", "seek_cost",
 )
 
-# Measured twins of the modeled I/O counters, reported by the OOC executor
-# (what the storage tier actually served) and cross-checked against the
-# analytic model when EngineConfig.verify_io is on.
+# Measured twins of the modeled I/O counters, reported by the OOC/dist_ooc
+# executors (what the storage tier actually served) and cross-checked
+# against the analytic model when EngineConfig.verify_io is on.
 MEASURED_KEYS = (
     "measured_chunks_read", "measured_edge_read_bytes",
     "measured_vertex_read_bytes", "measured_vertex_write_bytes",
@@ -118,6 +129,43 @@ MEASURED_PAIRS = (
     ("measured_vertex_read_bytes", "vertex_read_bytes"),
     ("measured_vertex_write_bytes", "vertex_write_bytes"),
 )
+
+# dist_ooc additionally audits the wire: bytes physically serialized across
+# workers vs the analytic network model, plus which adaptive encoding each
+# cross-worker message batch chose.
+DIST_MEASURED_KEYS = (
+    "measured_net_bytes", "net_pair_batches", "net_slab_batches",
+)
+
+DIST_MEASURED_PAIRS = MEASURED_PAIRS + (
+    ("measured_net_bytes", "net_bytes"),
+)
+
+
+class _BlockState(Mapping):
+    """Mapping view of per-worker spill blocks as one [P, V] state.
+
+    Each value concatenates the workers' contiguous partition rows on
+    first access (cached thereafter).  Like the OOC executor's memmap
+    views, the underlying storage is authoritative: values reflect the
+    spills as of first access, and states are consumed before the next
+    engine call mutates them (the algorithms' usage pattern)."""
+
+    def __init__(self, views: list):
+        self._views = views
+        self._cache: dict = {}
+
+    def __getitem__(self, key):
+        if key not in self._cache:
+            self._cache[key] = np.concatenate(
+                [v[key] for v in self._views], axis=0)
+        return self._cache[key]
+
+    def __iter__(self):
+        return iter(self._views[0])
+
+    def __len__(self):
+        return len(self._views[0])
 
 
 def zero_counters() -> Dict[str, jnp.ndarray]:
@@ -158,31 +206,82 @@ class Engine:
         self.counter_keys = COUNTER_KEYS
         if config.executor == "ooc":
             self.counter_keys = COUNTER_KEYS + MEASURED_KEYS
-        # OOC executor state (DESIGN.md §6)
-        if config.executor not in ("auto", "ooc"):
+        elif config.executor == "dist_ooc":
+            self.counter_keys = (COUNTER_KEYS + MEASURED_KEYS
+                                 + DIST_MEASURED_KEYS)
+        # OOC / dist_ooc executor state (DESIGN.md §6, §7)
+        if config.executor not in ("auto", "ooc", "dist_ooc"):
             raise ValueError(f"unknown executor: {config.executor!r}")
         self._ooc = config.executor == "ooc"
+        self._dist_ooc = config.executor == "dist_ooc"
+        self._measured_pairs = (DIST_MEASURED_PAIRS if self._dist_ooc
+                                else MEASURED_PAIRS)
         self.store = store
-        if self._ooc:
+        if self._ooc or self._dist_ooc:
+            name = config.executor
             if self._distributed:
-                raise ValueError("executor='ooc' is single-host; the "
-                                 "SHARD_MAP executor is selected by `mesh`")
-            if store is None:
-                raise ValueError("executor='ooc' requires a ChunkStore "
-                                 "(ChunkStore.build(graph, fmts, root))")
+                raise ValueError(f"executor={name!r} is single-process; "
+                                 "the SHARD_MAP executor is selected by "
+                                 "`mesh`")
             if not config.enable_adaptive_formats:
                 raise ValueError(
-                    "executor='ooc' requires enable_adaptive_formats: the "
-                    "non-adaptive model prices DCSR-only chunks at 0 bytes, "
-                    "which no physical read can match")
+                    f"executor={name!r} requires enable_adaptive_formats: "
+                    "the non-adaptive model prices DCSR-only chunks at 0 "
+                    "bytes, which no physical read can match")
             if not config.account_io:
-                raise ValueError("executor='ooc' requires account_io (the "
-                                 "measured/modeled cross-check needs both)")
+                raise ValueError(f"executor={name!r} requires account_io "
+                                 "(the measured/modeled cross-check needs "
+                                 "both)")
+            self._ooc_last_state = None
+
+        def check_store_spec(manifest, root):
+            """A store built for a different partitioning must fail here
+            with a clear error, not via oblique slicing downstream."""
+            got = tuple(manifest.get(k) for k in
+                        ("num_partitions", "num_batches", "batch_size",
+                         "v_max"))
+            want = (spec.num_partitions, spec.num_batches,
+                    spec.batch_size, spec.v_max)
+            if got != want:
+                raise ValueError(
+                    f"chunk store at {root} was built for a different "
+                    f"partitioning (P, B, batch_size, v_max) = {got}; "
+                    f"this graph's spec has {want}")
+
+        if self._ooc:
+            if not isinstance(store, ChunkStore):
+                raise ValueError("executor='ooc' requires a ChunkStore "
+                                 "(ChunkStore.build(graph, fmts, root))")
+            check_store_spec(store.manifest, store.root)
             self.ooc_source = DiskChunkSource(store, graph, fmts)
             self.spill = VertexSpill(
                 os.path.join(store.root, "vertex"), spec.num_partitions,
                 spec.num_batches, spec.batch_size, spec.v_max)
-            self._ooc_last_state = None
+        if self._dist_ooc:
+            if not isinstance(store, ShardedChunkStore):
+                raise ValueError(
+                    "executor='dist_ooc' requires a ShardedChunkStore "
+                    "(ChunkStore.build_sharded(graph, fmts, root, W))")
+            if store.num_workers != config.num_workers:
+                raise ValueError(
+                    f"num_workers={config.num_workers} does not match the "
+                    f"sharded store's {store.num_workers} worker shards")
+            if config.msg_bytes != WIRE_MSG_BYTES:
+                raise ValueError(
+                    f"executor='dist_ooc' serializes float32 message values "
+                    f"on the wire; msg_bytes must be {WIRE_MSG_BYTES} so "
+                    "measured network bytes can equal the model")
+            for s in store.shards:
+                check_store_spec(s.manifest, s.root)
+            self.worker_parts = [tuple(s.partitions) for s in store.shards]
+            self.worker_of = store.worker_of
+            self.dist_sources = [DiskChunkSource(s, graph, fmts)
+                                 for s in store.shards]
+            self.spills = [VertexSpill(
+                os.path.join(s.root, "vertex"), len(parts),
+                spec.num_batches, spec.batch_size, spec.v_max)
+                for s, parts in zip(store.shards, self.worker_parts)]
+            self.reset_worker_totals()
         # block_csr backend state (built lazily on first use)
         self._block = None
         self._block_host = None
@@ -211,30 +310,56 @@ class Engine:
             state = {k: jax.device_put(v, self._shard) for k, v in state.items()}
         return state
 
-    # -- OOC state residency ------------------------------------------------
+    # -- OOC / dist_ooc state residency -------------------------------------
     def _sync_ooc_state(self, state: State) -> None:
-        """Make the spill authoritative for ``state``.
+        """Make the spill(s) authoritative for ``state``.
 
-        States returned by OOC calls are recognized by identity and skipped
-        (they are views of the spill already); anything else — the initial
+        States returned by OOC/dist calls are recognized by identity and
+        skipped (the spills already hold them); anything else — the initial
         ``init_state`` dict or caller-constructed arrays — is loaded as an
         unmeasured preprocessing sync."""
         if state is self._ooc_last_state:
             return
-        self.spill.load({k: np.asarray(v) for k, v in state.items()})
-        self.spill.write_bitmap(np.asarray(self.graph.vertex_valid))
+        arrs = {k: np.asarray(v) for k, v in state.items()}
+        valid = np.asarray(self.graph.vertex_valid)
+        if self._dist_ooc:
+            for w, parts in enumerate(self.worker_parts):
+                lo, hi = parts[0], parts[-1] + 1
+                self.spills[w].load({k: v[lo:hi] for k, v in arrs.items()})
+                self.spills[w].write_bitmap(valid[lo:hi])
+                self.spills[w].reset_io_counters()
+            return
+        self.spill.load(arrs)
+        self.spill.write_bitmap(valid)
         self.spill.reset_io_counters()
 
+    def _dist_state_views(self) -> State:
+        """Lazy [P, V] state over the per-worker spills (the worker blocks
+        are contiguous partition ranges, in order).  Intermediate
+        iterations only identity-check the returned state, so the
+        per-key concatenation is deferred to first access — like the OOC
+        executor's zero-copy views, the full vertex state is never
+        materialized unless a caller actually reads it."""
+        return _BlockState([sp.state_views() for sp in self.spills])
+
+    def reset_worker_totals(self) -> None:
+        """Per-worker measured traffic accumulated across calls (the
+        max-per-worker quantities of the scaling benchmark)."""
+        self.worker_totals = [
+            dict(disk_bytes=0.0, net_bytes=0.0, edges_touched=0.0)
+            for _ in range(self.config.num_workers)]
+
     def _check_measured(self, counters: dict) -> None:
-        """Cross-check measured storage traffic against the analytic model
-        (the fully-out-of-core claim, enforced every call)."""
+        """Cross-check measured storage (and, for dist_ooc, network)
+        traffic against the analytic model (the fully-out-of-core claim,
+        enforced every call)."""
         if not self.config.verify_io:
             return
-        for mk, ak in MEASURED_PAIRS:
+        for mk, ak in self._measured_pairs:
             if abs(float(counters[mk]) - float(counters[ak])) > 0.5:
                 raise RuntimeError(
-                    f"OOC measured/model I/O mismatch: {mk}="
-                    f"{counters[mk]:.1f} vs {ak}={counters[ak]:.1f}")
+                    f"{self.config.executor} measured/model I/O mismatch: "
+                    f"{mk}={counters[mk]:.1f} vs {ak}={counters[ak]:.1f}")
 
     # -- block_csr backend plumbing ----------------------------------------
     def _ensure_block(self):
@@ -295,6 +420,8 @@ class Engine:
         spec = g.spec
         if self._ooc:
             return self._ooc_process_vertices(state, work_fn, active)
+        if self._dist_ooc:
+            return self._dist_process_vertices(state, work_fn, active)
 
         def step(state, active, vertex_valid, global_id):
             amask = vertex_valid if active is None else (active & vertex_valid)
@@ -335,40 +462,68 @@ class Engine:
         return fn(state, active, self._garrs["vertex_valid"],
                   self._garrs["global_id"])
 
-    def _ooc_process_vertices(self, state, work_fn, active):
-        """ProcessVertices against the disk-resident vertex spill: measured
-        bitmap + active-batch reads, compute, measured write-back."""
+    def _spill_process_vertices(self, spill, amask_rows, gid_rows, work_fn,
+                                counters):
+        """One spill's ProcessVertices body, shared by the OOC executor
+        (the single spill) and dist_ooc (looped per worker): measured
+        bitmap + active-batch reads, compute on the spill's partition
+        rows, measured write-back; accumulates the modeled and measured
+        vertex-I/O counters and returns (total, measured r/w delta)."""
         spec = self.graph.spec
-        bs, b_cnt = spec.batch_size, spec.num_batches
-        v_max = spec.v_max
-        self._sync_ooc_state(state)
-        spill = self.spill
+        bs, b_cnt, v_max = spec.batch_size, spec.num_batches, spec.v_max
         sr0, sw0 = spill.bytes_read, spill.bytes_written
+        spill.read_bitmap()                                     # measured
+        batches = _executor._batch_any(amask_rows, bs, b_cnt)
+        rstate_pad = spill.read(batches)                        # measured
+        rstate = {k: v[:, :v_max] for k, v in rstate_pad.items()}
+        updates, ret = work_fn({k: jnp.asarray(v)
+                                for k, v in rstate.items()}, gid_rows)
+        spill.merge_write(rstate_pad, updates, amask_rows,
+                          batches)                              # measured
+        total = float(np.where(amask_rows,
+                               np.asarray(ret, np.float32), 0.0).sum())
+        touched = float(batches.sum()) * bs
+        arrays_bytes = spill.arrays_bytes()
+        counters["vertex_read_bytes"] += (touched * arrays_bytes
+                                          + float(spill.bitmap_nbytes()))
+        counters["vertex_write_bytes"] += touched * arrays_bytes
+        dr = spill.bytes_read - sr0
+        dw = spill.bytes_written - sw0
+        counters["measured_vertex_read_bytes"] += dr
+        counters["measured_vertex_write_bytes"] += dw
+        return total, dr, dw
+
+    def _ooc_process_vertices(self, state, work_fn, active):
+        """ProcessVertices against the disk-resident vertex spill."""
+        self._sync_ooc_state(state)
         vertex_valid = np.asarray(self.graph.vertex_valid)
         amask = (vertex_valid if active is None
                  else np.asarray(active, bool) & vertex_valid)
         counters = {k: 0.0 for k in self.counter_keys}
-
-        spill.read_bitmap()                                     # measured
-        batches = _executor._batch_any(amask, bs, b_cnt)
-        rstate_pad = spill.read(batches)                        # measured
-        rstate = {k: v[:, :v_max] for k, v in rstate_pad.items()}
-        updates, ret = work_fn({k: jnp.asarray(v)
-                                for k, v in rstate.items()},
-                               self.global_id)
-        spill.merge_write(rstate_pad, updates, amask, batches)  # measured
-        total = float(np.where(amask,
-                               np.asarray(ret, np.float32), 0.0).sum())
-
-        arrays_bytes = spill.arrays_bytes()
-        touched = float(batches.sum()) * bs
-        counters["vertex_read_bytes"] = (touched * arrays_bytes
-                                         + bitmap_model_bytes(amask))
-        counters["vertex_write_bytes"] = touched * arrays_bytes
-        counters["measured_vertex_read_bytes"] = spill.bytes_read - sr0
-        counters["measured_vertex_write_bytes"] = spill.bytes_written - sw0
+        total, _, _ = self._spill_process_vertices(
+            self.spill, amask, self.global_id, work_fn, counters)
         self._check_measured(counters)
-        new_state = spill.state_views()
+        new_state = self.spill.state_views()
+        self._ooc_last_state = new_state
+        return new_state, total, counters
+
+    def _dist_process_vertices(self, state, work_fn, active):
+        """ProcessVertices with each worker serving only its own spill."""
+        self._sync_ooc_state(state)
+        vertex_valid = np.asarray(self.graph.vertex_valid)
+        amask = (vertex_valid if active is None
+                 else np.asarray(active, bool) & vertex_valid)
+        counters = {k: 0.0 for k in self.counter_keys}
+        total = 0.0
+        for w, parts in enumerate(self.worker_parts):
+            lo, hi = parts[0], parts[-1] + 1
+            t, dr, dw = self._spill_process_vertices(
+                self.spills[w], amask[lo:hi], self.global_id[lo:hi],
+                work_fn, counters)
+            total += t
+            self.worker_totals[w]["disk_bytes"] += dr + dw
+        self._check_measured(counters)
+        new_state = self._dist_state_views()
         self._ooc_last_state = new_state
         return new_state, total, counters
 
@@ -391,7 +546,7 @@ class Engine:
         backend = self.config.compute_backend
         if backend not in ("segment", "block_csr"):
             raise ValueError(f"unknown compute_backend: {backend!r}")
-        if self._ooc:
+        if self._ooc or self._dist_ooc:
             return self._ooc_process_edges(state, signal_fn, slot_fn,
                                            monoid, apply_fn, active, backend)
         mode_meta, vals = None, None
@@ -433,7 +588,8 @@ class Engine:
 
     def _ooc_process_edges(self, state, signal_fn, slot_fn, monoid,
                            apply_fn, active, backend):
-        """OOC realization of :meth:`process_edges` (DESIGN.md §6)."""
+        """OOC / dist_ooc realization of :meth:`process_edges`
+        (DESIGN.md §6, §7)."""
         mode_meta = None
         if backend == "block_csr":
             probe = self._probe_slot(slot_fn, monoid)
@@ -442,16 +598,18 @@ class Engine:
             else:
                 _, mode, a_const, _, _ = probe
                 mode_meta = (mode, a_const)
+        make = (_executor.make_dist_ooc_pe if self._dist_ooc
+                else _executor.make_ooc_pe)
         keys = tuple(_executor.fn_code_key(f)
                      for f in (signal_fn, slot_fn, apply_fn))
         cache_key = None
         if all(k is not None for k in keys):
-            cache_key = ("ooc",) + keys + (monoid.name, backend, mode_meta)
+            cache_key = (self.config.executor,) + keys + (
+                monoid.name, backend, mode_meta)
         fn = self._pe_cache.get(cache_key) if cache_key is not None else None
         if fn is None:
-            fn = _executor.make_ooc_pe(
-                self, signal_fn, slot_fn, monoid, apply_fn, backend,
-                mode_meta)
+            fn = make(self, signal_fn, slot_fn, monoid, apply_fn, backend,
+                      mode_meta)
             if cache_key is not None:
                 self._pe_cache[cache_key] = fn
         self._sync_ooc_state(state)

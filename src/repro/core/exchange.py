@@ -1,0 +1,264 @@
+"""Inter-worker message exchange for distributed fully-out-of-core execution.
+
+This layer realizes the paper's need-list-filtered push (§4.3) *on a wire*:
+phase 2's filter emits, per (source partition p, destination partition q),
+a send list — the active vertices of p that q needs — and this module turns
+each list into a **message batch** whose byte representation is chosen
+adaptively (the §4.1 CSR/DCSR idea applied to the network):
+
+* ``pairs`` — compacted ``(src_local int32, value float32)`` entries, one
+  per message: ``count * (4 + msg_bytes)`` bytes.  The DCSR-analogue — only
+  live entries move (grown out of
+  :func:`repro.core.sparse_collectives.compacted_all_to_all`).
+* ``slab``  — a dense batch slab over the source partition's vertex span:
+  a row-packed presence bitmap plus ``v_max`` dense values:
+  ``ceil(v_max / 8) + v_max * msg_bytes`` bytes.  The CSR-analogue —
+  position-indexed, wins when most vertices send (grown out of
+  :func:`repro.core.sparse_collectives.filtered_all_to_all`).
+
+The decision rule (``slab < pairs``) and the priced bytes come from ONE
+function (:func:`batch_wire_bytes`), used both by the executors' analytic
+``net_bytes`` counters and by :meth:`Exchange.post` to pick the physical
+encoding — so ``measured_net_bytes == modeled_net_bytes`` by construction,
+the same audit discipline the chunk store established for disk (DESIGN.md
+§6/§7).
+
+Framing metadata — (p, q, format tag, count) per batch — travels
+out-of-band as Python scalars and is *not* priced: like the dispatching
+graph and the need-bitmaps, it is O(P^2) control state, not bulk data
+(the paper keeps the analogous metadata memory-resident).
+
+:class:`DecodeAhead` is the receive-side twin of
+:class:`~repro.core.chunkstore.ChunkPrefetcher`: a worker thread assembles
+destination partition q+1's ``(recv_mask, recv_msg)`` view while the
+consumer streams and combines q's chunks — incoming exchange decode
+overlaps disk reads and compute.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Sequence
+
+import numpy as np
+
+from repro.utils import ceil_div
+
+WIRE_MSG_BYTES = 4          # float32 payload values on the wire
+_IDX_BYTES = 4              # int32 source-local index per compacted pair
+
+FMT_PAIRS = 0
+FMT_SLAB = 1
+
+
+# ---------------------------------------------------------------------------
+# The byte model (shared by analytic counters and the physical encoder)
+# ---------------------------------------------------------------------------
+
+def pair_batch_bytes(count, msg_bytes: int):
+    """Compacted (index, value) encoding: ``count`` live messages."""
+    return count * float(_IDX_BYTES + msg_bytes)
+
+
+def slab_batch_bytes(v_max: int, msg_bytes: int) -> float:
+    """Dense batch slab: presence bitmap + one value per source vertex."""
+    return float(ceil_div(v_max, 8) + v_max * msg_bytes)
+
+
+def batch_wire_bytes(count, v_max: int, msg_bytes: int, xp=np):
+    """Priced wire bytes of one (p -> q) message batch.
+
+    ``count`` may be a scalar or an array (numpy or jnp via ``xp``); empty
+    batches are never sent and cost 0.  This is the single source of truth
+    for the network model: every executor's ``net_bytes`` counter and the
+    encoder's format choice derive from it.  The host (numpy) path prices
+    in float64 so the model stays exact against the integer byte sum the
+    wire measures (float32 would round past the verify_io tolerance once a
+    call moves ≳16 MB); the jit path keeps float32, matching the analytic
+    counters' dtype."""
+    acc = xp.float64 if xp is np else xp.float32
+    pairs = pair_batch_bytes(xp.asarray(count, acc), msg_bytes)
+    slab = slab_batch_bytes(v_max, msg_bytes)
+    return xp.where(xp.asarray(count) > 0, xp.minimum(pairs, slab), 0.0)
+
+
+def choose_slab(count: int, v_max: int, msg_bytes: int) -> bool:
+    """True when the dense slab is strictly cheaper than compacted pairs
+    (ties go to pairs — identical bytes, smaller decode work)."""
+    return slab_batch_bytes(v_max, msg_bytes) < pair_batch_bytes(
+        count, msg_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Physical encode / decode
+# ---------------------------------------------------------------------------
+
+def encode_batch(mask: np.ndarray, values: np.ndarray,
+                 count: int | None = None) -> tuple[int, bytes]:
+    """Serialize one message batch; returns (format tag, payload bytes).
+
+    mask [v_max] bool, values [v_max] float32 (entries where ``mask`` is
+    False are never read — unread spill batches may hold garbage).
+    ``count`` is the mask's popcount if the caller already has it.  The
+    payload length equals :func:`batch_wire_bytes` exactly."""
+    v_max = mask.shape[0]
+    if count is None:
+        count = int(mask.sum())
+    if choose_slab(count, v_max, WIRE_MSG_BYTES):
+        bits = np.packbits(np.asarray(mask, bool))
+        dense = np.where(mask, values, 0.0).astype("<f4")
+        return FMT_SLAB, bits.tobytes() + dense.tobytes()
+    idx = np.flatnonzero(mask).astype("<i4")
+    vals = np.asarray(values, "<f4")[idx]
+    return FMT_PAIRS, idx.tobytes() + vals.tobytes()
+
+
+def decode_batch(fmt: int, payload: bytes, count: int, v_max: int
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """Inverse of :func:`encode_batch` -> (mask [v_max], values [v_max])."""
+    if fmt == FMT_SLAB:
+        nbits = ceil_div(v_max, 8)
+        bits = np.frombuffer(payload[:nbits], np.uint8)
+        mask = np.unpackbits(bits)[:v_max].astype(bool)
+        values = np.frombuffer(payload[nbits:], "<f4").copy()
+        return mask, values
+    if fmt != FMT_PAIRS:
+        raise ValueError(f"unknown wire format tag {fmt!r}")
+    idx = np.frombuffer(payload[:count * _IDX_BYTES], "<i4")
+    vals = np.frombuffer(payload[count * _IDX_BYTES:], "<f4")
+    mask = np.zeros(v_max, bool)
+    values = np.zeros(v_max, np.float32)
+    mask[idx] = True
+    values[idx] = vals
+    return mask, values
+
+
+# ---------------------------------------------------------------------------
+# Exchange: per-worker mailboxes with measured wire traffic
+# ---------------------------------------------------------------------------
+
+class Exchange:
+    """Message routing between workers of one dist_ooc ProcessEdges call.
+
+    Senders :meth:`post` one batch per nonempty (p, q) send list; batches
+    whose destination worker differs from the source worker are physically
+    serialized (measured — ``bytes_sent`` is what crossed the wire), while
+    worker-local batches hand the arrays over by reference (nothing crosses
+    a wire, exactly as LOCAL's model counts no self-partition traffic).
+    Receivers drain their inbox per destination partition via
+    :meth:`take_dest`, decoding wire batches back to (mask, values).
+    """
+
+    def __init__(self, num_workers: int, v_max: int):
+        self.num_workers = num_workers
+        self.v_max = v_max
+        # inbox[w][q] -> list of (p, entry); entry is ("local", mask, values)
+        # or ("wire", fmt, count, payload)
+        self._inbox: list[dict[int, list]] = [
+            {} for _ in range(num_workers)]
+        self.bytes_sent = 0.0
+        self.pair_batches = 0
+        self.slab_batches = 0
+        self.bytes_by_sender = np.zeros(num_workers, np.float64)
+
+    def post(self, src_worker: int, dst_worker: int, p: int, q: int,
+             mask: np.ndarray, values: np.ndarray,
+             count: int | None = None) -> None:
+        """``count`` is the mask's popcount when the sender already has it
+        (the routing counts) — avoids re-reducing the mask per batch."""
+        box = self._inbox[dst_worker].setdefault(q, [])
+        if src_worker == dst_worker:
+            box.append((p, ("local", mask, values)))
+            return
+        if count is None:
+            count = int(mask.sum())
+        fmt, payload = encode_batch(mask, values, count)
+        self.bytes_sent += len(payload)
+        self.bytes_by_sender[src_worker] += len(payload)
+        if fmt == FMT_SLAB:
+            self.slab_batches += 1
+        else:
+            self.pair_batches += 1
+        box.append((p, ("wire", fmt, count, payload)))
+
+    def take_dest(self, dst_worker: int, q: int, p_cnt: int
+                  ) -> tuple[np.ndarray, np.ndarray]:
+        """Assemble destination partition q's receive-major view:
+        (recv_mask [P, v_max], recv_msg [P, v_max])."""
+        recv_mask = np.zeros((p_cnt, self.v_max), bool)
+        recv_msg = np.zeros((p_cnt, self.v_max), np.float32)
+        for p, entry in self._inbox[dst_worker].pop(q, ()):
+            if entry[0] == "local":
+                _, mask, values = entry
+                m = np.asarray(mask, bool)
+                recv_mask[p] = m
+                recv_msg[p] = np.where(m, values, 0.0)
+            else:
+                _, fmt, count, payload = entry
+                recv_mask[p], recv_msg[p] = decode_batch(
+                    fmt, payload, count, self.v_max)
+        return recv_mask, recv_msg
+
+
+class DecodeAhead:
+    """Thread-based decode-ahead over a worker's destination partitions.
+
+    Iterates ``(q, recv_mask [P, v_max], recv_msg [P, v_max])`` for each
+    owned destination partition, assembling/decoding partition *q+1*'s view
+    on a worker thread while the consumer combines *q*'s chunks (the
+    receive-side analogue of the chunk store's prefetch pipeline).
+    Worker exceptions re-raise in the consumer."""
+
+    _DONE = object()
+
+    def __init__(self, exchange: Exchange, worker: int,
+                 dests: Sequence[int], p_cnt: int, depth: int = 1):
+        self._exchange = exchange
+        self._worker = worker
+        self._dests = list(dests)
+        self._p_cnt = p_cnt
+        self._queue: queue.Queue = queue.Queue(maxsize=max(1, depth))
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _put(self, item) -> bool:
+        while not self._stop.is_set():
+            try:
+                self._queue.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _run(self):
+        try:
+            for q in self._dests:
+                mask, msg = self._exchange.take_dest(
+                    self._worker, q, self._p_cnt)
+                if not self._put((q, mask, msg)):
+                    return
+            self._put(self._DONE)
+        except BaseException as exc:       # propagate to the consumer
+            self._put(exc)
+
+    def close(self) -> None:
+        self._stop.set()
+        while True:
+            try:
+                self._queue.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join()
+
+    def __iter__(self) -> Iterator[tuple]:
+        try:
+            while True:
+                item = self._queue.get()
+                if item is self._DONE:
+                    return
+                if isinstance(item, BaseException):
+                    raise item
+                yield item
+        finally:
+            self.close()

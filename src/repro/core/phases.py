@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.exchange import batch_wire_bytes
 from repro.kernels.csr_spmv import block_csr_combine
 
 # ---------------------------------------------------------------------------
@@ -32,7 +33,7 @@ from repro.kernels.csr_spmv import block_csr_combine
 # ---------------------------------------------------------------------------
 
 
-def filter_sendmask(amask, need, need_counts, m, cfg):
+def filter_sendmask(amask, need, need_counts, m, cfg, xp=jnp):
     """One source partition's send decision toward every destination.
 
     amask [V] bool: this partition's active (message-producing) vertices.
@@ -42,14 +43,45 @@ def filter_sendmask(amask, need, need_counts, m, cfg):
 
     Returns sendmask [Q, V]: which messages travel to each destination.
     The filter is skipped (send everything) when the need-list is not
-    substantially smaller than the message file (paper's 2x threshold)."""
-    base = jnp.broadcast_to(amask[None, :], need.shape)
+    substantially smaller than the message file (paper's 2x threshold).
+
+    The ONE phase-2 decision for all executors: LOCAL/SHARD_MAP trace it
+    under jit (xp=jnp), the host-side OOC and dist_ooc executors call it
+    with xp=np — same semantics, one place to change them."""
+    base = xp.broadcast_to(amask[None, :], need.shape)
     if not cfg.enable_filtering:
         return base
     filtered = amask[None, :] & need
-    skip = need_counts.astype(jnp.float32) >= (
+    skip = need_counts.astype(xp.float32) >= (
         cfg.filter_skip_threshold * m)
-    return jnp.where(skip[:, None], base, filtered)
+    return xp.where(skip[:, None], base, filtered)
+
+
+def routing_counts(recv_mask, xp=jnp):
+    """Filter output -> the per-(destination, source) routing structure:
+    counts[..., q, p] = messages partition p sends partition q.  This one
+    reduction feeds both the analytic network model
+    (:func:`net_bytes_model`) and the dist_ooc wire (each nonempty count is
+    one message batch posted through :class:`repro.core.exchange.Exchange`),
+    so modeled and measured network traffic derive from the same numbers.
+    Host (numpy) callers count in float64 — exact against measured bytes —
+    while the jit path keeps the counters' float32."""
+    return xp.sum(recv_mask, axis=-1).astype(
+        xp.float64 if xp is np else xp.float32)
+
+
+def net_bytes_model(counts, cross, v_max, msg_bytes, xp=jnp):
+    """Analytic network bytes shared by every executor.
+
+    counts: routing counts (any shape); cross: same-shape bool — True where
+    the (p, q) batch crosses a node boundary (p != q for LOCAL / SHARD_MAP /
+    OOC where each partition is a node; worker(p) != worker(q) for
+    dist_ooc).  Each nonempty crossing batch is priced at its adaptively
+    chosen wire encoding — the same ``exchange.batch_wire_bytes`` the
+    physical encoder uses, so dist_ooc's measured bytes equal this model by
+    construction."""
+    wire = batch_wire_bytes(counts, v_max, msg_bytes, xp=xp)
+    return xp.sum(xp.where(cross, wire, 0.0))
 
 
 # ---------------------------------------------------------------------------

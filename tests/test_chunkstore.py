@@ -7,8 +7,8 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    ChunkStore, Engine, EngineConfig, VertexSpill, build_dist_graph,
-    build_formats, make_spec,
+    ChunkStore, ChunkStoreError, Engine, EngineConfig, VertexSpill,
+    build_dist_graph, build_formats, make_spec,
 )
 from repro.core import algorithms as alg
 from repro.core.chunkstore import MANIFEST_NAME
@@ -86,6 +86,39 @@ def test_read_counts_match_chosen_representation(built):
     assert nb_c == np.asarray(fm.csr_bytes)[q, p, k]
     assert store.chunks_read == 2
     assert store.bytes_read == nb_d + nb_c
+
+
+def test_open_missing_manifest_raises(tmp_path):
+    root = tmp_path / "empty"
+    root.mkdir()
+    with pytest.raises(ChunkStoreError, match="manifest"):
+        ChunkStore.open(str(root))
+
+
+def test_open_truncated_manifest_raises(tmp_path):
+    """A manifest cut off mid-write must surface as a ChunkStoreError
+    naming the file, not a raw JSONDecodeError."""
+    root = tmp_path / "trunc"
+    root.mkdir()
+    path = root / MANIFEST_NAME
+    path.write_text('{"version": 1, "num_partitions": 2, "chu')
+    with pytest.raises(ChunkStoreError, match="truncated or corrupt") as ei:
+        ChunkStore.open(str(root))
+    assert str(path) in str(ei.value)
+
+
+def test_open_missing_edge_file_raises(built, tmp_path):
+    """A manifest whose edge file vanished must raise a ChunkStoreError
+    naming the missing path, not an OSError at first read."""
+    import shutil
+    _, _, _, store = built
+    root = tmp_path / "copy"
+    shutil.copytree(store.root, root)
+    victim = root / "edges_q0.bin"
+    victim.unlink()
+    with pytest.raises(ChunkStoreError, match="missing edge file") as ei:
+        ChunkStore.open(str(root))
+    assert str(victim) in str(ei.value)
 
 
 def test_manifest_reopen(built):

@@ -1,0 +1,272 @@
+"""Distributed fully-out-of-core executor (DESIGN.md §7): per-worker chunk
+shards + need-list-filtered sparse exchange.
+
+Parity gate: dist_ooc matches the LOCAL executor's per-iteration state on
+all four paper algorithms, and the measured disk *and* network traffic
+equals the analytic model (verify_io, on by default, raises on any
+mismatch inside every call — these tests additionally assert the
+accumulated totals and that the adaptive pair-vs-slab wire choice is
+exercised in both directions)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChunkStore, Engine, EngineConfig, build_dist_graph, build_formats,
+    make_spec,
+)
+from repro.core import algorithms as alg
+from repro.core.chunkstore import ShardedChunkStore
+from repro.core.engine import DIST_MEASURED_PAIRS
+from repro.core.exchange import (
+    batch_wire_bytes, choose_slab, decode_batch, encode_batch,
+)
+from repro.data.graphs import rmat_graph
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    g = rmat_graph(7, 16, seed=5, weighted=True)
+    spec = make_spec(g, num_partitions=4, batch_size=16)
+    dg = build_dist_graph(g, spec)
+    fm = build_formats(dg)
+    root = tmp_path_factory.mktemp("dist_store")
+    stores = {w: ChunkStore.build_sharded(dg, fm, str(root / f"W{w}"), w)
+              for w in (1, 2, 4)}
+    return g, dg, fm, stores
+
+
+def dist_engine(dg, fm, stores, w, **over):
+    cfg = EngineConfig(executor="dist_ooc", num_workers=w, **over)
+    return Engine(dg, fm, cfg, store=stores[w])
+
+
+def _state_parity(out_ref, out_dist, *, skip_net=True):
+    """Final state bit-match + per-iteration returns + counters (the network
+    counters differ from LOCAL's when W < P — fewer node boundaries)."""
+    (v1, s1), (v2, s2) = out_ref, out_dist
+    np.testing.assert_allclose(v1, v2, rtol=1e-5, atol=1e-5)
+    assert s1.iterations == s2.iterations
+    np.testing.assert_allclose(s1.per_iter_return, s2.per_iter_return,
+                               rtol=1e-5, atol=1e-5)
+    skip = {"net_bytes"} if skip_net else set()
+    for k in s1.counters:
+        if k in skip:
+            continue
+        assert abs(s1.counters[k] - s2.counters[k]) < 1e-3, (
+            k, s1.counters[k], s2.counters[k])
+    for mk, ak in DIST_MEASURED_PAIRS:   # measured == modeled, accumulated
+        assert abs(s2.counters[mk] - s2.counters[ak]) < 1e-3, (
+            mk, s2.counters[mk], s2.counters[ak])
+
+
+# ---------------------------------------------------------------------------
+# Parity: all four algorithms, W = 1 / 2 / 4 workers
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engines(built):
+    g, dg, fm, stores = built
+    return g, dg, fm, stores, Engine(dg, fm)
+
+
+@pytest.mark.parametrize("w", [1, 2, 4])
+def test_dist_pagerank_parity(engines, w):
+    g, dg, fm, stores, local = engines
+    dist = dist_engine(dg, fm, stores, w)
+    _state_parity(alg.pagerank(local, 4), alg.pagerank(dist, 4))
+
+
+def test_dist_w_eq_p_matches_local_net_model(engines):
+    """With one partition per worker every partition boundary is a node
+    boundary, so even the network counters equal LOCAL's."""
+    g, dg, fm, stores, local = engines
+    dist = dist_engine(dg, fm, stores, 4)
+    _state_parity(alg.pagerank(local, 4), alg.pagerank(dist, 4),
+                  skip_net=False)
+
+
+def test_dist_bfs_parity_selective(engines):
+    """BFS frontiers make iterations partially active: the dist run must
+    skip chunks (selective schedule) while measured disk == model, and its
+    single-vertex first frontier must travel as compacted pairs."""
+    g, dg, fm, stores, local = engines
+    dist = dist_engine(dg, fm, stores, 2)
+    src = int(np.argmax(g.out_degrees()))
+    out_l, out_d = alg.bfs(local, src), alg.bfs(dist, src)
+    _state_parity(out_l, out_d)
+    total_chunks = int((np.asarray(dg.chunk_edges) > 0).sum())
+    iters = out_d[1].iterations
+    assert out_d[1].counters["chunks_read"] < total_chunks * iters
+    assert out_d[1].counters["net_pair_batches"] > 0
+
+
+def test_dist_sssp_parity(engines):
+    g, dg, fm, stores, local = engines
+    dist = dist_engine(dg, fm, stores, 2)
+    src = int(np.argmax(g.out_degrees()))
+    _state_parity(alg.sssp(local, src), alg.sssp(dist, src))
+
+
+def test_dist_wcc_parity(engines, tmp_path):
+    g, dg, fm, stores, local = engines
+    dg_r = build_dist_graph(g.reversed(), dg.spec)
+    fm_r = build_formats(dg_r)
+    local_r = Engine(dg_r, fm_r)
+    stores_r = {2: ChunkStore.build_sharded(dg_r, fm_r,
+                                            str(tmp_path / "rev"), 2)}
+    dist = dist_engine(dg, fm, stores, 2)
+    dist_r = dist_engine(dg_r, fm_r, stores_r, 2)
+    _state_parity(alg.wcc(local, local_r), alg.wcc(dist, dist_r))
+
+
+def test_dist_block_csr_backend_parity(engines):
+    """dist_ooc's streamed Pallas block-CSR combine == LOCAL segment."""
+    g, dg, fm, stores, local = engines
+    dist = dist_engine(dg, fm, stores, 2, compute_backend="block_csr")
+    src = int(np.argmax(g.out_degrees()))
+    _state_parity(alg.pagerank(local, 3), alg.pagerank(dist, 3))
+    _state_parity(alg.sssp(local, src), alg.sssp(dist, src))
+
+
+def test_dist_oracle(engines):
+    g, dg, fm, stores, _ = engines
+    dist = dist_engine(dg, fm, stores, 2)
+    pr, _ = alg.pagerank(dist, 5)
+    ref = alg.ref_pagerank(g.num_vertices, g.src, g.dst, 5)
+    np.testing.assert_allclose(pr, ref, rtol=1e-4, atol=1e-7)
+
+
+def test_dist_single_worker_has_no_wire_traffic(engines):
+    g, dg, fm, stores, _ = engines
+    dist = dist_engine(dg, fm, stores, 1)
+    _, st = alg.pagerank(dist, 2)
+    assert st.counters["net_bytes"] == 0
+    assert st.counters["measured_net_bytes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Adaptive wire format: both directions + measured == modeled by the model
+# ---------------------------------------------------------------------------
+
+def test_dist_adaptive_wire_both_directions(engines):
+    """PageRank (every vertex active, filtering skipped toward dense need
+    lists) must push dense slabs; BFS's sparse frontiers must push pairs —
+    and in both regimes measured bytes equal the model."""
+    g, dg, fm, stores, _ = engines
+    dist = dist_engine(dg, fm, stores, 2)
+    _, st_pr = alg.pagerank(dist, 2)
+    assert st_pr.counters["net_slab_batches"] > 0
+    assert abs(st_pr.counters["measured_net_bytes"]
+               - st_pr.counters["net_bytes"]) < 1e-3
+
+    dist2 = dist_engine(dg, fm, stores, 2)
+    src = int(np.argmax(g.out_degrees()))
+    _, st_bfs = alg.bfs(dist2, src)
+    assert st_bfs.counters["net_pair_batches"] > 0
+    assert abs(st_bfs.counters["measured_net_bytes"]
+               - st_bfs.counters["net_bytes"]) < 1e-3
+
+
+def test_wire_encode_decode_roundtrip_both_formats():
+    rng = np.random.default_rng(0)
+    v_max = 40
+    for density in (0.05, 0.95):
+        mask = rng.random(v_max) < density
+        values = rng.random(v_max).astype(np.float32)
+        fmt, payload = encode_batch(mask, values)
+        expect_slab = choose_slab(int(mask.sum()), v_max, 4)
+        assert (fmt == 1) == expect_slab
+        assert len(payload) == float(batch_wire_bytes(
+            int(mask.sum()), v_max, 4))
+        m2, v2 = decode_batch(fmt, payload, int(mask.sum()), v_max)
+        np.testing.assert_array_equal(mask, m2)
+        np.testing.assert_array_equal(np.where(mask, values, 0.0),
+                                      np.where(m2, v2, 0.0))
+
+
+def test_wire_model_picks_min():
+    v_max = 64
+    slab = -(-v_max // 8) + 4 * v_max
+    assert float(batch_wire_bytes(1, v_max, 4)) == 8.0
+    assert float(batch_wire_bytes(v_max, v_max, 4)) == slab
+    assert float(batch_wire_bytes(0, v_max, 4)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Per-worker accounting + config validation
+# ---------------------------------------------------------------------------
+
+def test_dist_worker_totals_cover_all_traffic(engines):
+    g, dg, fm, stores, _ = engines
+    dist = dist_engine(dg, fm, stores, 2)
+    dist.reset_worker_totals()
+    _, st = alg.pagerank(dist, 2)
+    assert len(dist.worker_totals) == 2
+    net = sum(wt["net_bytes"] for wt in dist.worker_totals)
+    edges = sum(wt["edges_touched"] for wt in dist.worker_totals)
+    disk = sum(wt["disk_bytes"] for wt in dist.worker_totals)
+    assert abs(net - st.counters["measured_net_bytes"]) < 1e-3
+    assert abs(edges - st.counters["edges_touched"]) < 1e-3
+    measured_disk = (st.counters["measured_edge_read_bytes"]
+                     + st.counters["measured_vertex_read_bytes"]
+                     + st.counters["measured_vertex_write_bytes"])
+    assert abs(disk - measured_disk) < 1e-3
+
+
+def test_dist_config_validation(built):
+    g, dg, fm, stores = built
+    plain = ChunkStore.open(stores[1].shards[0].root)
+    with pytest.raises(ValueError, match="ShardedChunkStore"):
+        Engine(dg, fm, EngineConfig(executor="dist_ooc", num_workers=1),
+               store=plain)
+    with pytest.raises(ValueError, match="does not match"):
+        Engine(dg, fm, EngineConfig(executor="dist_ooc", num_workers=4),
+               store=stores[2])
+    with pytest.raises(ValueError, match="msg_bytes"):
+        Engine(dg, fm, EngineConfig(executor="dist_ooc", num_workers=2,
+                                    msg_bytes=8), store=stores[2])
+    with pytest.raises(ValueError, match="divide"):
+        ChunkStore.build_sharded(dg, fm, "/tmp/never-created", 3)
+
+
+def test_dist_store_spec_mismatch_rejected(built, tmp_path):
+    """A sharded store built for a different partitioning must fail at
+    Engine construction with a clear error, not via oblique slicing."""
+    g, dg, fm, stores = built
+    spec8 = make_spec(g, num_partitions=8, batch_size=16)
+    dg8 = build_dist_graph(g, spec8)
+    fm8 = build_formats(dg8)
+    store8 = ChunkStore.build_sharded(dg8, fm8, str(tmp_path / "p8"), 2)
+    with pytest.raises(ValueError, match="different partitioning"):
+        Engine(dg, fm, EngineConfig(executor="dist_ooc", num_workers=2),
+               store=store8)
+
+
+def test_sharded_manifest_robust_open(tmp_path):
+    from repro.core import ChunkStoreError
+    root = tmp_path / "empty"
+    root.mkdir()
+    with pytest.raises(ChunkStoreError, match="shard manifest"):
+        ShardedChunkStore.open(str(root))
+    (root / "shards.json").write_text("{}")
+    with pytest.raises(ChunkStoreError, match="missing keys"):
+        ShardedChunkStore.open(str(root))
+    (root / "shards.json").write_text(
+        '{"version": 99, "num_workers": 1, "num_partitions": 2}')
+    with pytest.raises(ChunkStoreError, match="version"):
+        ShardedChunkStore.open(str(root))
+    (root / "shards.json").write_text(
+        '{"version": 1, "num_workers": 0, "num_partitions": 2}')
+    with pytest.raises(ChunkStoreError, match="positive integer"):
+        ShardedChunkStore.open(str(root))
+
+
+def test_sharded_store_reopen(built):
+    g, dg, fm, stores = built
+    re = ShardedChunkStore.open(stores[2].root)
+    assert re.num_workers == 2
+    assert [tuple(s.partitions) for s in re.shards] == [(0, 1), (2, 3)]
+    # a shard refuses reads for destinations it does not own
+    from repro.core import ChunkStoreError
+    with pytest.raises(ChunkStoreError, match="not owned"):
+        re.shards[0].read_chunk(3, 0, 0, use_csr=False)
