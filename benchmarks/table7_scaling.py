@@ -12,6 +12,19 @@ workers over the same 8-partition graph, each worker owns its own chunk
 shard and vertex spill, and we report the maximum per-worker disk bytes,
 network bytes, and edges touched actually served — the distributed
 fully-out-of-core claim made by the storage and exchange tiers themselves.
+
+Each W row also reports the wall clock of the same run executed twice:
+``seq_s`` with the workers' send/receive loops run one after another (the
+sequential reference) and ``par_s`` with ``parallel_workers=True`` (per-
+phase thread pools + the long-lived lazy-schedule prefetcher, DESIGN.md
+§8).  The two runs are bit-identical in every counter, so the seq/par
+pair is the measured wall-clock analogue of the max-per-worker metric:
+workers overlapping each other's disk, decode, and compute is exactly
+what the paper's Table 7 speedup rests on.  How much of the overlap a
+given host can realize depends on its core count (on a 1–2 core CI box
+the GIL pins the ratio near 1.0); ``max_worker_busy_s`` vs
+``sum_worker_busy_s`` reports the core-count-independent critical path
+next to it.  See benchmarks/README.md for the full column map.
 """
 from __future__ import annotations
 
@@ -62,27 +75,67 @@ def main(scale=10) -> list[str]:
 
     # dist_ooc: measured max per-worker traffic for W = 1, 2, 4 workers
     # (8 partitions; every byte below was physically served by a worker's
-    # own shard/spill or serialized across the exchange wire).
+    # own shard/spill or serialized across the exchange wire).  Each W runs
+    # in both modes — sequential worker loops and parallel_workers=True —
+    # over the same shards; the runs are bit-identical in every counter,
+    # so the seq/par wall-clock pair isolates the pipeline-overlap win.
+    # Both modes are warmed once and timed as best-of-N (min filters
+    # scheduler noise; overlap scales with cores — on a 1–2 core CI box
+    # the GIL bounds the ratio near 1.0, see benchmarks/README.md).
+    # max_worker_busy_s vs sum_worker_busy_s is the core-count-independent
+    # twin: the critical path a parallel run has to pay vs the serial sum.
     spec = make_spec(g, num_partitions=8, batch_size=64)
     dg = build_dist_graph(g, spec)
     fm = build_formats(dg)
+    reps = 5
     for w in (1, 2, 4):
         with tempfile.TemporaryDirectory() as root:
             store = ChunkStore.build_sharded(dg, fm, root, w)
             eng = Engine(dg, fm,
                          EngineConfig(executor="dist_ooc", num_workers=w),
                          store=store)
-            (pr, st), t = timed(lambda: alg.pagerank(eng, 3))
-            disk = max(wt["disk_bytes"] for wt in eng.worker_totals)
-            net = max(wt["net_bytes"] for wt in eng.worker_totals)
-            edges = max(wt["edges_touched"] for wt in eng.worker_totals)
+            par = Engine(dg, fm,
+                         EngineConfig(executor="dist_ooc", num_workers=w,
+                                      parallel_workers=True),
+                         store=store)
+            # Warm both engines (page cache, jax op caches, thread pool),
+            # then interleave the timed reps so neither mode benefits from
+            # running second on a warmer machine; min-of-reps per mode.
+            for e in (eng, par):
+                alg.pagerank(e, 1)
+                e.reset_worker_totals()
+            outs_seq, outs_par = [], []
+            for _ in range(reps):
+                outs_seq.append(timed(lambda: alg.pagerank(eng, 3)))
+                outs_par.append(timed(lambda: alg.pagerank(par, 3)))
+            (pr, st), t_seq = outs_seq[0][0], min(t for _, t in outs_seq)
+            (pr_p, st_p), t_par = outs_par[0][0], min(t for _, t in outs_par)
+            assert np.array_equal(np.asarray(pr), np.asarray(pr_p))
+            assert st.counters == st_p.counters
+            # worker_totals / worker_times accumulated over all `reps`
+            # identical runs — divide back to per-run quantities (traffic
+            # reps are bit-identical, so this is exact; busy is the mean).
+            # Busy comes from the SEQUENTIAL engine: uncontended, its
+            # per-worker elapsed is true work time, so sum = the serial
+            # cost and max = the critical-path floor any parallel run
+            # could reach (the parallel engine's elapsed includes
+            # compute-token waits and would overstate both).
+            disk = max(wt["disk_bytes"] for wt in eng.worker_totals) / reps
+            net = max(wt["net_bytes"] for wt in eng.worker_totals) / reps
+            edges = max(wt["edges_touched"]
+                        for wt in eng.worker_totals) / reps
+            busy = [sum(wt.values()) / reps for wt in eng.worker_times]
             rows.append(csv_row(
-                f"t7/dist_ooc/w{w}", t,
+                f"t7/dist_ooc/w{w}", t_par,
                 f"max_worker_disk_bytes={disk:.0f};"
                 f"max_worker_net_bytes={net:.0f};"
                 f"max_worker_edges={edges:.0f};"
                 f"net_modeled={st.counters['net_bytes']:.0f};"
-                f"net_measured={st.counters['measured_net_bytes']:.0f}"))
+                f"net_measured={st.counters['measured_net_bytes']:.0f};"
+                f"seq_s={t_seq:.3f};par_s={t_par:.3f};"
+                f"overlap_speedup={t_seq / max(t_par, 1e-9):.2f};"
+                f"max_worker_busy_s={max(busy):.3f};"
+                f"sum_worker_busy_s={sum(busy):.3f}"))
     return rows
 
 

@@ -72,15 +72,22 @@ suite_timer_end "OOC parity suite"
 # The distributed parity suite (dist_ooc worker shards + sparse exchange,
 # shard_map-vs-local, filter-never-drops property) is the distributed
 # fully-out-of-core gate; 8 forced host devices so the shard_map paths run
-# on a real (emulated) mesh.
+# on a real (emulated) mesh.  REPRO_DIST_PARALLEL=1 flips every dist_ooc
+# engine in the suite onto the thread-pooled parallel-worker path
+# (EngineConfig.parallel_workers, DESIGN.md §8), so the parity gate proves
+# the concurrent pipeline, not just the sequential reference; compare this
+# suite's timing line against the full-suite run above to see the overlap
+# win in the CI log history.
 suite_timer_start
 DIST_OUT=$(mktemp)
 if ! XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    REPRO_DIST_PARALLEL=1 \
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
     tests/test_dist_ooc.py tests/test_distributed_engine.py \
     tests/test_filter_property.py 2>&1 | tee "$DIST_OUT"; then
     echo "CI FAIL: distributed parity suite (tests/test_dist_ooc.py," \
-         "tests/test_distributed_engine.py, tests/test_filter_property.py)" >&2
+         "tests/test_distributed_engine.py, tests/test_filter_property.py," \
+         "parallel_workers on)" >&2
     exit 1
 fi
 # The hypothesis-based filter property suite importorskips when the module

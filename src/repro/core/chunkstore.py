@@ -42,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import mmap
 import os
 import queue
 import threading
@@ -51,7 +52,7 @@ import numpy as np
 
 from repro.core.formats import ChunkFormats
 from repro.core.partition import DistGraph
-from repro.utils import atomic_write_json, ceil_div
+from repro.utils import atomic_write_json, ceil_div, token_ctx
 
 EDGE_DT = np.dtype([("dst", "<i4"), ("data", "<f4")])   # 8 B per edge
 PAIR_DT = np.dtype([("src", "<i4"), ("idx", "<i4")])    # 8 B per DCSR entry
@@ -128,7 +129,7 @@ class ChunkStore:
                 edges[p, k] = ne
                 has_csr[p, k] = bool(hc)
             self._layout.append(_ChunkLayout(offset, nnz, edges, has_csr))
-        self._mm: dict[int, np.memmap] = {}
+        self._mm: dict[int, mmap.mmap] = {}
         self._lock = threading.Lock()
         self.chunks_read = 0
         self.bytes_read = 0
@@ -220,7 +221,20 @@ class ChunkStore:
                       num_workers: int) -> "ShardedChunkStore":
         """Preprocessing for the dist_ooc executor: W worker shards, each
         with its **own** root (``root/w{w}/``) holding the edge chunks of
-        the contiguous block of destination partitions it owns."""
+        the contiguous block of ``P / W`` destination partitions it owns
+        (``num_workers`` must divide ``num_partitions``; raises ValueError
+        otherwise).
+
+        Each shard is a full :class:`ChunkStore` for its partitions — same
+        file layout, same manifest, same exact byte model — plus a
+        top-level ``shards.json`` recording the topology, so
+        :meth:`ShardedChunkStore.open` can re-open and validate the whole
+        set.  Hand the result to
+        ``Engine(..., EngineConfig(executor="dist_ooc", num_workers=W),
+        store=...)``; each worker then issues disk requests exclusively
+        against its own root, and reading an unowned destination raises
+        :class:`ChunkStoreError` (the distributed analogue of per-node
+        storage)."""
         spec = g.spec
         p_cnt = spec.num_partitions
         if num_workers < 1 or p_cnt % num_workers != 0:
@@ -273,13 +287,23 @@ class ChunkStore:
         return store
 
     # -- reads ---------------------------------------------------------------
-    def _map(self, q: int) -> np.memmap:
-        mm = self._mm.get(q)
-        if mm is None:
-            mm = np.memmap(os.path.join(self.root, f"edges_q{q}.bin"),
-                           dtype=np.uint8, mode="r")
-            self._mm[q] = mm
-        return mm
+    def _map(self, q: int) -> mmap.mmap:
+        # Opening is guarded by the same lock as the I/O counters so
+        # concurrent readers (a prefetch thread racing the consumer, or
+        # parallel dist_ooc workers) never double-open or observe a
+        # half-published map.  A stdlib mmap, not np.memmap: slicing it is
+        # one C-level memcpy into fresh bytes, where np.memmap slicing
+        # walks numpy's Python-side view machinery per request —
+        # measurably GIL-bound when W prefetch threads read their shards
+        # concurrently (DESIGN.md §8).
+        with self._lock:
+            mm = self._mm.get(q)
+            if mm is None:
+                with open(os.path.join(self.root, f"edges_q{q}.bin"),
+                          "rb") as f:
+                    mm = mmap.mmap(f.fileno(), 0, access=mmap.ACCESS_READ)
+                self._mm[q] = mm
+            return mm
 
     def chunk_stored_nbytes(self, q: int, p: int, k: int) -> tuple[int, int]:
         """(dcsr_read_bytes, csr_read_bytes) for a chunk; csr part is 0 when
@@ -293,13 +317,20 @@ class ChunkStore:
                if lay.has_csr[p, k] else 0)
         return dcsr, csr
 
-    def read_chunk(self, q: int, p: int, k: int, use_csr: bool):
-        """Read one chunk; returns (src_local, dst_local, data, nbytes).
+    def read_chunk_bytes(self, q: int, p: int, k: int, use_csr: bool
+                         ) -> tuple[bytes, bytes, int]:
+        """The measured I/O half of a chunk read: ``pread`` the chosen
+        index section (DCSR pairs or CSR idx) and the payload; returns
+        (index bytes, payload bytes, nbytes read).
 
-        ``use_csr`` selects the representation actually read (the runtime
-        seek-cost decision); asking for CSR where none is stored is a bug in
-        the caller's format choice and raises.
-        """
+        Split from :meth:`decode_chunk` so the prefetch pipeline can fetch
+        bytes *outside* the parallel executor's compute token and decode
+        under it — the fetch is one C-level memcpy (or, on a cold cache,
+        kernel page faults), while the decode is the numpy burst that must
+        take its turn (DESIGN.md §8).  ``use_csr`` selects the
+        representation actually read (the runtime seek-cost decision);
+        asking for CSR where none is stored is a bug in the caller's
+        format choice and raises."""
         lay = self._layout_of(q)
         off = int(lay.offset[p, k])
         if off < 0:
@@ -311,25 +342,44 @@ class ChunkStore:
         pairs_nb = nnz * PAIR_DT.itemsize
         idx_nb = (v_src + 1) * 4 if lay.has_csr[p, k] else 0
         pay_off = off + pairs_nb + idx_nb
-        payload = np.frombuffer(mm[pay_off:pay_off + n_e * EDGE_DT.itemsize],
-                                dtype=EDGE_DT)
+        payload = mm[pay_off:pay_off + n_e * EDGE_DT.itemsize]
         if use_csr:
             if not lay.has_csr[p, k]:
                 raise ValueError(
                     f"chunk ({q}, {p}, {k}) has no CSR representation")
-            idx = np.frombuffer(mm[off + pairs_nb:off + pairs_nb + idx_nb],
-                                dtype="<i4")
-            src = np.repeat(np.arange(v_src, dtype=np.int32), np.diff(idx))
-            nbytes = idx_nb + payload.nbytes
+            index = mm[off + pairs_nb:off + pairs_nb + idx_nb]
         else:
-            pairs = np.frombuffer(mm[off:off + pairs_nb], dtype=PAIR_DT)
-            runs = np.append(pairs["idx"][1:], np.int32(n_e)) - pairs["idx"]
-            src = np.repeat(pairs["src"], runs)
-            nbytes = pairs_nb + payload.nbytes
+            index = mm[off:off + pairs_nb]
+        nbytes = len(index) + len(payload)
         with self._lock:
             self.chunks_read += 1
             self.bytes_read += nbytes
-        return (src, payload["dst"].copy(), payload["data"].copy(), nbytes)
+        return index, payload, nbytes
+
+    def decode_chunk(self, q: int, p: int, k: int, use_csr: bool,
+                     index: bytes, payload: bytes):
+        """Decode the bytes of :meth:`read_chunk_bytes` back to the in-HBM
+        triple (src_local, dst_local, data) — bit-identical round trip."""
+        lay = self._layout_of(q)
+        n_e = int(lay.edges[p, k])
+        v_src = int(self.part_sizes[p])
+        pay = np.frombuffer(payload, dtype=EDGE_DT)
+        if use_csr:
+            idx = np.frombuffer(index, dtype="<i4")
+            src = np.repeat(np.arange(v_src, dtype=np.int32), np.diff(idx))
+        else:
+            pairs = np.frombuffer(index, dtype=PAIR_DT)
+            runs = np.append(pairs["idx"][1:], np.int32(n_e)) - pairs["idx"]
+            src = np.repeat(pairs["src"], runs)
+        return src, pay["dst"].copy(), pay["data"].copy()
+
+    def read_chunk(self, q: int, p: int, k: int, use_csr: bool):
+        """Read + decode one chunk; returns (src_local, dst_local, data,
+        nbytes).  Convenience composition of :meth:`read_chunk_bytes` and
+        :meth:`decode_chunk` for callers outside the prefetch pipeline."""
+        index, payload, nbytes = self.read_chunk_bytes(q, p, k, use_csr)
+        src, dst, data = self.decode_chunk(q, p, k, use_csr, index, payload)
+        return src, dst, data, nbytes
 
     def reset_io_counters(self) -> None:
         with self._lock:
@@ -460,26 +510,43 @@ class VertexSpill:
         """Zero-copy [P, v_max] views of the authoritative on-disk state."""
         return {name: mm[:, :self.v_max] for name, mm in self._mm.items()}
 
+    def _batch_runs(self, batch_mask: np.ndarray) -> list:
+        """Coalesce touched batches into per-row contiguous column spans
+        ``(p, lo, hi)`` — one slice per run instead of one per batch, so a
+        dense mask (PageRank touches everything) costs P python-level
+        copies, not P * B.  The request granularity the byte counters see
+        is unchanged: runs cover exactly the touched batches."""
+        bs = self.batch_size
+        runs = []
+        for p in range(self.p_cnt):
+            ks = np.flatnonzero(batch_mask[p])
+            if not ks.size:
+                continue
+            splits = np.flatnonzero(np.diff(ks) > 1) + 1
+            for grp in np.split(ks, splits):
+                runs.append((p, int(grp[0]) * bs, (int(grp[-1]) + 1) * bs))
+        return runs
+
     def read(self, batch_mask: np.ndarray) -> dict[str, np.ndarray]:
         """Measured read of every batch with a set bit in ``batch_mask``
         [P, B].  Returns padded [P, v_pad] copies, zeros where unread."""
-        bs = self.batch_size
         out = {}
         touched = int(batch_mask.sum())
+        runs = self._batch_runs(batch_mask)
         for name, mm in self._mm.items():
             arr = np.zeros((self.p_cnt, self.v_pad), mm.dtype)
-            for p, k in zip(*np.nonzero(batch_mask)):
-                arr[p, k * bs:(k + 1) * bs] = mm[p, k * bs:(k + 1) * bs]
+            for p, lo, hi in runs:
+                arr[p, lo:hi] = mm[p, lo:hi]
             out[name] = arr
-            self.bytes_read += touched * bs * mm.dtype.itemsize
+            self.bytes_read += touched * self.batch_size * mm.dtype.itemsize
         return out
 
     def write(self, updates: dict[str, np.ndarray], batch_mask: np.ndarray
               ) -> None:
         """Measured write-back of touched batches from padded [P, v_pad]
         (or [P, v_max]) arrays."""
-        bs = self.batch_size
         touched = int(batch_mask.sum())
+        runs = self._batch_runs(batch_mask)
         for name, arr in updates.items():
             mm = self._mm[name]
             arr = np.asarray(arr, mm.dtype)
@@ -487,9 +554,10 @@ class VertexSpill:
                 pad = np.zeros((self.p_cnt, self.v_pad), mm.dtype)
                 pad[:, :arr.shape[1]] = arr
                 arr = pad
-            for p, k in zip(*np.nonzero(batch_mask)):
-                mm[p, k * bs:(k + 1) * bs] = arr[p, k * bs:(k + 1) * bs]
-            self.bytes_written += touched * bs * mm.dtype.itemsize
+            for p, lo, hi in runs:
+                mm[p, lo:hi] = arr[p, lo:hi]
+            self.bytes_written += (touched * self.batch_size
+                                   * mm.dtype.itemsize)
 
     def merge_write(self, padded_state: dict[str, np.ndarray],
                     updates: dict[str, np.ndarray], mask: np.ndarray,
@@ -588,10 +656,29 @@ class DiskChunkSource:
     def read_chunk(self, q: int, p: int, k: int, use_csr: bool):
         return self.store.read_chunk(q, p, k, use_csr)
 
+    def read_chunk_bytes(self, q: int, p: int, k: int, use_csr: bool):
+        return self.store.read_chunk_bytes(q, p, k, use_csr)
+
+    def decode_chunk(self, q: int, p: int, k: int, use_csr: bool,
+                     index: bytes, payload: bytes):
+        return self.store.decode_chunk(q, p, k, use_csr, index, payload)
+
 
 # ---------------------------------------------------------------------------
 # Double-buffered prefetch pipeline
 # ---------------------------------------------------------------------------
+
+class ScheduleMark:
+    """Marker base for passthrough schedule items (DESIGN.md §8).
+
+    A :class:`ChunkPrefetcher` schedule may interleave chunk-read requests
+    with ``ScheduleMark`` subclasses; marks are forwarded to the consumer
+    unchanged, in order, without touching the store.  The dist_ooc executor
+    uses this to flow per-destination-partition headers (the decoded
+    receive view + dispatch counters) through the same FIFO as the chunk
+    work items, so one long-lived prefetcher can span every destination
+    partition a worker owns instead of being torn down per partition."""
+
 
 @dataclasses.dataclass
 class BatchWork:
@@ -610,21 +697,55 @@ class BatchWork:
 class ChunkPrefetcher:
     """Thread-based double-buffered chunk reader.
 
-    ``schedule`` is a list of ``(q, k, [(p, use_csr), ...])`` items in
-    processing order; the worker thread keeps at most ``depth`` decoded
-    items ahead of the consumer, so disk reads for batch *i+1* overlap the
-    combine of batch *i*.  Worker exceptions re-raise in the consumer.
+    ``schedule`` is any iterable whose items are either
+
+    * ``(q, k, [(p, use_csr), ...])`` — a chunk-read request: the prefetch
+      thread reads and decodes those chunks from the store and enqueues one
+      :class:`BatchWork`, or
+    * a :class:`ScheduleMark` instance — forwarded to the consumer
+      unchanged, in order (per-partition headers for the lazy dist_ooc
+      schedule).
+
+    The worker thread keeps at most ``depth`` decoded items ahead of the
+    consumer, so disk reads for batch *i+1* overlap the combine of batch
+    *i*.  The schedule may be a **generator**: it is advanced on the
+    prefetch thread (so any work it does — e.g. dist_ooc's per-partition
+    dispatch over the DCSR graph — runs off the consumer's critical path)
+    and is explicitly closed when the pipeline shuts down, normally or
+    early, so generator ``finally`` blocks (and any nested pipelines such
+    as :class:`~repro.core.exchange.DecodeAhead`) always run on the
+    prefetch thread.  Worker exceptions re-raise in the consumer.
+
+    ``compute_lock`` is the parallel dist_ooc executor's shared compute
+    token (DESIGN.md §8): when set, the read+decode of each schedule item
+    runs holding it, so the host-CPU bursts of W concurrent worker
+    pipelines take orderly turns instead of convoying on the GIL at every
+    small numpy call.  The token is *never* held across a queue put/get —
+    blocking on a full queue while holding the token the consumer needs
+    to drain it would deadlock the pipeline.
+
+    ``runner`` is an optional executor (a long-lived ThreadPoolExecutor)
+    to host the prefetch loop — reusing warm threads instead of spawning
+    one per pipeline, which the parallel dist_ooc executor would
+    otherwise do 2·W times per iteration.
     """
 
     _DONE = object()
 
-    def __init__(self, source: DiskChunkSource, schedule, depth: int = 2):
+    def __init__(self, source: DiskChunkSource, schedule, depth: int = 2,
+                 compute_lock=None, runner=None):
         self._source = source
         self._schedule = schedule
+        self._lock_ctx = token_ctx(compute_lock)
         self._queue: queue.Queue = queue.Queue(maxsize=max(1, depth))
         self._stop = threading.Event()
-        self._thread = threading.Thread(target=self._run, daemon=True)
-        self._thread.start()
+        if runner is None:
+            thread = threading.Thread(target=self._run, daemon=True)
+            thread.start()
+            self._join = thread.join
+        else:
+            future = runner.submit(self._run)
+            self._join = lambda: future.exception()
 
     def _put(self, item) -> bool:
         """Blocking put that aborts when the consumer closed the pipeline
@@ -640,25 +761,47 @@ class ChunkPrefetcher:
 
     def _run(self):
         try:
-            for q, k, chunks in self._schedule:
-                srcs, parts, dsts, datas = [], [], [], []
-                nbytes = 0
-                for p, use_csr in chunks:
-                    s, d, w, nb = self._source.read_chunk(q, p, k, use_csr)
-                    srcs.append(s)
-                    parts.append(np.full(s.shape[0], p, np.int32))
-                    dsts.append(d)
-                    datas.append(w)
-                    nbytes += nb
-                cat = lambda xs, dt: (np.concatenate(xs) if xs
-                                      else np.zeros(0, dt))
-                if not self._put(BatchWork(
-                        q=q, k=k, src=cat(srcs, np.int32),
-                        part=cat(parts, np.int32), dst=cat(dsts, np.int32),
-                        data=cat(datas, np.float32), nbytes=nbytes,
-                        n_chunks=len(chunks))):
-                    return
-            self._put(self._DONE)
+            try:
+                for item in self._schedule:
+                    if isinstance(item, ScheduleMark):
+                        if not self._put(item):
+                            return
+                        continue
+                    q, k, chunks = item
+                    # Fetch bytes first, token-free (C-level copy / kernel
+                    # page faults); only the numpy decode takes the token.
+                    raw = [(p, use_csr,
+                            self._source.read_chunk_bytes(q, p, k, use_csr))
+                           for p, use_csr in chunks]
+                    with self._lock_ctx:     # token held: decode burst
+                        srcs, parts, dsts, datas = [], [], [], []
+                        nbytes = 0
+                        for p, use_csr, (index, payload, nb) in raw:
+                            s, d, w = self._source.decode_chunk(
+                                q, p, k, use_csr, index, payload)
+                            srcs.append(s)
+                            parts.append(np.full(s.shape[0], p, np.int32))
+                            dsts.append(d)
+                            datas.append(w)
+                            nbytes += nb
+                        cat = lambda xs, dt: (np.concatenate(xs) if xs
+                                              else np.zeros(0, dt))
+                        work = BatchWork(
+                            q=q, k=k, src=cat(srcs, np.int32),
+                            part=cat(parts, np.int32),
+                            dst=cat(dsts, np.int32),
+                            data=cat(datas, np.float32), nbytes=nbytes,
+                            n_chunks=len(chunks))
+                    if not self._put(work):  # token released: may block
+                        return
+                self._put(self._DONE)
+            finally:
+                # Close generator schedules on THIS thread so their finally
+                # blocks (DecodeAhead teardown, etc.) run even when the
+                # consumer abandons iteration early.
+                close = getattr(self._schedule, "close", None)
+                if close is not None:
+                    close()
         except BaseException as exc:   # propagate to the consumer
             self._put(exc)
 
@@ -671,7 +814,7 @@ class ChunkPrefetcher:
                 self._queue.get_nowait()
             except queue.Empty:
                 break
-        self._thread.join()
+        self._join()
 
     def __iter__(self) -> Iterator[BatchWork]:
         try:

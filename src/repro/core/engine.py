@@ -40,7 +40,11 @@ below 2**24; benchmark drivers accumulate across iterations in Python floats.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import threading
+import time
 import warnings
+from concurrent.futures import ThreadPoolExecutor
 from collections.abc import Mapping
 from typing import Callable, Dict
 
@@ -59,7 +63,10 @@ from repro.core.chunkstore import (
 from repro.core.exchange import WIRE_MSG_BYTES
 from repro.core.formats import ChunkFormats, build_block_tiles
 from repro.core.partition import DistGraph
-from repro.core.phases import batch_touched, bitmap_model_bytes
+from repro.core.phases import (
+    batch_touched, bitmap_model_bytes, reduce_worker_counters,
+)
+from repro.utils import token_ctx
 
 State = Dict[str, jnp.ndarray]      # name -> [P, V] stacked vertex arrays
 
@@ -90,21 +97,83 @@ MAX = Monoid("max", float(np.finfo(np.float32).min))
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    """Tunables mirroring the paper's knobs."""
-    enable_filtering: bool = True          # §4.3
-    filter_skip_threshold: float = 2.0     # skip filter if |L_ij|/|M_i| >= 2
-    msg_bytes: int = 4                     # payload bytes per message value
-    enable_adaptive_formats: bool = True   # §4.1 runtime CSR/DCSR choice
-    account_io: bool = True                # maintain modeled I/O counters
-    compute_backend: str = "segment"       # "segment" | "block_csr"
-    block_tile: int = 8                    # T for the block_csr backend
-    executor: str = "auto"                 # "auto" (local / shard_map by
-    #                                        mesh) | "ooc" (needs a store) |
-    #                                        "dist_ooc" (sharded store +
-    #                                        num_workers)
-    verify_io: bool = True                 # OOC: raise if measured != model
-    ooc_prefetch_depth: int = 2            # double-buffered by default
-    num_workers: int = 1                   # W for executor="dist_ooc"
+    """Tunables mirroring the paper's knobs (plus this repo's executor and
+    audit switches).  See README.md for the executor matrix and DESIGN.md
+    §6–§8 for the out-of-core, distributed, and parallel-pipeline layers."""
+
+    enable_filtering: bool = True
+    """Apply the paper's §4.3 need-list message filter in phase 2: a
+    message travels to destination partition q only if q actually has an
+    in-edge from its source vertex.  Off = every active message is sent to
+    every partition (the Chaos-like behavior the paper improves on)."""
+
+    filter_skip_threshold: float = 2.0
+    """Skip the filter toward a destination when its need list is not
+    substantially smaller than the message file — send everything once
+    ``|L_pq| >= threshold * |M_p]``.  2.0 is the paper's heuristic: below
+    a 2x reduction the filter costs more than it saves."""
+
+    msg_bytes: int = 4
+    """Payload bytes per message value in the I/O and network byte models.
+    The dist_ooc executor serializes float32 values on a real wire, so it
+    requires the wire's 4 (validated at Engine construction)."""
+
+    enable_adaptive_formats: bool = True
+    """Per-chunk runtime CSR/DCSR selection (paper §4.1): each active chunk
+    is read in whichever representation the seek-cost model prices cheaper
+    for this iteration's message density.  Required by the ooc / dist_ooc
+    executors — their physical reads follow the same decision, which is
+    what makes measured bytes equal the model."""
+
+    account_io: bool = True
+    """Maintain the modeled I/O counters (vertex/edge/bitmap bytes).
+    Required by the ooc / dist_ooc executors: the measured-vs-modeled
+    cross-check needs both sides."""
+
+    compute_backend: str = "segment"
+    """Phase-4 combine implementation: ``"segment"`` (flat per-edge gather
+    + segment reduction; the reference) or ``"block_csr"`` (the Pallas
+    block-CSR tile kernel with zero-skipping of chunks that received no
+    messages — DESIGN.md §4).  Non-affine slot functions fall back to
+    segment with a warning.  Note: the ooc / dist_ooc executors evaluate
+    segment-backend ``slot_fn`` on host **numpy** arrays (the streamed
+    per-batch calls must not route through jax's eager dispatch, which
+    serializes parallel workers — DESIGN.md §8); write slots as plain
+    array arithmetic, valid for numpy and jnp operands alike, as all four
+    paper algorithms do."""
+
+    block_tile: int = 8
+    """Tile edge length T for the block_csr backend (tiles are [T, T])."""
+
+    executor: str = "auto"
+    """Which executor realizes ProcessEdges: ``"auto"`` picks LOCAL (no
+    mesh) or SHARD_MAP (a mesh was passed); ``"ooc"`` streams disk-resident
+    chunks on one host (requires ``store=ChunkStore.build(...)``);
+    ``"dist_ooc"`` runs W workers over per-worker chunk shards (requires
+    ``store=ChunkStore.build_sharded(...)`` and ``num_workers``)."""
+
+    verify_io: bool = True
+    """For ooc / dist_ooc: raise inside every call if any measured counter
+    (disk bytes, chunks, and — dist_ooc — network bytes) deviates from the
+    analytic model.  The repo's signature invariant; leave it on."""
+
+    ooc_prefetch_depth: int = 2
+    """How many decoded dst-batch work items the chunk prefetch thread may
+    run ahead of the combine (2 = classic double buffering)."""
+
+    num_workers: int = 1
+    """W for ``executor="dist_ooc"``: each worker owns a contiguous block
+    of P / W destination partitions (P % W == 0, validated) backed by its
+    own chunk-store shard and vertex spill."""
+
+    parallel_workers: bool = False
+    """dist_ooc only (validated): run the W per-worker send loops and
+    receive pipelines on per-phase thread pools so workers overlap each
+    other's disk reads, exchange decode, and combine (DESIGN.md §8).
+    Results are bit-identical to sequential execution — counters are
+    reduced in worker index order after each phase joins — so this is
+    purely a wall-clock knob; ``benchmarks/table7_scaling.py`` reports the
+    sequential-vs-parallel times side by side."""
 
 
 COUNTER_KEYS = (
@@ -212,6 +281,11 @@ class Engine:
         # OOC / dist_ooc executor state (DESIGN.md §6, §7)
         if config.executor not in ("auto", "ooc", "dist_ooc"):
             raise ValueError(f"unknown executor: {config.executor!r}")
+        if config.parallel_workers and config.executor != "dist_ooc":
+            raise ValueError(
+                "parallel_workers applies only to executor='dist_ooc' (the "
+                "other executors have no per-worker loops to overlap); got "
+                f"executor={config.executor!r}")
         self._ooc = config.executor == "ooc"
         self._dist_ooc = config.executor == "dist_ooc"
         self._measured_pairs = (DIST_MEASURED_PAIRS if self._dist_ooc
@@ -282,6 +356,21 @@ class Engine:
                 spec.num_batches, spec.batch_size, spec.v_max)
                 for s, parts in zip(store.shards, self.worker_parts)]
             self.reset_worker_totals()
+            # Long-lived phase pool (parallel_workers): one thread per
+            # worker, reused by every ProcessEdges / ProcessVertices phase
+            # barrier; idle threads exit when the engine is collected.
+            self.worker_pool = (
+                ThreadPoolExecutor(max_workers=config.num_workers,
+                                   thread_name_prefix="dist-worker")
+                if config.parallel_workers else None)
+            # Second long-lived pool hosting the per-worker pipeline loops
+            # (one prefetcher + one decode task per worker, DESIGN.md §8)
+            # so parallel iterations reuse warm threads instead of
+            # spawning 2 * W fresh ones each.
+            self.pipeline_pool = (
+                ThreadPoolExecutor(max_workers=2 * config.num_workers,
+                                   thread_name_prefix="dist-pipeline")
+                if config.parallel_workers else None)
         # block_csr backend state (built lazily on first use)
         self._block = None
         self._block_host = None
@@ -344,9 +433,17 @@ class Engine:
 
     def reset_worker_totals(self) -> None:
         """Per-worker measured traffic accumulated across calls (the
-        max-per-worker quantities of the scaling benchmark)."""
+        max-per-worker quantities of the scaling benchmark), plus
+        ``worker_times`` — per-worker wall clock spent in each phase
+        (send / receive pipelines of ProcessEdges, ProcessVertices).
+        Timings live beside, not inside, ``worker_totals`` so the
+        traffic totals stay bit-identical between sequential and
+        parallel runs."""
         self.worker_totals = [
             dict(disk_bytes=0.0, net_bytes=0.0, edges_touched=0.0)
+            for _ in range(self.config.num_workers)]
+        self.worker_times = [
+            dict(send_s=0.0, recv_s=0.0, pv_s=0.0)
             for _ in range(self.config.num_workers)]
 
     def _check_measured(self, counters: dict) -> None:
@@ -508,20 +605,47 @@ class Engine:
         return new_state, total, counters
 
     def _dist_process_vertices(self, state, work_fn, active):
-        """ProcessVertices with each worker serving only its own spill."""
+        """ProcessVertices with each worker serving only its own spill.
+
+        The per-worker bodies run on the same phase pool as ProcessEdges
+        when ``parallel_workers`` is on; each accumulates into a private
+        counter dict reduced in worker index order after the join, so
+        parallel and sequential runs stay bit-identical."""
         self._sync_ooc_state(state)
         vertex_valid = np.asarray(self.graph.vertex_valid)
         amask = (vertex_valid if active is None
                  else np.asarray(active, bool) & vertex_valid)
         counters = {k: 0.0 for k in self.counter_keys}
-        total = 0.0
-        for w, parts in enumerate(self.worker_parts):
+
+        # Same compute-token discipline as the ProcessEdges pools
+        # (DESIGN.md §8): each worker's spill+work burst takes one turn.
+        token = threading.Lock() if self.config.parallel_workers else None
+        tok = token_ctx(token)
+
+        def pv_task(w):
+            t0 = time.perf_counter()
+            parts = self.worker_parts[w]
             lo, hi = parts[0], parts[-1] + 1
-            t, dr, dw = self._spill_process_vertices(
-                self.spills[w], amask[lo:hi], self.global_id[lo:hi],
-                work_fn, counters)
-            total += t
+            cw = dict.fromkeys(
+                ("vertex_read_bytes", "vertex_write_bytes",
+                 "measured_vertex_read_bytes",
+                 "measured_vertex_write_bytes"), 0.0)
+            with tok:
+                t, dr, dw = self._spill_process_vertices(
+                    self.spills[w], amask[lo:hi], self.global_id[lo:hi],
+                    work_fn, cw)
             self.worker_totals[w]["disk_bytes"] += dr + dw
+            return cw, t, time.perf_counter() - t0
+
+        out = _executor.run_worker_pool(
+            [functools.partial(pv_task, w)
+             for w in range(self.config.num_workers)],
+            self.config.parallel_workers, pool=self.worker_pool)
+        reduce_worker_counters(counters, [cw for cw, _, _ in out])
+        total = 0.0
+        for w, (_, t, dt) in enumerate(out):
+            total += t
+            self.worker_times[w]["pv_s"] += dt
         self._check_measured(counters)
         new_state = self._dist_state_views()
         self._ooc_last_state = new_state

@@ -42,7 +42,7 @@ from typing import Iterator, Sequence
 
 import numpy as np
 
-from repro.utils import ceil_div
+from repro.utils import ceil_div, token_ctx
 
 WIRE_MSG_BYTES = 4          # float32 payload values on the wire
 _IDX_BYTES = 4              # int32 source-local index per compacted pair
@@ -147,7 +147,15 @@ class Exchange:
     a wire, exactly as LOCAL's model counts no self-partition traffic).
     Receivers drain their inbox per destination partition via
     :meth:`take_dest`, decoding wire batches back to (mask, values).
-    """
+
+    Thread safety: posts and inbox pops are serialized by a lock so the
+    parallel dist_ooc executor can run its W send loops concurrently
+    (DESIGN.md §8).  Senders racing into the same (worker, q) box only
+    permute the order of entries with *distinct* source partitions p, and
+    :meth:`take_dest` assigns each p its own rows — so the assembled
+    receive view, the integer batch tallies, and ``bytes_sent`` (a float64
+    sum of integer byte counts, exact under reordering) are all independent
+    of thread completion order."""
 
     def __init__(self, num_workers: int, v_max: int):
         self.num_workers = num_workers
@@ -156,6 +164,7 @@ class Exchange:
         # or ("wire", fmt, count, payload)
         self._inbox: list[dict[int, list]] = [
             {} for _ in range(num_workers)]
+        self._lock = threading.Lock()
         self.bytes_sent = 0.0
         self.pair_batches = 0
         self.slab_batches = 0
@@ -166,20 +175,23 @@ class Exchange:
              count: int | None = None) -> None:
         """``count`` is the mask's popcount when the sender already has it
         (the routing counts) — avoids re-reducing the mask per batch."""
-        box = self._inbox[dst_worker].setdefault(q, [])
         if src_worker == dst_worker:
-            box.append((p, ("local", mask, values)))
+            with self._lock:
+                box = self._inbox[dst_worker].setdefault(q, [])
+                box.append((p, ("local", mask, values)))
             return
         if count is None:
             count = int(mask.sum())
         fmt, payload = encode_batch(mask, values, count)
-        self.bytes_sent += len(payload)
-        self.bytes_by_sender[src_worker] += len(payload)
-        if fmt == FMT_SLAB:
-            self.slab_batches += 1
-        else:
-            self.pair_batches += 1
-        box.append((p, ("wire", fmt, count, payload)))
+        with self._lock:
+            box = self._inbox[dst_worker].setdefault(q, [])
+            self.bytes_sent += len(payload)
+            self.bytes_by_sender[src_worker] += len(payload)
+            if fmt == FMT_SLAB:
+                self.slab_batches += 1
+            else:
+                self.pair_batches += 1
+            box.append((p, ("wire", fmt, count, payload)))
 
     def take_dest(self, dst_worker: int, q: int, p_cnt: int
                   ) -> tuple[np.ndarray, np.ndarray]:
@@ -187,7 +199,9 @@ class Exchange:
         (recv_mask [P, v_max], recv_msg [P, v_max])."""
         recv_mask = np.zeros((p_cnt, self.v_max), bool)
         recv_msg = np.zeros((p_cnt, self.v_max), np.float32)
-        for p, entry in self._inbox[dst_worker].pop(q, ()):
+        with self._lock:
+            entries = self._inbox[dst_worker].pop(q, ())
+        for p, entry in entries:
             if entry[0] == "local":
                 _, mask, values = entry
                 m = np.asarray(mask, bool)
@@ -207,20 +221,35 @@ class DecodeAhead:
     owned destination partition, assembling/decoding partition *q+1*'s view
     on a worker thread while the consumer combines *q*'s chunks (the
     receive-side analogue of the chunk store's prefetch pipeline).
-    Worker exceptions re-raise in the consumer."""
+    Worker exceptions re-raise in the consumer.
+
+    In the dist_ooc executor the "consumer" is itself a pipeline stage: the
+    worker's lazy schedule generator iterates DecodeAhead *on the chunk
+    prefetch thread*, computing partition q's dispatch as its view is
+    delivered and handing the resulting chunk requests straight to the
+    long-lived :class:`~repro.core.chunkstore.ChunkPrefetcher` — so decode,
+    dispatch, disk reads, and combine all overlap with no per-partition
+    teardown (DESIGN.md §8)."""
 
     _DONE = object()
 
     def __init__(self, exchange: Exchange, worker: int,
-                 dests: Sequence[int], p_cnt: int, depth: int = 1):
+                 dests: Sequence[int], p_cnt: int, depth: int = 1,
+                 compute_lock=None, runner=None):
         self._exchange = exchange
         self._worker = worker
         self._dests = list(dests)
         self._p_cnt = p_cnt
+        self._lock_ctx = token_ctx(compute_lock)
         self._queue: queue.Queue = queue.Queue(maxsize=max(1, depth))
         self._stop = threading.Event()
-        self._thread = threading.Thread(target=self._run, daemon=True)
-        self._thread.start()
+        if runner is None:
+            thread = threading.Thread(target=self._run, daemon=True)
+            thread.start()
+            self._join = thread.join
+        else:
+            future = runner.submit(self._run)
+            self._join = lambda: future.exception()
 
     def _put(self, item) -> bool:
         while not self._stop.is_set():
@@ -234,8 +263,9 @@ class DecodeAhead:
     def _run(self):
         try:
             for q in self._dests:
-                mask, msg = self._exchange.take_dest(
-                    self._worker, q, self._p_cnt)
+                with self._lock_ctx:       # compute token: decode burst
+                    mask, msg = self._exchange.take_dest(
+                        self._worker, q, self._p_cnt)
                 if not self._put((q, mask, msg)):
                     return
             self._put(self._DONE)
@@ -249,7 +279,7 @@ class DecodeAhead:
                 self._queue.get_nowait()
             except queue.Empty:
                 break
-        self._thread.join()
+        self._join()
 
     def __iter__(self) -> Iterator[tuple]:
         try:

@@ -46,8 +46,12 @@ a warning.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import hashlib
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor, wait as futures_wait
 
 import jax
 import jax.numpy as jnp
@@ -56,13 +60,13 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import exchange as exchange_mod
 from repro.core import phases
-from repro.core.chunkstore import ChunkPrefetcher, HBMChunkSource
+from repro.core.chunkstore import ChunkPrefetcher, HBMChunkSource, ScheduleMark
 from repro.core.formats import BlockTilesHost
 from repro.core.partition import row_block_batch_map
 from repro.kernels.csr_spmv import (
     block_csr_combine, build_tile_struct, default_interpret,
 )
-from repro.utils import ceil_div
+from repro.utils import ceil_div, token_ctx
 
 
 def shard_map_compat(f, mesh, in_specs, out_specs):
@@ -543,14 +547,18 @@ def _dispatch_schedule_one_dest(source, q, recv_mask_q, part_sizes, gamma):
     chunk_active[source.dcsr_part[q][present],
                  source.dcsr_batch[q][present]] = True
     msgs_from = recv_mask_q.sum(axis=1)
+    # Host (numpy) evaluation of the shared pricing function: this runs on
+    # every worker's prefetch thread, and jax's eager dispatch serializes
+    # badly across threads — numpy keeps parallel workers contention-free
+    # while the float32 pinning keeps the decision bit-identical to the
+    # jitted model.
     uc, seek, per_chunk = phases.format_choice_matrix(
-        jnp.asarray(source.dcsr_ptr[q]), jnp.asarray(source.has_csr[q]),
-        jnp.asarray(source.csr_bytes[q], jnp.float32),
-        jnp.asarray(source.dcsr_bytes[q], jnp.float32),
-        part_sizes, gamma, jnp.asarray(msgs_from, jnp.float32))
-    uc = np.asarray(uc)
-    seek_cost = float(np.asarray(seek)[chunk_active].sum())
-    read_bytes = float(np.asarray(per_chunk)[chunk_active].sum())
+        source.dcsr_ptr[q], source.has_csr[q],
+        source.csr_bytes[q].astype(np.float32),
+        source.dcsr_bytes[q].astype(np.float32),
+        part_sizes, gamma, msgs_from, xp=np)
+    seek_cost = float(seek[chunk_active].sum())
+    read_bytes = float(per_chunk[chunk_active].sum())
     schedule = []
     for k in range(b_cnt):
         ps = np.nonzero(chunk_active[:, k])[0]
@@ -593,8 +601,13 @@ def _combine_stream_batch(wk, recv_mask_q, msg_q, slot_fn, monoid, agg, has,
     pm = recv_mask_q[wk.part, wk.src]
     if backend == "segment":
         mv = msg_q[wk.part, wk.src]
-        contrib = np.asarray(slot_fn(jnp.asarray(mv), jnp.asarray(wk.data)),
-                             np.float32)
+        # Evaluate the slot on host numpy arrays: arithmetic slot functions
+        # (all four paper algorithms) stay entirely in numpy, which runs
+        # GIL-free from every parallel worker — routing each per-batch call
+        # through jax's eager dispatch would serialize the worker pool.
+        # Message values are garbage off-mask; contrib is masked below.
+        with np.errstate(all="ignore"):
+            contrib = np.asarray(slot_fn(mv, wk.data), np.float32)
         dsts = wk.dst[pm]
         if dsts.size:
             scatter = {"add": np.add, "min": np.minimum,
@@ -635,7 +648,7 @@ def make_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
     need_counts = np.asarray(g.need_counts).astype(np.float64)
     vertex_valid = np.asarray(g.vertex_valid)
     global_id = engine.global_id
-    part_sizes = jnp.asarray(spec.partition_sizes(), jnp.float32)
+    part_sizes = np.asarray(spec.partition_sizes(), np.float32)
     gamma = engine.fmts.gamma
     identity = float(monoid.identity)
     mb = cfg.msg_bytes + 4
@@ -763,9 +776,62 @@ def make_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
 # DIST_OOC executor (per-worker chunk shards + filtered sparse exchange)
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass
+class DestHeader(ScheduleMark):
+    """Per-destination-partition header of the lazy dist_ooc schedule.
+
+    Produced on the prefetch thread (as :class:`DecodeAhead` delivers
+    partition q's receive view and phase 3's dispatch runs over it) and
+    forwarded through the chunk prefetch FIFO ahead of q's
+    :class:`~repro.core.chunkstore.BatchWork` items, so the consumer learns
+    each partition's receive view and dispatch counters in stream order —
+    no per-partition pipeline teardown (DESIGN.md §8)."""
+    q: int
+    recv_mask: np.ndarray      # [P, v_max] message presence per source part
+    recv_msg: np.ndarray       # [P, v_max] message values (garbage off-mask)
+    dispatched: float          # phase-3 (message, batch) deliveries
+    chunks_active: float       # chunks the selective schedule will read
+    seek_cost: float           # modeled seek units (runtime format choice)
+    read_bytes: float          # modeled edge bytes those reads will serve
+
+
+def run_worker_pool(thunks, parallel: bool, pool=None):
+    """Run one phase's per-worker thunks; results in worker index order.
+
+    ``parallel=False`` runs them inline — the sequential reference order.
+    ``parallel=True`` runs one thread per worker and joins them all before
+    returning, which is the phase barrier the dist_ooc executor relies on
+    (all sends posted before any receive drains the exchange).  ``pool``
+    reuses a long-lived executor (the engine keeps one per dist_ooc
+    engine) instead of spawning threads per phase.  Results (and any
+    exception, re-raised from the lowest-indexed failing worker, after
+    every worker has finished) are identical either way; only wall clock
+    differs."""
+    if not parallel or len(thunks) <= 1:
+        return [t() for t in thunks]
+    # Caller-runs-first: worker 0 executes on the calling thread while
+    # workers 1..W-1 run on the pool — one fewer wakeup + context-switch
+    # round trip per phase barrier, which matters for the small send /
+    # ProcessVertices phases whose per-worker work is only a few ms.
+    if pool is None:
+        with ThreadPoolExecutor(max_workers=len(thunks) - 1,
+                                thread_name_prefix="dist-worker") as tmp:
+            futures = [tmp.submit(t) for t in thunks[1:]]
+            first = thunks[0]()
+            return [first] + [f.result() for f in futures]
+    futures = [pool.submit(t) for t in thunks[1:]]
+    try:
+        first = thunks[0]()
+    except BaseException:
+        futures_wait(futures)      # full phase barrier even when worker 0
+        raise                      # fails on the calling thread
+    futures_wait(futures)
+    return [first] + [f.result() for f in futures]
+
+
 def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
                      mode_meta):
-    """Distributed fully-out-of-core ProcessEdges (DESIGN.md §7).
+    """Distributed fully-out-of-core ProcessEdges (DESIGN.md §7, §8).
 
     W workers each own a contiguous block of destination partitions backed
     by their **own** chunk-store shard and vertex spill.  Send side: each
@@ -774,14 +840,23 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
     list through the :class:`~repro.core.exchange.Exchange` — cross-worker
     batches are physically serialized with the adaptively chosen pair/slab
     wire format (measured network bytes), worker-local batches hand arrays
-    over by reference.  Receive side: each worker walks its destination
-    partitions with :class:`~repro.core.exchange.DecodeAhead` (partition
-    q+1's incoming batches decode while q combines), streams only the
-    selective-schedule-active chunks from its shard through
-    :class:`~repro.core.chunkstore.ChunkPrefetcher` (batch i+1's disk reads
-    overlap batch i's combine), and applies into its spill.  Both disk and
-    network counters carry ``measured_*`` twins cross-checked against the
-    analytic model."""
+    over by reference.  Receive side: each worker runs one long-lived
+    pipeline over all its destination partitions — a lazy schedule advanced
+    on the prefetch thread iterates :class:`~repro.core.exchange.DecodeAhead`
+    (partition q+1's incoming batches decode while q is in flight), computes
+    q's dispatch as its view lands, and feeds both the per-partition
+    :class:`DestHeader` and the selective-schedule-active chunk reads to a
+    single :class:`~repro.core.chunkstore.ChunkPrefetcher` — so the last
+    batch of partition q overlaps partition q+1's first disk read, and the
+    consumer only ever combines and applies into the worker's spill.
+
+    With ``EngineConfig.parallel_workers`` the W send loops and the W
+    receive pipelines each run on a per-phase thread pool (workers overlap
+    each other's disk, decode, and compute); every float a worker produces
+    accumulates in worker-private state and is reduced in worker index
+    order after the phase joins (``phases.reduce_worker_counters``), so
+    parallel runs are bit-identical to sequential ones — values, counters,
+    and the ``measured_* == model`` audit alike."""
     cfg = engine.config
     g = engine.graph
     spec = g.spec
@@ -796,7 +871,7 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
     need_counts = np.asarray(g.need_counts).astype(np.float64)
     vertex_valid = np.asarray(g.vertex_valid)
     global_id = engine.global_id
-    part_sizes = jnp.asarray(spec.partition_sizes(), jnp.float32)
+    part_sizes = np.asarray(spec.partition_sizes(), np.float32)
     gamma = engine.fmts.gamma
     identity = float(monoid.identity)
     mb = cfg.msg_bytes + 4
@@ -810,6 +885,8 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
         blk = (tile, pb, ceil_div(bs, tile),
                _max_tiles_per_batch_row(g, tile, pb), bs, interpret)
 
+    parallel = cfg.parallel_workers
+
     def step(active):
         counters = {k: 0.0 for k in engine.counter_keys}
         amask = (vertex_valid if active is None
@@ -819,35 +896,57 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
         store_io0 = [(src.store.chunks_read, src.store.bytes_read)
                      for src in sources]
         ex = exchange_mod.Exchange(n_workers, v_max)
-        counts = np.zeros((p_cnt, p_cnt), np.float64)       # [q, p] routing
-        gen_batches_total = 0.0
+        # Shared compute token for the parallel pools (utils.token_ctx):
+        # CPU bursts across the W worker pipelines take turns holding it,
+        # avoiding the GIL convoy of interleaved small numpy calls; queue
+        # handoffs and blocking waits always happen outside the token.
+        token = threading.Lock() if parallel else None
+        tok = token_ctx(token)
 
         # Phase 1 + 2 per worker: generate from the worker's spill, filter,
-        # and post message batches (serialized when crossing workers).
-        for w in range(n_workers):
+        # and post message batches (serialized when crossing workers).  The
+        # W send loops run on the phase pool; each returns its own routing
+        # columns so the [q, p] counts assemble deterministically after the
+        # join, whatever order the workers finished in.
+        def send_task(w):
+            t0 = time.perf_counter()
             parts = worker_parts[w]
             lo, hi = parts[0], parts[-1] + 1
             spill = spills[w]
-            spill.read_bitmap()                             # measured
-            am_w = amask[lo:hi]
-            gen_b = _batch_any(am_w, bs, b_cnt)
-            gen_batches_total += float(gen_b.sum())
-            gstate = {k: v[:, :v_max]
-                      for k, v in spill.read(gen_b).items()}  # measured
-            with np.errstate(all="ignore"):
+            with tok:                       # compute token: generate burst
+                spill.read_bitmap()                         # measured
+                am_w = amask[lo:hi]
+                gen_b = _batch_any(am_w, bs, b_cnt)
+                gstate = {k: v[:, :v_max]
+                          for k, v in spill.read(gen_b).items()}  # measured
+            with tok, np.errstate(all="ignore"):
                 msg_w = np.asarray(signal_fn(
                     {k: jnp.asarray(v) for k, v in gstate.items()},
                     global_id[lo:hi]), np.float32)
+            counts_w = np.zeros((p_cnt, len(parts)), np.float64)
             for i, p in enumerate(parts):
-                m_p = float(am_w[i].sum())
-                sendmask = phases.filter_sendmask(
-                    am_w[i], need[p], need_counts[p], m_p, cfg, xp=np)
-                counts[:, p] = phases.routing_counts(sendmask, xp=np)
-                for q in range(p_cnt):
-                    c = int(counts[q, p])
-                    if c:
-                        ex.post(w, int(worker_of[q]), p, q, sendmask[q],
-                                msg_w[i], count=c)
+                with tok:                   # compute token: filter + encode
+                    m_p = float(am_w[i].sum())
+                    sendmask = phases.filter_sendmask(
+                        am_w[i], need[p], need_counts[p], m_p, cfg, xp=np)
+                    counts_w[:, i] = phases.routing_counts(sendmask, xp=np)
+                    for q in range(p_cnt):
+                        c = int(counts_w[q, i])
+                        if c:
+                            ex.post(w, int(worker_of[q]), p, q, sendmask[q],
+                                    msg_w[i], count=c)
+            return counts_w, float(gen_b.sum()), time.perf_counter() - t0
+
+        send_out = run_worker_pool(
+            [functools.partial(send_task, w) for w in range(n_workers)],
+            parallel, pool=engine.worker_pool)
+        counts = np.zeros((p_cnt, p_cnt), np.float64)       # [q, p] routing
+        gen_batches_total = 0.0
+        for w, (counts_w, gen_b_sum, dt) in enumerate(send_out):
+            lo, hi = worker_parts[w][0], worker_parts[w][-1] + 1
+            counts[:, lo:hi] = counts_w
+            gen_batches_total += gen_b_sum
+            engine.worker_times[w]["send_s"] += dt
 
         n_active = float(amask.sum())
         counters["msgs_generated"] = n_active
@@ -864,56 +963,91 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
         counters["net_pair_batches"] = float(ex.pair_batches)
         counters["net_slab_batches"] = float(ex.slab_batches)
 
-        # Phases 3 + 4 + apply per worker, against its own shard.
+        # Phases 3 + 4 + apply per worker, against its own shard.  The
+        # send pool has fully joined, so every message batch is posted
+        # before any receive pipeline drains the exchange (phase barrier).
+        # agg / has / new_active rows are partitioned by ownership, so the
+        # concurrent writes below never alias.
         agg = np.full((p_cnt, v_max), identity, np.float32)
         has = np.zeros((p_cnt, v_max), bool)
         new_active = np.zeros((p_cnt, v_max), bool)
-        edges_touched = 0.0
-        upd_batches_total = 0.0
-        total = 0.0
-        for w in range(n_workers):
+
+        def recv_task(w):
+            t0 = time.perf_counter()
             parts = worker_parts[w]
             lo, hi = parts[0], parts[-1] + 1
             spill = spills[w]
             source = sources[w]
+            cw = {}                       # worker-private counter deltas
+
+            def lazy_schedule():
+                # Runs on the prefetch thread: as DecodeAhead delivers
+                # partition q's receive view, phase 3's dispatch + the
+                # runtime format choice price q's reads and emit them
+                # right behind q's header — partition q+1's decode, q's
+                # dispatch, and q-1's tail disk reads all overlap.
+                for q, recv_mask_q, recv_msg_q in exchange_mod.DecodeAhead(
+                        ex, w, parts, p_cnt, compute_lock=token,
+                        runner=engine.pipeline_pool):
+                    with tok:               # compute token: dispatch burst
+                        disp, ca, seek, rb, sched_q = (
+                            _dispatch_schedule_one_dest(
+                                source, q, recv_mask_q, part_sizes, gamma))
+                        header = DestHeader(
+                            q=q, recv_mask=recv_mask_q, recv_msg=recv_msg_q,
+                            dispatched=disp, chunks_active=float(ca.sum()),
+                            seek_cost=seek, read_bytes=rb)
+                    yield header
+                    yield from sched_q
+
             w_edges = 0.0
-            for q, recv_mask_q, recv_msg_q in exchange_mod.DecodeAhead(
-                    ex, w, parts, p_cnt):
-                disp, ca, seek, rb, schedule = _dispatch_schedule_one_dest(
-                    source, q, recv_mask_q, part_sizes, gamma)
-                counters["msgs_dispatched"] += disp
-                counters["chunks_read"] += float(ca.sum())
-                counters["seek_cost"] += seek
-                counters["edge_read_bytes"] += rb
-                xv_q = xc_q = None
-                if backend == "block_csr" and schedule:
-                    xv_q, xc_q = _block_dest_vectors(
-                        recv_mask_q, recv_msg_q, mode, a_const, identity,
-                        v_pad_t)
-                for wk in ChunkPrefetcher(source, schedule,
-                                          depth=cfg.ooc_prefetch_depth):
+            cur = None
+            xv_q = xc_q = None
+            for item in ChunkPrefetcher(source, lazy_schedule(),
+                                        depth=cfg.ooc_prefetch_depth,
+                                        compute_lock=token,
+                                        runner=engine.pipeline_pool):
+                if isinstance(item, DestHeader):
+                    cur = item
+                    xv_q = xc_q = None
+                    cw["msgs_dispatched"] = (
+                        cw.get("msgs_dispatched", 0.0) + item.dispatched)
+                    cw["chunks_read"] = (
+                        cw.get("chunks_read", 0.0) + item.chunks_active)
+                    cw["seek_cost"] = (
+                        cw.get("seek_cost", 0.0) + item.seek_cost)
+                    cw["edge_read_bytes"] = (
+                        cw.get("edge_read_bytes", 0.0) + item.read_bytes)
+                    continue
+                with tok:                   # compute token: combine burst
+                    if backend == "block_csr" and xv_q is None:
+                        xv_q, xc_q = _block_dest_vectors(
+                            cur.recv_mask, cur.recv_msg, mode, a_const,
+                            identity, v_pad_t)
                     w_edges += _combine_stream_batch(
-                        wk, recv_mask_q, recv_msg_q, slot_fn, monoid, agg,
-                        has, backend=backend, mode=mode, blk=blk, xv=xv_q,
-                        xc=xc_q, v_max=v_max)
+                        item, cur.recv_mask, cur.recv_msg, slot_fn, monoid,
+                        agg, has, backend=backend, mode=mode, blk=blk,
+                        xv=xv_q, xc=xc_q, v_max=v_max)
 
             # Apply into this worker's spill (measured vertex I/O).
-            upd_w = has[lo:hi] & vertex_valid[lo:hi]
-            upd_b = _batch_any(upd_w, bs, b_cnt)
-            upd_batches_total += float(upd_b.sum())
-            astate_pad = spill.read(upd_b)                  # measured
-            astate = {k: v[:, :v_max] for k, v in astate_pad.items()}
-            updates, na_w, ret = apply_fn(
-                {k: jnp.asarray(v) for k, v in astate.items()},
-                jnp.asarray(agg[lo:hi]), jnp.asarray(has[lo:hi]),
-                global_id[lo:hi])
-            spill.merge_write(astate_pad, updates, upd_w, upd_b)  # measured
-            na_w = np.asarray(na_w, bool) & vertex_valid[lo:hi]
-            spill.write_bitmap(na_w)                        # measured
-            new_active[lo:hi] = na_w
-            total += float(np.where(upd_w,
-                                    np.asarray(ret, np.float32), 0.0).sum())
-            edges_touched += w_edges
+            with tok:                       # compute token: apply burst
+                upd_w = has[lo:hi] & vertex_valid[lo:hi]
+                upd_b = _batch_any(upd_w, bs, b_cnt)
+                astate_pad = spill.read(upd_b)              # measured
+                astate = {k: v[:, :v_max] for k, v in astate_pad.items()}
+            with tok:
+                updates, na_w, ret = apply_fn(
+                    {k: jnp.asarray(v) for k, v in astate.items()},
+                    jnp.asarray(agg[lo:hi]), jnp.asarray(has[lo:hi]),
+                    global_id[lo:hi])
+            with tok:
+                spill.merge_write(astate_pad, updates, upd_w,
+                                  upd_b)                    # measured
+                na_w = np.asarray(na_w, bool) & vertex_valid[lo:hi]
+                spill.write_bitmap(na_w)                    # measured
+                new_active[lo:hi] = na_w
+                total_w = float(np.where(
+                    upd_w, np.asarray(ret, np.float32), 0.0).sum())
 
             # Per-worker measured traffic (table 7's max-per-worker rows).
             cr0, br0 = store_io0[w]
@@ -921,17 +1055,31 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
             edge_b = source.store.bytes_read - br0
             vert_b = ((spill.bytes_read - sr0)
                       + (spill.bytes_written - sw0))
-            counters["measured_chunks_read"] += (
-                source.store.chunks_read - cr0)
-            counters["measured_edge_read_bytes"] += edge_b
-            counters["measured_vertex_read_bytes"] += spill.bytes_read - sr0
-            counters["measured_vertex_write_bytes"] += (
-                spill.bytes_written - sw0)
+            cw["measured_chunks_read"] = source.store.chunks_read - cr0
+            cw["measured_edge_read_bytes"] = edge_b
+            cw["measured_vertex_read_bytes"] = spill.bytes_read - sr0
+            cw["measured_vertex_write_bytes"] = spill.bytes_written - sw0
+            cw["edges_touched"] = w_edges
             wt = engine.worker_totals[w]
             wt["disk_bytes"] += edge_b + vert_b
             wt["net_bytes"] += float(ex.bytes_by_sender[w])
             wt["edges_touched"] += w_edges
-        counters["edges_touched"] = edges_touched
+            return cw, total_w, float(upd_b.sum()), time.perf_counter() - t0
+
+        recv_out = run_worker_pool(
+            [functools.partial(recv_task, w) for w in range(n_workers)],
+            parallel, pool=engine.worker_pool)
+        # Deterministic reduction: every float above accumulated in
+        # worker-private state; summing in worker index order after the
+        # join makes parallel runs bit-identical to sequential ones.
+        phases.reduce_worker_counters(
+            counters, [cw for cw, _, _, _ in recv_out])
+        total = 0.0
+        upd_batches_total = 0.0
+        for w, (_, total_w, upd_b_sum, dt) in enumerate(recv_out):
+            total += total_w
+            upd_batches_total += upd_b_sum
+            engine.worker_times[w]["recv_s"] += dt
 
         # Modeled vertex I/O: identical formulas to the other executors
         # (per-worker bitmaps sum to the full [P, V] bitmap bytes).

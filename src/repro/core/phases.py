@@ -105,7 +105,7 @@ def dispatch_one_dest(dsrc, dpart, dbatch, dvalid, recv_mask, v_max, b_cnt):
 
 
 def format_choice_matrix(dcsr_ptr, has_csr, csr_bytes, dcsr_bytes,
-                         part_sizes, gamma, msgs_from):
+                         part_sizes, gamma, msgs_from, xp=jnp):
     """Paper §4.1 per-chunk runtime CSR/DCSR selection for one destination.
 
     dcsr_ptr [P, B+1]; has_csr/csr_bytes/dcsr_bytes [P, B]; part_sizes [P];
@@ -113,17 +113,20 @@ def format_choice_matrix(dcsr_ptr, has_csr, csr_bytes, dcsr_bytes,
 
     Returns (use_csr [P, B], seek [P, B], read_bytes [P, B]).  This is the
     single source of truth for the decision: the in-HBM executors reduce it
-    to counters (:func:`format_choice_one_dest`), the OOC executor issues
-    the corresponding disk reads — measured bytes match modeled bytes
-    because both come from here."""
-    nnz = (dcsr_ptr[:, 1:] - dcsr_ptr[:, :-1]).astype(jnp.float32)
-    v_src = part_sizes.astype(jnp.float32)[:, None]            # [P, 1]
-    m = msgs_from.astype(jnp.float32)[:, None]
-    cost_dcsr = 2.0 * nnz
-    cost_csr = jnp.minimum(gamma * m, v_src)
+    to counters (:func:`format_choice_one_dest`) under jit (xp=jnp), the
+    OOC / dist_ooc executors issue the corresponding disk reads from their
+    host-side schedules (xp=np, so parallel workers never contend on the
+    jax dispatch path) — measured bytes match modeled bytes because both
+    come from here.  The cost arithmetic is pinned to float32 on both
+    paths so the numpy decision is bit-identical to the jitted one."""
+    nnz = (dcsr_ptr[:, 1:] - dcsr_ptr[:, :-1]).astype(xp.float32)
+    v_src = part_sizes.astype(xp.float32)[:, None]             # [P, 1]
+    m = msgs_from.astype(xp.float32)[:, None]
+    cost_dcsr = xp.float32(2.0) * nnz
+    cost_csr = xp.minimum(xp.float32(gamma) * m, v_src)
     use_csr = has_csr & (cost_csr < cost_dcsr)
-    seek = jnp.where(use_csr, cost_csr, cost_dcsr)
-    per_chunk = jnp.where(use_csr, csr_bytes, dcsr_bytes)
+    seek = xp.where(use_csr, cost_csr, cost_dcsr)
+    per_chunk = xp.where(use_csr, csr_bytes, dcsr_bytes)
     return use_csr, seek, per_chunk
 
 
@@ -237,6 +240,33 @@ def process_block_one_dest(bt, vals, recv_msg, recv_mask, chunk_active,
     agg = val[:v_max]
     has = hascnt[:v_max] > 0.5
     return agg, has, jnp.sum(hascnt, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Order-independent counter reduction for parallel workers (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def reduce_worker_counters(counters, per_worker):
+    """Reduce per-worker counter contributions into ``counters``, in worker
+    index order.
+
+    The parallel dist_ooc executor runs its W workers concurrently; each
+    worker accumulates every float it produces into a *private* dict (its
+    own internal accumulation order is fixed by its schedule), and this
+    reduction runs only after all workers have joined, always walking
+    ``per_worker`` in worker index order.  The result is therefore a pure
+    function of the per-worker values: identical whether the workers ran
+    sequentially or raced on a thread pool, which is what lets the parallel
+    executor keep the repo's bit-exact ``measured_* == model`` invariant
+    (and the tests' parallel == sequential bit-identity).
+
+    ``counters`` is mutated and returned; missing keys start at 0.0.
+    """
+    for cw in per_worker:
+        for k, v in cw.items():
+            counters[k] = counters.get(k, 0.0) + float(v)
+    return counters
 
 
 # ---------------------------------------------------------------------------

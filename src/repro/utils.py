@@ -1,6 +1,7 @@
 """Shared small utilities (no jax device state at import time)."""
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -50,6 +51,20 @@ def tree_params(tree: Any) -> int:
     """Total number of elements of all array leaves in a pytree."""
     return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree)
                if hasattr(l, "shape"))
+
+
+def token_ctx(lock):
+    """Context manager over an optional shared compute token: the lock
+    itself when given, a no-op otherwise.
+
+    The parallel dist_ooc executor hands one lock to every CPU-bound burst
+    in its worker pipelines (combine, dispatch, wire decode, chunk decode
+    — DESIGN.md §8); holding it for a whole work item lets W threads take
+    orderly turns at the host CPU instead of convoying on the GIL at every
+    small numpy call, while disk waits and queue handoffs stay outside the
+    token and genuinely overlap.  Sequential pipelines pass None and pay
+    nothing."""
+    return lock if lock is not None else contextlib.nullcontext()
 
 
 def ceil_div(a: int, b: int) -> int:

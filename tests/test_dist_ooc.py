@@ -6,7 +6,17 @@ all four paper algorithms, and the measured disk *and* network traffic
 equals the analytic model (verify_io, on by default, raises on any
 mismatch inside every call — these tests additionally assert the
 accumulated totals and that the adaptive pair-vs-slab wire choice is
-exercised in both directions)."""
+exercised in both directions).
+
+Parallel determinism gate (DESIGN.md §8): with
+``EngineConfig(parallel_workers=True)`` the W send loops and receive
+pipelines race on thread pools, and every run must stay *bit-identical*
+to the sequential reference — vertex values, per-iteration returns, all
+counters, and per-worker totals.  ``scripts/ci.sh`` re-runs this whole
+module with ``REPRO_DIST_PARALLEL=1`` so the parity tests above also
+execute on the parallel path."""
+import os
+
 import numpy as np
 import pytest
 
@@ -35,7 +45,14 @@ def built(tmp_path_factory):
     return g, dg, fm, stores
 
 
+# CI runs this module twice: once with the sequential reference, once with
+# REPRO_DIST_PARALLEL=1 so every parity test above also exercises the
+# thread-pooled path (scripts/ci.sh keeps both suite timings visible).
+_PARALLEL_DEFAULT = os.environ.get("REPRO_DIST_PARALLEL", "") == "1"
+
+
 def dist_engine(dg, fm, stores, w, **over):
+    over.setdefault("parallel_workers", _PARALLEL_DEFAULT)
     cfg = EngineConfig(executor="dist_ooc", num_workers=w, **over)
     return Engine(dg, fm, cfg, store=stores[w])
 
@@ -259,6 +276,91 @@ def test_sharded_manifest_robust_open(tmp_path):
         '{"version": 1, "num_workers": 0, "num_partitions": 2}')
     with pytest.raises(ChunkStoreError, match="positive integer"):
         ShardedChunkStore.open(str(root))
+
+
+# ---------------------------------------------------------------------------
+# Parallel worker determinism (DESIGN.md §8): parallel == sequential, bitwise
+# ---------------------------------------------------------------------------
+
+def _bit_identical(out_seq, out_par, engs_seq=(), engs_par=()):
+    """Parallel runs must be indistinguishable from sequential ones:
+    bit-equal vertex values, identical per-iteration returns, exactly
+    equal counters (including every measured_* twin), and exactly equal
+    per-worker traffic totals."""
+    (v1, s1), (v2, s2) = out_seq, out_par
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    assert s1.iterations == s2.iterations
+    assert s1.per_iter_return == s2.per_iter_return
+    assert set(s1.counters) == set(s2.counters)
+    for k in s1.counters:
+        assert s1.counters[k] == s2.counters[k], (
+            k, s1.counters[k], s2.counters[k])
+    for es, ep in zip(engs_seq, engs_par):
+        assert es.worker_totals == ep.worker_totals
+
+
+@pytest.mark.parametrize("w", [2, 4])
+@pytest.mark.parametrize("name", ["pagerank", "bfs", "sssp"])
+def test_dist_parallel_bit_identical(engines, name, w):
+    g, dg, fm, stores, _ = engines
+    src = int(np.argmax(g.out_degrees()))
+    run = {"pagerank": lambda e: alg.pagerank(e, 3),
+           "bfs": lambda e: alg.bfs(e, src),
+           "sssp": lambda e: alg.sssp(e, src)}[name]
+    seq = dist_engine(dg, fm, stores, w, parallel_workers=False)
+    par = dist_engine(dg, fm, stores, w, parallel_workers=True)
+    _bit_identical(run(seq), run(par), (seq,), (par,))
+    # timings are recorded per worker and per phase, outside worker_totals
+    assert all(t["recv_s"] > 0 for t in par.worker_times)
+    assert all(t["send_s"] > 0 for t in par.worker_times)
+
+
+def test_dist_parallel_bit_identical_wcc(engines, tmp_path):
+    g, dg, fm, stores, _ = engines
+    dg_r = build_dist_graph(g.reversed(), dg.spec)
+    fm_r = build_formats(dg_r)
+    stores_r = {2: ChunkStore.build_sharded(dg_r, fm_r,
+                                            str(tmp_path / "rev"), 2)}
+    mk = lambda p: (dist_engine(dg, fm, stores, 2, parallel_workers=p),
+                    dist_engine(dg_r, fm_r, stores_r, 2, parallel_workers=p))
+    seq_f, seq_r = mk(False)
+    par_f, par_r = mk(True)
+    _bit_identical(alg.wcc(seq_f, seq_r), alg.wcc(par_f, par_r),
+                   (seq_f, seq_r), (par_f, par_r))
+
+
+def test_dist_parallel_block_csr_bit_identical(engines):
+    """The streamed Pallas combine must also be order-insensitive: each
+    worker's tiles land in its own agg rows regardless of thread timing."""
+    g, dg, fm, stores, _ = engines
+    seq = dist_engine(dg, fm, stores, 2, compute_backend="block_csr",
+                      parallel_workers=False)
+    par = dist_engine(dg, fm, stores, 2, compute_backend="block_csr",
+                      parallel_workers=True)
+    _bit_identical(alg.pagerank(seq, 3), alg.pagerank(par, 3),
+                   (seq,), (par,))
+
+
+def test_dist_parallel_stress_repeat(engines):
+    """Repeat the raciest shape (W=4, BFS's sparse multi-iteration
+    frontiers) several times against one sequential reference — any
+    ordering race in the exchange, the lazy schedules, or the counter
+    reduction shows up as a bitwise diff."""
+    g, dg, fm, stores, _ = engines
+    src = int(np.argmax(g.out_degrees()))
+    seq = dist_engine(dg, fm, stores, 4, parallel_workers=False)
+    ref = alg.bfs(seq, src)
+    for _ in range(4):
+        par = dist_engine(dg, fm, stores, 4, parallel_workers=True)
+        _bit_identical(ref, alg.bfs(par, src))
+
+
+def test_parallel_workers_requires_dist_ooc(built):
+    g, dg, fm, stores = built
+    with pytest.raises(ValueError, match="parallel_workers"):
+        Engine(dg, fm, EngineConfig(parallel_workers=True))
+    with pytest.raises(ValueError, match="parallel_workers"):
+        Engine(dg, fm, EngineConfig(executor="ooc", parallel_workers=True))
 
 
 def test_sharded_store_reopen(built):
