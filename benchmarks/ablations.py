@@ -21,6 +21,7 @@ KNOBS = {
     "no_adaptive_fmt": EngineConfig(enable_adaptive_formats=False),
     "no_filter_no_fmt": EngineConfig(enable_filtering=False,
                                      enable_adaptive_formats=False),
+    "no_compression": EngineConfig(compression=False),
 }
 
 

@@ -66,10 +66,44 @@ def main(scale=11) -> list[str]:
     rows.append(csv_row(
         "f5/adaptive_read_over_raw", 0.0,
         f"ratio={s['adaptive_best_read_bytes'] / s['raw_pair_bytes']:.4f}"))
+    rows.append(csv_row(
+        "f5/compressed_store_over_raw", 0.0,
+        f"ratio={s['compressed_over_raw']:.4f}"))
     edge_ratio = st.counters["edge_read_bytes"] / max(
         c.edge_read_bytes, 1)
     rows.append(csv_row("f5/edge_bytes_ratio_vs_chaos", 0.0,
                         f"ratio={edge_ratio:.4f}"))
+
+    # compression tier (DESIGN.md §9), per algorithm: the compressed
+    # disk+network byte totals next to their *_raw twins (same runs, same
+    # format decisions — the twins price the legacy layout), plus the
+    # per-format chunk mix the three-way choice produced.  The compressed
+    # total must be strictly lower than raw on every algorithm.
+    src0 = int(np.argmax(g.out_degrees()))
+    g_r = g.reversed()
+    eng_r = build_engine(g_r, p=p, batch_size=64)
+    algo_outs = {"pagerank": (st, t)}     # reuse the Fig.5 run above
+    for name, run in (("bfs", lambda: alg.bfs(eng, src0)),
+                      ("sssp", lambda: alg.sssp(eng, src0)),
+                      ("wcc", lambda: alg.wcc(eng, eng_r))):
+        (_, st_a), t_a = timed(run)
+        algo_outs[name] = (st_a, t_a)
+    for name, (st_a, t_a) in algo_outs.items():
+        ca_ = st_a.counters
+        disk, disk_raw = ca_["edge_read_bytes"], ca_["edge_read_bytes_raw"]
+        net, net_raw = ca_["net_bytes"], ca_["net_bytes_raw"]
+        ratio = (disk + net) / max(disk_raw + net_raw, 1.0)
+        assert disk + net < disk_raw + net_raw, (
+            f"compression regressed total traffic on {name}")
+        rows.append(csv_row(
+            f"f5/compressed/{name}", t_a,
+            f"disk={disk:.0f};disk_raw={disk_raw:.0f};"
+            f"net={net:.0f};net_raw={net_raw:.0f};ratio={ratio:.4f}"))
+        rows.append(csv_row(
+            f"f5/format_mix/{name}", 0.0,
+            f"csr_pruned={ca_['chunks_read_csr']:.0f};"
+            f"dcsr_raw={ca_['chunks_read_dcsr']:.0f};"
+            f"dcsr_delta={ca_['chunks_read_dcsr_delta']:.0f}"))
 
     # fully-out-of-core: measured disk traffic vs the analytic model,
     # reusing the partitioning + formats already built for the DFO run
@@ -100,10 +134,24 @@ def main(scale=11) -> list[str]:
                 f"f5/dist_ooc/{ak}", t_d if ak == "net_bytes" else 0.0,
                 f"modeled={st_d.counters[ak]:.0f};"
                 f"measured={st_d.counters[mk]:.0f}"))
+        # the wire-format mix of the three-way compressed choice, and the
+        # compressed-vs-raw twins for both disk and wire on the measured run
         rows.append(csv_row(
             "f5/dist_ooc/wire_batches", 0.0,
             f"pairs={st_d.counters['net_pair_batches']:.0f};"
+            f"vpairs={st_d.counters['net_vpair_batches']:.0f};"
             f"slabs={st_d.counters['net_slab_batches']:.0f}"))
+        rows.append(csv_row(
+            "f5/dist_ooc/compressed_vs_raw", 0.0,
+            f"disk={st_d.counters['edge_read_bytes']:.0f};"
+            f"disk_raw={st_d.counters['edge_read_bytes_raw']:.0f};"
+            f"net={st_d.counters['net_bytes']:.0f};"
+            f"net_raw={st_d.counters['net_bytes_raw']:.0f}"))
+        rows.append(csv_row(
+            "f5/dist_ooc/format_mix", 0.0,
+            f"csr_pruned={st_d.counters['chunks_read_csr']:.0f};"
+            f"dcsr_raw={st_d.counters['chunks_read_dcsr']:.0f};"
+            f"dcsr_delta={st_d.counters['chunks_read_dcsr_delta']:.0f}"))
     return rows
 
 

@@ -60,6 +60,21 @@ def main() -> list[str]:
         rows.append(csv_row(f"kernel/csr_combine_{tag}[{mode}]", t,
                             f"live_edges={live_edges:.0f}"))
 
+    # varint delta codec (the compression tier's decode rides the chunk
+    # prefetcher's critical path — track its host throughput in MB/s)
+    from repro.core import codec
+    n_vals = 1 << 20
+    gaps = rng.integers(1, 400, n_vals).astype(np.uint64)   # ~1-2 B varints
+    enc, t_enc = timed(lambda: codec.varint_encode(gaps))
+    dec, t_dec = timed(lambda: codec.varint_decode(enc.tobytes(), n_vals))
+    np.testing.assert_array_equal(dec, gaps)
+    enc_mbs = enc.nbytes / max(t_enc, 1e-9) / 1e6
+    dec_mbs = enc.nbytes / max(t_dec, 1e-9) / 1e6
+    rows.append(csv_row("kernel/varint_encode_1M", t_enc,
+                        f"mb_per_s={enc_mbs:.1f};bytes={enc.nbytes}"))
+    rows.append(csv_row("kernel/varint_decode_1M", t_dec,
+                        f"mb_per_s={dec_mbs:.1f};bytes={enc.nbytes}"))
+
     # flash attention
     q = jax.random.normal(jax.random.PRNGKey(1), (4, 256, 64), jnp.bfloat16)
     k = jax.random.normal(jax.random.PRNGKey(2), (4, 256, 64), jnp.bfloat16)

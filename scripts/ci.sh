@@ -69,6 +69,19 @@ if ! PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
 fi
 suite_timer_end "OOC parity suite"
 
+# The codec + compression-parity suite is the compression-tier gate
+# (DESIGN.md §9): varint/delta round trips, every compressed read's length
+# == the byte model, and bit-identical results with the compression knob
+# on vs off across the executors; standalone for the same
+# baseline-can't-hide-it reason as above.
+suite_timer_start
+if ! PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
+    tests/test_codec.py; then
+    echo "CI FAIL: codec + compression parity suite (tests/test_codec.py)" >&2
+    exit 1
+fi
+suite_timer_end "codec + compression parity suite"
+
 # The distributed parity suite (dist_ooc worker shards + sparse exchange,
 # shard_map-vs-local, filter-never-drops property) is the distributed
 # fully-out-of-core gate; 8 forced host devices so the shard_map paths run
@@ -101,5 +114,19 @@ if grep -q "skipped" "$DIST_OUT" && \
          "never-drops property did not run" >&2
 fi
 suite_timer_end "distributed parity suite"
+
+# Opt-in slow gate (ROADMAP "larger-than-host graphs in CI"): stream a
+# larger-than-default RMAT graph through dist_ooc with compression on;
+# verify_io raises inside every call on any measured/model byte mismatch,
+# and the driver asserts compression strictly reduced disk+net traffic.
+if [ "${REPRO_SLOW:-0}" = "1" ]; then
+    suite_timer_start
+    if ! PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
+        python benchmarks/rmat_stream.py; then
+        echo "CI FAIL: RMAT streaming benchmark (benchmarks/rmat_stream.py)" >&2
+        exit 1
+    fi
+    suite_timer_end "RMAT streaming benchmark (REPRO_SLOW)"
+fi
 
 echo "CI OK: no regressions vs baseline ($(wc -l < "$CURRENT") known failures)"

@@ -10,14 +10,18 @@ Three pieces:
 
 * :class:`ChunkStore` — every (src partition ``p``, dst batch ``k``) edge
   chunk of destination partition ``q`` is serialized into ``edges_q{q}.bin``
-  as ``[DCSR pairs | CSR idx (when accepted) | payload]`` with the format
-  decision of :func:`repro.core.formats.build_formats` baked into an
-  atomically-written JSON manifest.  The section sizes equal the analytic
-  model's ``dcsr_bytes`` / ``csr_bytes`` *exactly* (the payload is shared by
-  both representations), so measured reads can match modeled reads byte for
-  byte.  Reads go through a memory map and are decoded back to the
-  ``(src_local, dst_local, data)`` triples of the in-HBM edge arrays —
-  bit-identical round trip.
+  as ``[DCSR pairs | delta-varint pairs | CSR idx (when accepted) |
+  dst residues | data]`` (compressed layout, DESIGN.md §9; or the legacy
+  ``[pairs | idx | (dst, data) payload]`` when built with
+  ``compression=False``) with the format decision of
+  :func:`repro.core.formats.build_formats` baked into an atomically-written
+  JSON manifest.  The section sizes equal the analytic model's
+  ``dcsr_bytes`` / ``csr_bytes`` / ``dcsr_delta_bytes`` *exactly* (the
+  columnar payload is shared by all three representations), so measured
+  reads can match modeled reads byte for byte.  Reads go through a memory
+  map and are decoded back to the ``(src_local, dst_local, data)`` triples
+  of the in-HBM edge arrays — bit-identical round trip through every
+  representation.
 
 * :class:`VertexSpill` — per-batch disk residence for the vertex state
   arrays (one memmap per array, padded to whole batches) plus the active
@@ -50,6 +54,7 @@ from typing import Iterator, Sequence
 
 import numpy as np
 
+from repro.core import codec
 from repro.core.formats import ChunkFormats
 from repro.core.partition import DistGraph
 from repro.utils import atomic_write_json, ceil_div, token_ctx
@@ -58,7 +63,18 @@ EDGE_DT = np.dtype([("dst", "<i4"), ("data", "<f4")])   # 8 B per edge
 PAIR_DT = np.dtype([("src", "<i4"), ("idx", "<i4")])    # 8 B per DCSR entry
 MANIFEST_NAME = "manifest.json"
 SHARD_MANIFEST_NAME = "shards.json"
-MANIFEST_VERSION = 1
+# v2: compressed chunk layout (delta-varint DCSR pair section + columnar
+# dst-residue/data payload, DESIGN.md §9) and the per-chunk section sizes
+# (pair_delta_nb, dst_delta_nb) recorded in the manifest.  v1 stores are
+# rejected with an error naming both versions — rebuild with
+# ChunkStore.build.
+MANIFEST_VERSION = 2
+
+# Per-chunk representation codes, as they appear in read schedules.  The
+# first two keep bool compatibility (False -> raw DCSR, True -> CSR).
+REP_DCSR = 0        # raw (src, idx) pair section
+REP_CSR = 1         # CSR idx section (pruned-dst payload when compressed)
+REP_DCSR_DELTA = 2  # delta-varint pair section (compressed stores only)
 
 
 class ChunkStoreError(RuntimeError):
@@ -83,6 +99,8 @@ class _ChunkLayout:
     nnz: np.ndarray        # int64 [P, B] DCSR pair count
     edges: np.ndarray      # int64 [P, B] payload entries
     has_csr: np.ndarray    # bool  [P, B]
+    pair_nb: np.ndarray    # int64 [P, B] delta-varint pair section bytes
+    dstv_nb: np.ndarray    # int64 [P, B] dst residue section bytes
 
 
 class ChunkStore:
@@ -90,15 +108,25 @@ class ChunkStore:
 
     File layout per destination partition q (``edges_q{q}.bin``): chunks are
     laid out in (p, k) order; each nonempty chunk occupies one contiguous
-    region::
+    region.  **Compressed** stores (the default, DESIGN.md §9)::
 
-        [DCSR pairs: nnz * 8 B] [CSR idx: (|V_p| + 1) * 4 B, if has_csr]
-        [payload: E * 8 B  ((dst, data) per edge, CSR-by-source order)]
+        [DCSR pairs: nnz * 8 B] [delta-varint pairs: pair_nb B]
+        [CSR idx: (|V_p| + 1) * 4 B, if has_csr]
+        [dst residues: dstv_nb B] [data: E * 4 B  (f32, CSR-by-source order)]
 
-    A DCSR read touches ``pairs + payload`` = the model's ``dcsr_bytes``; a
-    CSR read touches ``idx + payload`` = ``csr_bytes``.  Reads are mmap
-    slices; measured counters (``chunks_read`` / ``bytes_read``) are
-    maintained under a lock so the prefetch thread can read concurrently.
+    so a read picks ONE index section plus the shared columnar payload
+    (``dst residues + data``, both adjacent — one slice): raw-pair DCSR =
+    ``dcsr_bytes``, delta-varint DCSR = ``dcsr_delta_bytes``, pruned-dst
+    CSR = ``csr_bytes`` of the analytic model, byte for byte.
+    **Uncompressed** stores (``build(..., compression=False)``) keep the
+    legacy layout::
+
+        [DCSR pairs: nnz * 8 B] [CSR idx, if has_csr]
+        [payload: E * 8 B  ((dst, data) per edge)]
+
+    whose reads equal the ``*_raw`` model twins.  Reads are mmap slices;
+    measured counters (``chunks_read`` / ``bytes_read``) are maintained
+    under a lock so the prefetch thread can read concurrently.
     """
 
     def __init__(self, root: str, manifest: dict):
@@ -109,6 +137,8 @@ class ChunkStore:
         self.num_partitions = p_cnt
         self.num_batches = b_cnt
         self.part_sizes = np.asarray(manifest["partition_sizes"], np.int64)
+        self.compression = bool(manifest.get("compression", False))
+        self.batch_size = int(manifest["batch_size"])
         # A full store owns every destination partition; a worker shard
         # (build_sharded) owns a subset and holds edge files only for those.
         self.partitions = tuple(manifest.get("partitions",
@@ -123,12 +153,17 @@ class ChunkStore:
             nnz = np.zeros((p_cnt, b_cnt), np.int64)
             edges = np.zeros((p_cnt, b_cnt), np.int64)
             has_csr = np.zeros((p_cnt, b_cnt), bool)
-            for p, k, off, nz, ne, hc in manifest["chunks"][q]:
+            pair_nb = np.zeros((p_cnt, b_cnt), np.int64)
+            dstv_nb = np.zeros((p_cnt, b_cnt), np.int64)
+            for p, k, off, nz, ne, hc, pnb, vnb in manifest["chunks"][q]:
                 offset[p, k] = off
                 nnz[p, k] = nz
                 edges[p, k] = ne
                 has_csr[p, k] = bool(hc)
-            self._layout.append(_ChunkLayout(offset, nnz, edges, has_csr))
+                pair_nb[p, k] = pnb
+                dstv_nb[p, k] = vnb
+            self._layout.append(_ChunkLayout(offset, nnz, edges, has_csr,
+                                             pair_nb, dstv_nb))
         self._mm: dict[int, mmap.mmap] = {}
         self._lock = threading.Lock()
         self.chunks_read = 0
@@ -145,14 +180,18 @@ class ChunkStore:
     # -- construction --------------------------------------------------------
     @classmethod
     def build(cls, g: DistGraph, fmts: ChunkFormats, root: str,
-              partitions: Sequence[int] | None = None) -> "ChunkStore":
+              partitions: Sequence[int] | None = None,
+              compression: bool = True) -> "ChunkStore":
         """Preprocessing: serialize every nonempty chunk; commit manifest.
 
         ``partitions`` restricts the store to a subset of destination
         partitions (a worker shard for the dist_ooc executor); by default
-        the store owns all of them."""
+        the store owns all of them.  ``compression`` selects the layout
+        (see the class docstring) and must match the engine's
+        ``EngineConfig.compression`` — validated at Engine construction."""
         spec = g.spec
         p_cnt, b_cnt = spec.num_partitions, spec.num_batches
+        bs = spec.batch_size
         part_sizes = spec.partition_sizes()
         owned = (list(range(p_cnt)) if partitions is None
                  else [int(q) for q in partitions])
@@ -185,24 +224,43 @@ class ChunkStore:
                         pairs["idx"] = starts
                         f.write(pairs.tobytes())
                         nbytes = pairs.nbytes
+                        pnb = vnb = 0
+                        if compression:
+                            pd = codec.varint_encode(codec.pair_delta_values(
+                                seg_src[starts], starts))
+                            f.write(pd.tobytes())
+                            pnb = pd.nbytes
+                            nbytes += pnb
                         if has_csr[q, p, k]:
                             idx = np.zeros(v_src + 1, np.int32)
                             np.add.at(idx, seg_src + 1, 1)
                             idx = np.cumsum(idx, dtype=np.int32)
                             f.write(idx.tobytes())
                             nbytes += idx.nbytes
-                        payload = np.empty(e - s, EDGE_DT)
-                        payload["dst"] = dst_l[q, s:e]
-                        payload["data"] = data[q, s:e]
-                        f.write(payload.tobytes())
-                        nbytes += payload.nbytes
+                        if compression:
+                            # Columnar payload: dst residues + f32 data.
+                            dv = codec.varint_encode(codec.dst_delta_values(
+                                dst_l[q, s:e], starts, k * bs))
+                            f.write(dv.tobytes())
+                            vnb = dv.nbytes
+                            f.write(np.ascontiguousarray(
+                                data[q, s:e], "<f4").tobytes())
+                            nbytes += vnb + (e - s) * 4
+                        else:
+                            payload = np.empty(e - s, EDGE_DT)
+                            payload["dst"] = dst_l[q, s:e]
+                            payload["data"] = data[q, s:e]
+                            f.write(payload.tobytes())
+                            nbytes += payload.nbytes
                         meta_q.append([p, k, off, int(pairs.shape[0]),
-                                       int(e - s), bool(has_csr[q, p, k])])
+                                       int(e - s), bool(has_csr[q, p, k]),
+                                       int(pnb), int(vnb)])
                         off += nbytes
             chunks_meta[q] = meta_q
 
         manifest = dict(
             version=MANIFEST_VERSION,
+            compression=bool(compression),
             num_partitions=p_cnt,
             num_batches=b_cnt,
             v_max=spec.v_max,
@@ -218,7 +276,8 @@ class ChunkStore:
 
     @classmethod
     def build_sharded(cls, g: DistGraph, fmts: ChunkFormats, root: str,
-                      num_workers: int) -> "ShardedChunkStore":
+                      num_workers: int,
+                      compression: bool = True) -> "ShardedChunkStore":
         """Preprocessing for the dist_ooc executor: W worker shards, each
         with its **own** root (``root/w{w}/``) holding the edge chunks of
         the contiguous block of ``P / W`` destination partitions it owns
@@ -246,7 +305,8 @@ class ChunkStore:
         for w in range(num_workers):
             owned = list(range(w * per, (w + 1) * per))
             shards.append(cls.build(g, fmts, os.path.join(root, f"w{w}"),
-                                    partitions=owned))
+                                    partitions=owned,
+                                    compression=compression))
         atomic_write_json(
             os.path.join(root, SHARD_MANIFEST_NAME),
             dict(version=MANIFEST_VERSION, num_workers=num_workers,
@@ -268,10 +328,11 @@ class ChunkStore:
                 f"(invalid JSON: {exc})") from exc
         if manifest.get("version") != MANIFEST_VERSION:
             raise ChunkStoreError(
-                f"chunk store manifest {path}: version "
-                f"{manifest.get('version')!r} != {MANIFEST_VERSION}")
+                f"chunk store manifest {path}: found version "
+                f"{manifest.get('version')!r}, expected {MANIFEST_VERSION} "
+                f"(the chunk layout changed; rebuild with ChunkStore.build)")
         missing = [k for k in ("num_partitions", "num_batches",
-                               "partition_sizes", "chunks")
+                               "batch_size", "partition_sizes", "chunks")
                    if k not in manifest]
         if missing:
             raise ChunkStoreError(
@@ -305,80 +366,126 @@ class ChunkStore:
                 self._mm[q] = mm
             return mm
 
-    def chunk_stored_nbytes(self, q: int, p: int, k: int) -> tuple[int, int]:
-        """(dcsr_read_bytes, csr_read_bytes) for a chunk; csr part is 0 when
-        no CSR representation is stored.  Mirrors the analytic byte model."""
+    def chunk_stored_nbytes(self, q: int, p: int, k: int
+                            ) -> tuple[int, int, int]:
+        """(dcsr, csr, dcsr_delta) read bytes for a chunk; csr is 0 when no
+        CSR representation is stored, dcsr_delta is 0 on uncompressed
+        stores.  Mirrors the analytic byte model exactly."""
         lay = self._layout_of(q)
         if lay.offset[p, k] < 0:
-            return 0, 0
-        pay = int(lay.edges[p, k]) * EDGE_DT.itemsize
+            return 0, 0, 0
+        if self.compression:
+            pay = int(lay.dstv_nb[p, k]) + int(lay.edges[p, k]) * 4
+        else:
+            pay = int(lay.edges[p, k]) * EDGE_DT.itemsize
         dcsr = int(lay.nnz[p, k]) * PAIR_DT.itemsize + pay
         csr = ((int(self.part_sizes[p]) + 1) * 4 + pay
                if lay.has_csr[p, k] else 0)
-        return dcsr, csr
+        delta = (int(lay.pair_nb[p, k]) + pay) if self.compression else 0
+        return dcsr, csr, delta
 
-    def read_chunk_bytes(self, q: int, p: int, k: int, use_csr: bool
+    def _sections(self, lay: _ChunkLayout, p: int, k: int):
+        """Byte offsets of a chunk's sections relative to its start:
+        (pairs_nb, pair_delta_nb, idx_nb, payload_nb)."""
+        nnz = int(lay.nnz[p, k])
+        n_e = int(lay.edges[p, k])
+        pairs_nb = nnz * PAIR_DT.itemsize
+        idx_nb = (int(self.part_sizes[p]) + 1) * 4 if lay.has_csr[p, k] else 0
+        if self.compression:
+            return (pairs_nb, int(lay.pair_nb[p, k]), idx_nb,
+                    int(lay.dstv_nb[p, k]) + n_e * 4)
+        return pairs_nb, 0, idx_nb, n_e * EDGE_DT.itemsize
+
+    def read_chunk_bytes(self, q: int, p: int, k: int, rep: int
                          ) -> tuple[bytes, bytes, int]:
         """The measured I/O half of a chunk read: ``pread`` the chosen
-        index section (DCSR pairs or CSR idx) and the payload; returns
-        (index bytes, payload bytes, nbytes read).
+        index section (raw DCSR pairs, delta-varint pairs, or CSR idx) and
+        the shared payload; returns (index bytes, payload bytes, nbytes
+        read).
 
         Split from :meth:`decode_chunk` so the prefetch pipeline can fetch
         bytes *outside* the parallel executor's compute token and decode
         under it — the fetch is one C-level memcpy (or, on a cold cache,
         kernel page faults), while the decode is the numpy burst that must
-        take its turn (DESIGN.md §8).  ``use_csr`` selects the
-        representation actually read (the runtime seek-cost decision);
-        asking for CSR where none is stored is a bug in the caller's
-        format choice and raises."""
+        take its turn (DESIGN.md §8).  ``rep`` selects the representation
+        actually read (the runtime three-way choice; ``REP_DCSR`` /
+        ``REP_CSR`` keep bool compatibility); asking for CSR where none is
+        stored, or for the delta section of an uncompressed store, is a
+        bug in the caller's format choice and raises."""
         lay = self._layout_of(q)
         off = int(lay.offset[p, k])
         if off < 0:
             raise KeyError(f"chunk ({q}, {p}, {k}) is empty")
-        nnz = int(lay.nnz[p, k])
-        n_e = int(lay.edges[p, k])
-        v_src = int(self.part_sizes[p])
         mm = self._map(q)
-        pairs_nb = nnz * PAIR_DT.itemsize
-        idx_nb = (v_src + 1) * 4 if lay.has_csr[p, k] else 0
-        pay_off = off + pairs_nb + idx_nb
-        payload = mm[pay_off:pay_off + n_e * EDGE_DT.itemsize]
-        if use_csr:
+        pairs_nb, pd_nb, idx_nb, pay_nb = self._sections(lay, p, k)
+        pay_off = off + pairs_nb + pd_nb + idx_nb
+        payload = mm[pay_off:pay_off + pay_nb]
+        if rep == REP_CSR:
             if not lay.has_csr[p, k]:
                 raise ValueError(
                     f"chunk ({q}, {p}, {k}) has no CSR representation")
-            index = mm[off + pairs_nb:off + pairs_nb + idx_nb]
-        else:
+            index = mm[off + pairs_nb + pd_nb:off + pairs_nb + pd_nb + idx_nb]
+        elif rep == REP_DCSR_DELTA:
+            if not self.compression:
+                raise ValueError(
+                    f"chunk store at {self.root} was built without "
+                    "compression; no delta-varint pair section exists")
+            index = mm[off + pairs_nb:off + pairs_nb + pd_nb]
+        elif rep == REP_DCSR:
             index = mm[off:off + pairs_nb]
+        else:
+            raise ValueError(f"unknown chunk representation {rep!r}")
         nbytes = len(index) + len(payload)
         with self._lock:
             self.chunks_read += 1
             self.bytes_read += nbytes
         return index, payload, nbytes
 
-    def decode_chunk(self, q: int, p: int, k: int, use_csr: bool,
+    def decode_chunk(self, q: int, p: int, k: int, rep: int,
                      index: bytes, payload: bytes):
         """Decode the bytes of :meth:`read_chunk_bytes` back to the in-HBM
-        triple (src_local, dst_local, data) — bit-identical round trip."""
+        triple (src_local, dst_local, data) — bit-identical round trip
+        through every representation, compressed or not (the decompression
+        is vectorized numpy and runs on the prefetch thread under the
+        compute token, overlapping the next item's disk fetch)."""
         lay = self._layout_of(q)
         n_e = int(lay.edges[p, k])
         v_src = int(self.part_sizes[p])
-        pay = np.frombuffer(payload, dtype=EDGE_DT)
-        if use_csr:
+        # Run structure from the chosen index section: chunk-relative run
+        # starts + lengths, and the expanded per-edge src column.
+        if rep == REP_CSR:
             idx = np.frombuffer(index, dtype="<i4")
-            src = np.repeat(np.arange(v_src, dtype=np.int32), np.diff(idx))
+            deg = np.diff(idx)
+            nzd = deg > 0
+            starts = idx[:-1][nzd]
+            runs = deg[nzd]
+            src = np.repeat(np.arange(v_src, dtype=np.int32), deg)
         else:
-            pairs = np.frombuffer(index, dtype=PAIR_DT)
-            runs = np.append(pairs["idx"][1:], np.int32(n_e)) - pairs["idx"]
-            src = np.repeat(pairs["src"], runs)
-        return src, pay["dst"].copy(), pay["data"].copy()
+            if rep == REP_DCSR_DELTA:
+                nnz = int(lay.nnz[p, k])
+                srcs, starts = codec.pair_delta_restore(
+                    codec.varint_decode(index, 2 * nnz))
+            else:
+                pairs = np.frombuffer(index, dtype=PAIR_DT)
+                srcs, starts = pairs["src"], pairs["idx"]
+            runs = np.append(starts[1:], np.int32(n_e)) - starts
+            src = np.repeat(srcs, runs)
+        if not self.compression:
+            pay = np.frombuffer(payload, dtype=EDGE_DT)
+            return src, pay["dst"].copy(), pay["data"].copy()
+        vnb = int(lay.dstv_nb[p, k])
+        dst = codec.dst_delta_restore(
+            codec.varint_decode(payload[:vnb], n_e), starts, runs,
+            k * self.batch_size)
+        data = np.frombuffer(payload[vnb:], dtype="<f4").copy()
+        return src, dst, data
 
-    def read_chunk(self, q: int, p: int, k: int, use_csr: bool):
+    def read_chunk(self, q: int, p: int, k: int, rep: int):
         """Read + decode one chunk; returns (src_local, dst_local, data,
         nbytes).  Convenience composition of :meth:`read_chunk_bytes` and
         :meth:`decode_chunk` for callers outside the prefetch pipeline."""
-        index, payload, nbytes = self.read_chunk_bytes(q, p, k, use_csr)
-        src, dst, data = self.decode_chunk(q, p, k, use_csr, index, payload)
+        index, payload, nbytes = self.read_chunk_bytes(q, p, k, rep)
+        src, dst, data = self.decode_chunk(q, p, k, rep, index, payload)
         return src, dst, data, nbytes
 
     def reset_io_counters(self) -> None:
@@ -435,8 +542,9 @@ class ShardedChunkStore:
                 f"(missing keys: {missing})")
         if meta["version"] != MANIFEST_VERSION:
             raise ChunkStoreError(
-                f"shard manifest {path}: version {meta['version']!r} "
-                f"!= {MANIFEST_VERSION}")
+                f"shard manifest {path}: found version {meta['version']!r}, "
+                f"expected {MANIFEST_VERSION} (the chunk layout changed; "
+                f"rebuild with ChunkStore.build_sharded)")
         if not isinstance(meta["num_workers"], int) \
                 or meta["num_workers"] < 1:
             raise ChunkStoreError(
@@ -613,7 +721,8 @@ class HBMChunkSource:
         self.fmts = fmts
 
     DEST_KEYS = ("dcsr_src", "dcsr_part", "dcsr_batch", "dcsr_valid",
-                 "dcsr_ptr", "has_csr", "csr_bytes", "dcsr_bytes")
+                 "dcsr_ptr", "has_csr", "csr_bytes", "dcsr_bytes",
+                 "dcsr_delta_bytes", "csr_raw_bytes", "dcsr_raw_bytes")
     EDGE_KEYS = ("edge_src_part", "edge_src_local", "edge_dst_local",
                  "edge_data", "edge_valid")
 
@@ -635,7 +744,8 @@ class HBMChunkSource:
 
 class DiskChunkSource:
     """Disk realization: bulk edge data streams from a :class:`ChunkStore`;
-    dispatch metadata and format stats stay memory-resident (host numpy)."""
+    dispatch metadata and format stats stay memory-resident (host numpy),
+    in both the compressed and the legacy ``*_raw`` pricing families."""
 
     kind = "disk"
 
@@ -644,6 +754,7 @@ class DiskChunkSource:
         self.store = store
         self.graph = graph
         self.fmts = fmts
+        self.compression = store.compression
         self.dcsr_src = np.asarray(fmts.dcsr_src)
         self.dcsr_part = np.asarray(fmts.dcsr_part)
         self.dcsr_batch = np.asarray(fmts.dcsr_batch)
@@ -652,16 +763,19 @@ class DiskChunkSource:
         self.has_csr = np.asarray(fmts.has_csr)
         self.csr_bytes = np.asarray(fmts.csr_bytes, np.float64)
         self.dcsr_bytes = np.asarray(fmts.dcsr_bytes, np.float64)
+        self.dcsr_delta_bytes = np.asarray(fmts.dcsr_delta_bytes, np.float64)
+        self.csr_raw_bytes = np.asarray(fmts.csr_raw_bytes, np.float64)
+        self.dcsr_raw_bytes = np.asarray(fmts.dcsr_raw_bytes, np.float64)
 
-    def read_chunk(self, q: int, p: int, k: int, use_csr: bool):
-        return self.store.read_chunk(q, p, k, use_csr)
+    def read_chunk(self, q: int, p: int, k: int, rep: int):
+        return self.store.read_chunk(q, p, k, rep)
 
-    def read_chunk_bytes(self, q: int, p: int, k: int, use_csr: bool):
-        return self.store.read_chunk_bytes(q, p, k, use_csr)
+    def read_chunk_bytes(self, q: int, p: int, k: int, rep: int):
+        return self.store.read_chunk_bytes(q, p, k, rep)
 
-    def decode_chunk(self, q: int, p: int, k: int, use_csr: bool,
+    def decode_chunk(self, q: int, p: int, k: int, rep: int,
                      index: bytes, payload: bytes):
-        return self.store.decode_chunk(q, p, k, use_csr, index, payload)
+        return self.store.decode_chunk(q, p, k, rep, index, payload)
 
 
 # ---------------------------------------------------------------------------
@@ -699,8 +813,9 @@ class ChunkPrefetcher:
 
     ``schedule`` is any iterable whose items are either
 
-    * ``(q, k, [(p, use_csr), ...])`` — a chunk-read request: the prefetch
-      thread reads and decodes those chunks from the store and enqueues one
+    * ``(q, k, [(p, rep), ...])`` — a chunk-read request (``rep`` is a
+      ``REP_*`` representation code): the prefetch thread reads and
+      decodes those chunks from the store and enqueues one
       :class:`BatchWork`, or
     * a :class:`ScheduleMark` instance — forwarded to the consumer
       unchanged, in order (per-partition headers for the lazy dist_ooc
@@ -770,15 +885,15 @@ class ChunkPrefetcher:
                     q, k, chunks = item
                     # Fetch bytes first, token-free (C-level copy / kernel
                     # page faults); only the numpy decode takes the token.
-                    raw = [(p, use_csr,
-                            self._source.read_chunk_bytes(q, p, k, use_csr))
-                           for p, use_csr in chunks]
+                    raw = [(p, rep,
+                            self._source.read_chunk_bytes(q, p, k, rep))
+                           for p, rep in chunks]
                     with self._lock_ctx:     # token held: decode burst
                         srcs, parts, dsts, datas = [], [], [], []
                         nbytes = 0
-                        for p, use_csr, (index, payload, nb) in raw:
+                        for p, rep, (index, payload, nb) in raw:
                             s, d, w = self._source.decode_chunk(
-                                q, p, k, use_csr, index, payload)
+                                q, p, k, rep, index, payload)
                             srcs.append(s)
                             parts.append(np.full(s.shape[0], p, np.int32))
                             dsts.append(d)

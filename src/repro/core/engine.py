@@ -130,6 +130,20 @@ class EngineConfig:
     Required by the ooc / dist_ooc executors: the measured-vs-modeled
     cross-check needs both sides."""
 
+    compression: bool = True
+    """The §4.1 compression tier (DESIGN.md §9), applied to storage *and*
+    wire: per-chunk reads arbitrate a three-way {CSR-pruned, DCSR-raw,
+    DCSR-delta} choice over the compressed columnar layout (dst column
+    pruned to its delta-varint residues, DCSR pairs optionally delta-varint
+    encoded), and cross-worker message batches add a delta-varint pair
+    encoding to the pairs/slab wire choice.  ``edge_read_bytes`` /
+    ``net_bytes`` then price the compressed sizes; their ``*_raw`` twins
+    keep the uncompressed pricing for the Fig.5-style ratio.  The ooc /
+    dist_ooc executors require a store built with the same flag
+    (``ChunkStore.build(..., compression=...)``, validated).  Algorithm
+    results are bit-identical with the knob on or off — only bytes
+    (modeled and measured alike) change."""
+
     compute_backend: str = "segment"
     """Phase-4 combine implementation: ``"segment"`` (flat per-edge gather
     + segment reduction; the reference) or ``"block_csr"`` (the Pallas
@@ -178,9 +192,11 @@ class EngineConfig:
 
 COUNTER_KEYS = (
     "msgs_generated", "msgs_sent", "msgs_sent_nofilter",
-    "net_bytes", "net_bytes_nofilter",
+    "net_bytes", "net_bytes_raw", "net_bytes_nofilter",
     "msgs_dispatched", "edges_touched", "chunks_read",
-    "edge_read_bytes", "vertex_read_bytes", "vertex_write_bytes",
+    "chunks_read_csr", "chunks_read_dcsr", "chunks_read_dcsr_delta",
+    "edge_read_bytes", "edge_read_bytes_raw",
+    "vertex_read_bytes", "vertex_write_bytes",
     "msg_disk_bytes", "seek_cost",
 )
 
@@ -203,7 +219,8 @@ MEASURED_PAIRS = (
 # workers vs the analytic network model, plus which adaptive encoding each
 # cross-worker message batch chose.
 DIST_MEASURED_KEYS = (
-    "measured_net_bytes", "net_pair_batches", "net_slab_batches",
+    "measured_net_bytes", "net_pair_batches", "net_vpair_batches",
+    "net_slab_batches",
 )
 
 DIST_MEASURED_PAIRS = MEASURED_PAIRS + (
@@ -321,6 +338,13 @@ class Engine:
                     f"chunk store at {root} was built for a different "
                     f"partitioning (P, B, batch_size, v_max) = {got}; "
                     f"this graph's spec has {want}")
+            stored = bool(manifest.get("compression", False))
+            if stored != config.compression:
+                raise ValueError(
+                    f"chunk store at {root} was built with "
+                    f"compression={stored}, but EngineConfig.compression="
+                    f"{config.compression}; the physical layout must match "
+                    "the byte model (rebuild the store or flip the knob)")
 
         if self._ooc:
             if not isinstance(store, ChunkStore):

@@ -10,14 +10,22 @@ adaptively (the §4.1 CSR/DCSR idea applied to the network):
   per message: ``count * (4 + msg_bytes)`` bytes.  The DCSR-analogue — only
   live entries move (grown out of
   :func:`repro.core.sparse_collectives.compacted_all_to_all`).
+* ``vpairs`` — the compression tier (DESIGN.md §9): the same compacted
+  entries, but the int32 index column is replaced by a delta-varint gap
+  stream (the indices are sorted, so most gaps fit one byte):
+  ``gap_bytes(mask) + count * msg_bytes``.  Chosen only when
+  ``EngineConfig.compression`` is on.
 * ``slab``  — a dense batch slab over the source partition's vertex span:
   a row-packed presence bitmap plus ``v_max`` dense values:
   ``ceil(v_max / 8) + v_max * msg_bytes`` bytes.  The CSR-analogue —
   position-indexed, wins when most vertices send (grown out of
   :func:`repro.core.sparse_collectives.filtered_all_to_all`).
 
-The decision rule (``slab < pairs``) and the priced bytes come from ONE
-function (:func:`batch_wire_bytes`), used both by the executors' analytic
+The decision rule (cheapest of the enabled encodings, ties preferring the
+cheaper decode: pairs, then vpairs, then slab) and the priced bytes come
+from ONE function (:func:`batch_wire_bytes`, with
+:func:`repro.core.codec.mask_gap_bytes` supplying the data-dependent
+vpairs index size to the analytic counters), used both by the executors'
 ``net_bytes`` counters and by :meth:`Exchange.post` to pick the physical
 encoding — so ``measured_net_bytes == modeled_net_bytes`` by construction,
 the same audit discipline the chunk store established for disk (DESIGN.md
@@ -42,6 +50,7 @@ from typing import Iterator, Sequence
 
 import numpy as np
 
+from repro.core import codec
 from repro.utils import ceil_div, token_ctx
 
 WIRE_MSG_BYTES = 4          # float32 payload values on the wire
@@ -49,6 +58,7 @@ _IDX_BYTES = 4              # int32 source-local index per compacted pair
 
 FMT_PAIRS = 0
 FMT_SLAB = 1
+FMT_VPAIRS = 2              # delta-varint index stream + dense value column
 
 
 # ---------------------------------------------------------------------------
@@ -65,28 +75,52 @@ def slab_batch_bytes(v_max: int, msg_bytes: int) -> float:
     return float(ceil_div(v_max, 8) + v_max * msg_bytes)
 
 
-def batch_wire_bytes(count, v_max: int, msg_bytes: int, xp=np):
+def vpair_batch_bytes(count, gap_bytes, msg_bytes: int):
+    """Delta-varint pairs: the gap stream plus one value per message.
+    ``gap_bytes`` comes from :func:`repro.core.codec.mask_gap_bytes` on the
+    same send mask the encoder serializes."""
+    return gap_bytes + count * float(msg_bytes)
+
+
+def batch_wire_bytes(count, v_max: int, msg_bytes: int, gap_bytes=None,
+                     xp=np):
     """Priced wire bytes of one (p -> q) message batch.
 
     ``count`` may be a scalar or an array (numpy or jnp via ``xp``); empty
-    batches are never sent and cost 0.  This is the single source of truth
-    for the network model: every executor's ``net_bytes`` counter and the
-    encoder's format choice derive from it.  The host (numpy) path prices
-    in float64 so the model stays exact against the integer byte sum the
-    wire measures (float32 would round past the verify_io tolerance once a
-    call moves ≳16 MB); the jit path keeps float32, matching the analytic
-    counters' dtype."""
+    batches are never sent and cost 0.  With ``gap_bytes`` (the delta-
+    varint index stream size of the same mask) the price is the three-way
+    minimum including the compressed ``vpairs`` encoding; without it, the
+    legacy two-way pairs/slab choice (``EngineConfig.compression`` off).
+    This is the single source of truth for the network model: every
+    executor's ``net_bytes`` counter and the encoder's format choice
+    derive from it.  The host (numpy) path prices in float64 so the model
+    stays exact against the integer byte sum the wire measures (float32
+    would round past the verify_io tolerance once a call moves ≳16 MB);
+    the jit path keeps float32, matching the analytic counters' dtype."""
     acc = xp.float64 if xp is np else xp.float32
     pairs = pair_batch_bytes(xp.asarray(count, acc), msg_bytes)
     slab = slab_batch_bytes(v_max, msg_bytes)
-    return xp.where(xp.asarray(count) > 0, xp.minimum(pairs, slab), 0.0)
+    best = xp.minimum(pairs, slab)
+    if gap_bytes is not None:
+        best = xp.minimum(best, vpair_batch_bytes(
+            xp.asarray(count, acc), xp.asarray(gap_bytes, acc), msg_bytes))
+    return xp.where(xp.asarray(count) > 0, best, 0.0)
 
 
-def choose_slab(count: int, v_max: int, msg_bytes: int) -> bool:
-    """True when the dense slab is strictly cheaper than compacted pairs
-    (ties go to pairs — identical bytes, smaller decode work)."""
-    return slab_batch_bytes(v_max, msg_bytes) < pair_batch_bytes(
-        count, msg_bytes)
+def choose_wire_format(count: int, v_max: int, msg_bytes: int,
+                       gap_bytes=None) -> int:
+    """The encoder's scalar realization of :func:`batch_wire_bytes`: the
+    cheapest enabled encoding, ties preferring the cheaper decode
+    (pairs, then vpairs, then slab).  Any tie-break yields the same byte
+    count as the model's minimum — which is the invariant that matters."""
+    best, cost = FMT_PAIRS, pair_batch_bytes(count, msg_bytes)
+    if gap_bytes is not None:
+        vb = vpair_batch_bytes(count, float(gap_bytes), msg_bytes)
+        if vb < cost:
+            best, cost = FMT_VPAIRS, vb
+    if slab_batch_bytes(v_max, msg_bytes) < cost:
+        best = FMT_SLAB
+    return best
 
 
 # ---------------------------------------------------------------------------
@@ -94,23 +128,49 @@ def choose_slab(count: int, v_max: int, msg_bytes: int) -> bool:
 # ---------------------------------------------------------------------------
 
 def encode_batch(mask: np.ndarray, values: np.ndarray,
-                 count: int | None = None) -> tuple[int, bytes]:
+                 count: int | None = None, *,
+                 compression: bool = False) -> tuple[int, bytes]:
     """Serialize one message batch; returns (format tag, payload bytes).
 
     mask [v_max] bool, values [v_max] float32 (entries where ``mask`` is
     False are never read — unread spill batches may hold garbage).
-    ``count`` is the mask's popcount if the caller already has it.  The
-    payload length equals :func:`batch_wire_bytes` exactly."""
+    ``count`` is the mask's popcount if the caller already has it.
+    ``compression`` enables the delta-varint ``vpairs`` encoding in the
+    choice.  The payload length equals :func:`batch_wire_bytes` (with
+    ``gap_bytes`` iff ``compression``) exactly."""
     v_max = mask.shape[0]
     if count is None:
         count = int(mask.sum())
-    if choose_slab(count, v_max, WIRE_MSG_BYTES):
+
+    def slab_payload():
         bits = np.packbits(np.asarray(mask, bool))
         dense = np.where(mask, values, 0.0).astype("<f4")
         return FMT_SLAB, bits.tobytes() + dense.tobytes()
-    idx = np.flatnonzero(mask).astype("<i4")
+
+    # Dense fast path: when the slab beats the pairs AND the vpairs floor
+    # (every gap varint is >= 1 byte, so vpairs >= count * (msg + 1)), the
+    # slab is certainly the three-way minimum — skip building the index
+    # column entirely (dense PageRank supersteps post slabs per (p, q)
+    # batch; the old two-way encoder had the same O(1) slab path).
+    slab = slab_batch_bytes(v_max, WIRE_MSG_BYTES)
+    if slab < pair_batch_bytes(count, WIRE_MSG_BYTES) and (
+            not compression
+            or slab < vpair_batch_bytes(count, float(count),
+                                        WIRE_MSG_BYTES)):
+        return slab_payload()
+    idx = np.flatnonzero(mask)
+    gaps = gb = None
+    if compression:
+        gaps = np.diff(idx, prepend=-1).astype(np.uint64)
+        gb = int(codec.varint_sizes(gaps).sum())
+    fmt = choose_wire_format(count, v_max, WIRE_MSG_BYTES, gb)
+    if fmt == FMT_SLAB:
+        return slab_payload()
     vals = np.asarray(values, "<f4")[idx]
-    return FMT_PAIRS, idx.tobytes() + vals.tobytes()
+    if fmt == FMT_VPAIRS:
+        return FMT_VPAIRS, (codec.varint_encode(gaps).tobytes()
+                            + vals.tobytes())
+    return FMT_PAIRS, idx.astype("<i4").tobytes() + vals.tobytes()
 
 
 def decode_batch(fmt: int, payload: bytes, count: int, v_max: int
@@ -122,10 +182,16 @@ def decode_batch(fmt: int, payload: bytes, count: int, v_max: int
         mask = np.unpackbits(bits)[:v_max].astype(bool)
         values = np.frombuffer(payload[nbits:], "<f4").copy()
         return mask, values
-    if fmt != FMT_PAIRS:
+    if fmt == FMT_VPAIRS:
+        vals_nb = count * WIRE_MSG_BYTES
+        gaps = codec.varint_decode(payload[:len(payload) - vals_nb], count)
+        idx = (np.cumsum(gaps.astype(np.int64)) - 1).astype(np.int64)
+        vals = np.frombuffer(payload[len(payload) - vals_nb:], "<f4")
+    elif fmt == FMT_PAIRS:
+        idx = np.frombuffer(payload[:count * _IDX_BYTES], "<i4")
+        vals = np.frombuffer(payload[count * _IDX_BYTES:], "<f4")
+    else:
         raise ValueError(f"unknown wire format tag {fmt!r}")
-    idx = np.frombuffer(payload[:count * _IDX_BYTES], "<i4")
-    vals = np.frombuffer(payload[count * _IDX_BYTES:], "<f4")
     mask = np.zeros(v_max, bool)
     values = np.zeros(v_max, np.float32)
     mask[idx] = True
@@ -157,9 +223,14 @@ class Exchange:
     sum of integer byte counts, exact under reordering) are all independent
     of thread completion order."""
 
-    def __init__(self, num_workers: int, v_max: int):
+    def __init__(self, num_workers: int, v_max: int,
+                 compression: bool = True):
         self.num_workers = num_workers
         self.v_max = v_max
+        # ``compression`` enables the delta-varint vpairs wire encoding in
+        # every posted batch's three-way choice (mirrors
+        # EngineConfig.compression — the engine passes its flag through).
+        self.compression = compression
         # inbox[w][q] -> list of (p, entry); entry is ("local", mask, values)
         # or ("wire", fmt, count, payload)
         self._inbox: list[dict[int, list]] = [
@@ -168,6 +239,7 @@ class Exchange:
         self.bytes_sent = 0.0
         self.pair_batches = 0
         self.slab_batches = 0
+        self.vpair_batches = 0
         self.bytes_by_sender = np.zeros(num_workers, np.float64)
 
     def post(self, src_worker: int, dst_worker: int, p: int, q: int,
@@ -182,13 +254,16 @@ class Exchange:
             return
         if count is None:
             count = int(mask.sum())
-        fmt, payload = encode_batch(mask, values, count)
+        fmt, payload = encode_batch(mask, values, count,
+                                    compression=self.compression)
         with self._lock:
             box = self._inbox[dst_worker].setdefault(q, [])
             self.bytes_sent += len(payload)
             self.bytes_by_sender[src_worker] += len(payload)
             if fmt == FMT_SLAB:
                 self.slab_batches += 1
+            elif fmt == FMT_VPAIRS:
+                self.vpair_batches += 1
             else:
                 self.pair_batches += 1
             box.append((p, ("wire", fmt, count, payload)))

@@ -58,9 +58,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import codec
 from repro.core import exchange as exchange_mod
 from repro.core import phases
-from repro.core.chunkstore import ChunkPrefetcher, HBMChunkSource, ScheduleMark
+from repro.core.chunkstore import (
+    REP_CSR, REP_DCSR, REP_DCSR_DELTA, ChunkPrefetcher, HBMChunkSource,
+    ScheduleMark,
+)
 from repro.core.formats import BlockTilesHost
 from repro.core.partition import row_block_batch_map
 from repro.kernels.csr_spmv import (
@@ -195,13 +199,26 @@ def _dest_phases(d, recv_msg, recv_mask, *, slot_fn, monoid, spec, cfg,
          "chunks_read": jnp.sum(chunk_active, dtype=jnp.float32)}
     if cfg.enable_adaptive_formats:
         msgs_from = jnp.sum(recv_mask, axis=1).astype(jnp.int32)
-        c["seek_cost"], c["edge_read_bytes"] = phases.format_choice_one_dest(
+        c.update(phases.format_choice_one_dest(
             d["dcsr_ptr"], d["has_csr"], d["csr_bytes"], d["dcsr_bytes"],
-            part_sizes, gamma, msgs_from, chunk_active)
+            d["dcsr_delta_bytes"], d["csr_raw_bytes"], d["dcsr_raw_bytes"],
+            part_sizes, gamma, msgs_from, cfg.compression, chunk_active))
     else:
+        # Non-adaptive baseline: CSR for every chunk (the behavior the
+        # paper improves on; model-only — ooc executors reject this
+        # config).  The CSR family still follows cfg.compression so the
+        # disk and wire counters of one run price one layout; the raw
+        # twin keeps the fully-legacy number either way.
+        base = d["csr_bytes"] if cfg.compression else d["csr_raw_bytes"]
         c["seek_cost"] = jnp.zeros((), jnp.float32)
         c["edge_read_bytes"] = jnp.sum(
-            jnp.where(chunk_active, d["csr_bytes"], 0.0), dtype=jnp.float32)
+            jnp.where(chunk_active, base, 0.0), dtype=jnp.float32)
+        c["edge_read_bytes_raw"] = jnp.sum(
+            jnp.where(chunk_active, d["csr_raw_bytes"], 0.0),
+            dtype=jnp.float32)
+        c["chunks_read_csr"] = c["chunks_read"]
+        c["chunks_read_dcsr"] = jnp.zeros((), jnp.float32)
+        c["chunks_read_dcsr_delta"] = jnp.zeros((), jnp.float32)
 
     if backend == "segment":
         agg, has, touched = phases.process_segment_one_dest(
@@ -301,11 +318,16 @@ def make_local_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
         counters["msgs_sent"] = total_sent
         counters["msgs_sent_nofilter"] = p_cnt * n_active
         # Network model from the routing structure: each nonempty off-node
-        # (p, q) message batch is priced at its adaptive wire encoding.
+        # (p, q) message batch is priced at its adaptive wire encoding
+        # (three-way — incl. the delta-varint vpairs, whose data-dependent
+        # index size comes from the same masks — when compression is on).
         counts = phases.routing_counts(recv_mask)                # [Q, P]
+        gapb = (codec.mask_gap_bytes(recv_mask, xp=jnp)
+                if cfg.compression else None)
         cross = jnp.arange(p_cnt)[:, None] != jnp.arange(p_cnt)[None, :]
-        counters["net_bytes"] = phases.net_bytes_model(
-            counts, cross, spec.v_max, cfg.msg_bytes)
+        counters["net_bytes"], counters["net_bytes_raw"] = (
+            phases.net_bytes_model(counts, cross, spec.v_max,
+                                   cfg.msg_bytes, gap_bytes=gapb))
         counters["net_bytes_nofilter"] = ((p_cnt - 1) * n_active
                                           * (cfg.msg_bytes + 4))
 
@@ -379,8 +401,12 @@ def make_sharded_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
         # recovers the full [Q, P] sum): per-destination batch counts,
         # priced at the adaptive wire encoding, self-shard excluded.
         counts = phases.routing_counts(sendmask)                 # [Q]
-        counters["net_bytes"] = phases.net_bytes_model(
-            counts, jnp.arange(p_cnt) != my, spec.v_max, cfg.msg_bytes)
+        gapb = (codec.mask_gap_bytes(sendmask, xp=jnp)
+                if cfg.compression else None)
+        counters["net_bytes"], counters["net_bytes_raw"] = (
+            phases.net_bytes_model(counts, jnp.arange(p_cnt) != my,
+                                   spec.v_max, cfg.msg_bytes,
+                                   gap_bytes=gapb))
         counters["net_bytes_nofilter"] = ((p_cnt - 1) * m_p
                                           * (cfg.msg_bytes + 4))
         send_msg = jnp.where(sendmask, msg[0][None, :], 0)   # [P, V]
@@ -530,16 +556,18 @@ def _ooc_combine_batch(work, xv_q, xc_q, slot_fn, monoid, mode,
     return np.asarray(val), np.asarray(hc)
 
 
-def _dispatch_schedule_one_dest(source, q, recv_mask_q, part_sizes, gamma):
+def _dispatch_schedule_one_dest(source, q, recv_mask_q, part_sizes, gamma,
+                                compression):
     """Host-side phases 3 + 3.5 for one destination partition, shared by
     the OOC and dist_ooc executors: dispatch presence over the
-    memory-resident DCSR graph, the runtime CSR/DCSR choice, and the
-    streamed-chunk schedule.  The exact decision both prices the model and
-    drives the physical reads below it, so measured bytes match modeled
-    bytes by design.
+    memory-resident DCSR graph, the runtime three-way format choice
+    (CSR-pruned / DCSR-raw / DCSR-delta when ``compression``, the legacy
+    two-way otherwise), and the streamed-chunk schedule.  The exact
+    decision both prices the model and drives the physical reads below it,
+    so measured bytes match modeled bytes by design.
 
-    Returns (dispatched, chunk_active [P, B], seek_cost, edge_read_bytes,
-    schedule items [(q, k, [(p, use_csr), ...]), ...])."""
+    Returns (counter contributions dict, chunk_active [P, B],
+    schedule items [(q, k, [(p, rep), ...]), ...])."""
     p_cnt, b_cnt = source.has_csr.shape[1], source.has_csr.shape[2]
     present = (recv_mask_q[source.dcsr_part[q], source.dcsr_src[q]]
                & source.dcsr_valid[q])
@@ -552,20 +580,31 @@ def _dispatch_schedule_one_dest(source, q, recv_mask_q, part_sizes, gamma):
     # badly across threads — numpy keeps parallel workers contention-free
     # while the float32 pinning keeps the decision bit-identical to the
     # jitted model.
-    uc, seek, per_chunk = phases.format_choice_matrix(
+    uc, ud, seek, per_chunk, per_raw = phases.format_choice_matrix(
         source.dcsr_ptr[q], source.has_csr[q],
         source.csr_bytes[q].astype(np.float32),
         source.dcsr_bytes[q].astype(np.float32),
-        part_sizes, gamma, msgs_from, xp=np)
-    seek_cost = float(seek[chunk_active].sum())
-    read_bytes = float(per_chunk[chunk_active].sum())
+        source.dcsr_delta_bytes[q].astype(np.float32),
+        source.csr_raw_bytes[q].astype(np.float32),
+        source.dcsr_raw_bytes[q].astype(np.float32),
+        part_sizes, gamma, msgs_from, compression, xp=np)
+    rep = np.where(uc, REP_CSR, np.where(ud, REP_DCSR_DELTA, REP_DCSR))
+    cd = {
+        "msgs_dispatched": float(present.sum()),
+        "chunks_read": float(chunk_active.sum()),
+        "seek_cost": float(seek[chunk_active].sum()),
+        "edge_read_bytes": float(per_chunk[chunk_active].sum()),
+        "edge_read_bytes_raw": float(per_raw[chunk_active].sum()),
+        "chunks_read_csr": float((chunk_active & uc).sum()),
+        "chunks_read_dcsr_delta": float((chunk_active & ud).sum()),
+        "chunks_read_dcsr": float((chunk_active & ~uc & ~ud).sum()),
+    }
     schedule = []
     for k in range(b_cnt):
         ps = np.nonzero(chunk_active[:, k])[0]
         if ps.size:
-            schedule.append((q, k, [(int(p), bool(uc[p, k])) for p in ps]))
-    return (float(present.sum()), chunk_active, seek_cost, read_bytes,
-            schedule)
+            schedule.append((q, k, [(int(p), int(rep[p, k])) for p in ps]))
+    return cd, chunk_active, schedule
 
 
 def _block_dest_vectors(recv_mask_q, msg_q, mode, a_const, identity,
@@ -696,9 +735,13 @@ def make_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
         counters["msgs_sent"] = total_sent
         counters["msgs_sent_nofilter"] = p_cnt * n_active
         counts = phases.routing_counts(recv_mask, xp=np)         # [Q, P]
+        gapb = (codec.mask_gap_bytes(recv_mask, xp=np)
+                if cfg.compression else None)
         cross = np.arange(p_cnt)[:, None] != np.arange(p_cnt)[None, :]
-        counters["net_bytes"] = float(phases.net_bytes_model(
-            counts, cross, v_max, cfg.msg_bytes, xp=np))
+        net, net_raw = phases.net_bytes_model(
+            counts, cross, v_max, cfg.msg_bytes, gap_bytes=gapb, xp=np)
+        counters["net_bytes"] = float(net)
+        counters["net_bytes_raw"] = float(net_raw)
         counters["net_bytes_nofilter"] = (p_cnt - 1) * n_active * mb
 
         # Phases 3 + 3.5 + schedule per destination (shared helper: the
@@ -706,12 +749,11 @@ def make_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
         # reads below, so measured bytes match the model by design).
         schedule = []
         for q in range(p_cnt):
-            disp, ca, seek, rb, sched_q = _dispatch_schedule_one_dest(
-                source, q, recv_mask[q], part_sizes, gamma)
-            counters["msgs_dispatched"] += disp
-            counters["chunks_read"] += float(ca.sum())
-            counters["seek_cost"] += seek
-            counters["edge_read_bytes"] += rb
+            cd, _, sched_q = _dispatch_schedule_one_dest(
+                source, q, recv_mask[q], part_sizes, gamma,
+                cfg.compression)
+            for ck, cv in cd.items():
+                counters[ck] += cv
             schedule.extend(sched_q)
 
         # Phase 4: stream active chunks dst-batch by dst-batch, double-
@@ -789,10 +831,9 @@ class DestHeader(ScheduleMark):
     q: int
     recv_mask: np.ndarray      # [P, v_max] message presence per source part
     recv_msg: np.ndarray       # [P, v_max] message values (garbage off-mask)
-    dispatched: float          # phase-3 (message, batch) deliveries
-    chunks_active: float       # chunks the selective schedule will read
-    seek_cost: float           # modeled seek units (runtime format choice)
-    read_bytes: float          # modeled edge bytes those reads will serve
+    counter_delta: dict        # phase-3 contributions (dispatch, seek, the
+    #                            compressed/raw read-byte twins, per-format
+    #                            chunk counts) of _dispatch_schedule_one_dest
 
 
 def run_worker_pool(thunks, parallel: bool, pool=None):
@@ -895,7 +936,8 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
         spill_io0 = [(sp.bytes_read, sp.bytes_written) for sp in spills]
         store_io0 = [(src.store.chunks_read, src.store.bytes_read)
                      for src in sources]
-        ex = exchange_mod.Exchange(n_workers, v_max)
+        ex = exchange_mod.Exchange(n_workers, v_max,
+                                   compression=cfg.compression)
         # Shared compute token for the parallel pools (utils.token_ctx):
         # CPU bursts across the W worker pipelines take turns holding it,
         # avoiding the GIL convoy of interleaved small numpy calls; queue
@@ -924,27 +966,35 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
                     {k: jnp.asarray(v) for k, v in gstate.items()},
                     global_id[lo:hi]), np.float32)
             counts_w = np.zeros((p_cnt, len(parts)), np.float64)
+            gapb_w = np.zeros((p_cnt, len(parts)), np.float64)
             for i, p in enumerate(parts):
                 with tok:                   # compute token: filter + encode
                     m_p = float(am_w[i].sum())
                     sendmask = phases.filter_sendmask(
                         am_w[i], need[p], need_counts[p], m_p, cfg, xp=np)
                     counts_w[:, i] = phases.routing_counts(sendmask, xp=np)
+                    if cfg.compression:
+                        # vpairs index-stream sizes of the very masks the
+                        # wire serializes — the model's data-dependent term.
+                        gapb_w[:, i] = codec.mask_gap_bytes(sendmask, xp=np)
                     for q in range(p_cnt):
                         c = int(counts_w[q, i])
                         if c:
                             ex.post(w, int(worker_of[q]), p, q, sendmask[q],
                                     msg_w[i], count=c)
-            return counts_w, float(gen_b.sum()), time.perf_counter() - t0
+            return counts_w, gapb_w, float(gen_b.sum()), \
+                time.perf_counter() - t0
 
         send_out = run_worker_pool(
             [functools.partial(send_task, w) for w in range(n_workers)],
             parallel, pool=engine.worker_pool)
         counts = np.zeros((p_cnt, p_cnt), np.float64)       # [q, p] routing
+        gapb = np.zeros((p_cnt, p_cnt), np.float64)
         gen_batches_total = 0.0
-        for w, (counts_w, gen_b_sum, dt) in enumerate(send_out):
+        for w, (counts_w, gapb_w, gen_b_sum, dt) in enumerate(send_out):
             lo, hi = worker_parts[w][0], worker_parts[w][-1] + 1
             counts[:, lo:hi] = counts_w
+            gapb[:, lo:hi] = gapb_w
             gen_batches_total += gen_b_sum
             engine.worker_times[w]["send_s"] += dt
 
@@ -957,11 +1007,15 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
         # Modeled network traffic from the same routing counts the wire
         # used; cross iff source and destination workers differ.
         cross = (worker_of[np.newaxis, :] != worker_of[:, np.newaxis])
-        counters["net_bytes"] = float(phases.net_bytes_model(
-            counts, cross, v_max, cfg.msg_bytes, xp=np))
+        net, net_raw = phases.net_bytes_model(
+            counts, cross, v_max, cfg.msg_bytes,
+            gap_bytes=gapb if cfg.compression else None, xp=np)
+        counters["net_bytes"] = float(net)
+        counters["net_bytes_raw"] = float(net_raw)
         counters["measured_net_bytes"] = ex.bytes_sent
         counters["net_pair_batches"] = float(ex.pair_batches)
         counters["net_slab_batches"] = float(ex.slab_batches)
+        counters["net_vpair_batches"] = float(ex.vpair_batches)
 
         # Phases 3 + 4 + apply per worker, against its own shard.  The
         # send pool has fully joined, so every message batch is posted
@@ -990,13 +1044,12 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
                         ex, w, parts, p_cnt, compute_lock=token,
                         runner=engine.pipeline_pool):
                     with tok:               # compute token: dispatch burst
-                        disp, ca, seek, rb, sched_q = (
-                            _dispatch_schedule_one_dest(
-                                source, q, recv_mask_q, part_sizes, gamma))
+                        cd, _, sched_q = _dispatch_schedule_one_dest(
+                            source, q, recv_mask_q, part_sizes, gamma,
+                            cfg.compression)
                         header = DestHeader(
                             q=q, recv_mask=recv_mask_q, recv_msg=recv_msg_q,
-                            dispatched=disp, chunks_active=float(ca.sum()),
-                            seek_cost=seek, read_bytes=rb)
+                            counter_delta=cd)
                     yield header
                     yield from sched_q
 
@@ -1010,14 +1063,8 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
                 if isinstance(item, DestHeader):
                     cur = item
                     xv_q = xc_q = None
-                    cw["msgs_dispatched"] = (
-                        cw.get("msgs_dispatched", 0.0) + item.dispatched)
-                    cw["chunks_read"] = (
-                        cw.get("chunks_read", 0.0) + item.chunks_active)
-                    cw["seek_cost"] = (
-                        cw.get("seek_cost", 0.0) + item.seek_cost)
-                    cw["edge_read_bytes"] = (
-                        cw.get("edge_read_bytes", 0.0) + item.read_bytes)
+                    for ck, cv in item.counter_delta.items():
+                        cw[ck] = cw.get(ck, 0.0) + cv
                     continue
                 with tok:                   # compute token: combine burst
                     if backend == "block_csr" and xv_q is None:

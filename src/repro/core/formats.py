@@ -4,6 +4,17 @@ Every edge chunk gets a DCSR ((src, idx) pairs for sources that actually
 have edges in the chunk).  Chunks whose CSR index would not be too inflated
 (|V_src| / |E_chunk| <= inflate_ratio, default 32) additionally get a CSR.
 
+On top of the representation choice sits the compression tier (DESIGN.md
+§9): the (src, idx) pair stream is additionally stored delta-varint
+encoded, and the compressed payload is columnar — dst residues (delta to
+the previous edge's dst, restarting per source run against the batch base;
+derivable-from-index information pruned to its varint residue) next to the
+f32 data column — so the runtime choice becomes three-way
+{CSR-pruned, DCSR-raw, DCSR-delta} per chunk.  Both the compressed byte
+model and the legacy uncompressed ``*_raw`` twins are kept on
+:class:`ChunkFormats`; ``EngineConfig.compression`` selects which family
+prices (and, out of core, physically serves) the reads.
+
 At process time the engine chooses per chunk with the paper's seek-cost
 model:
     cost_DCSR = 2 * |V_src, outdeg != 0|          (scan the (src, idx) array)
@@ -23,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import codec
 from repro.core.partition import DistGraph, TwoLevelSpec
 from repro.utils import register_static_dataclass
 
@@ -37,6 +49,16 @@ class ChunkFormats:
     DCSR arrays are concatenated over chunks per destination partition q,
     grouped in (src partition p, dst batch k) order; chunk (p, k) occupies
     DCSR slots dcsr_ptr[q, p, k] : dcsr_ptr[q, p, k + 1].
+
+    Two byte models live side by side (DESIGN.md §9): the **compressed**
+    read sizes (``csr_bytes`` — pruned-dst CSR, ``dcsr_bytes`` — raw pairs
+    over the compressed columnar payload, ``dcsr_delta_bytes`` —
+    delta-varint pairs) price the compressed on-disk layout, while the
+    ``*_raw`` twins keep the legacy uncompressed pricing (raw pairs / idx
+    + interleaved 8 B/edge payload).  ``EngineConfig.compression`` selects
+    which family the runtime choice and counters use; the raw twins are
+    also reported next to the compressed counters for the Fig.5-style
+    compressed-vs-raw ratios.
     """
     # --- DCSR device arrays, [P, S_max] ---
     dcsr_src: jnp.ndarray         # int32, source local id (within partition p)
@@ -48,10 +70,13 @@ class ChunkFormats:
     dcsr_ptr: jnp.ndarray         # int32 [P, P, B + 1]
     # --- per-chunk format decision + cost/storage model (constant arrays) ---
     has_csr: jnp.ndarray          # bool [P, P, B]
-    csr_bytes: jnp.ndarray        # float32 [P, P, B]  idx + (dst, data)
-    dcsr_bytes: jnp.ndarray       # float32 [P, P, B]  (src, idx) + (dst, data)
-    stored_bytes: jnp.ndarray     # float32 [P, P, B]  bytes on "disk" (HBM):
-    #                               DCSR always + CSR when has_csr
+    csr_bytes: jnp.ndarray        # float32 [P, P, B]  idx + dstv + data
+    dcsr_bytes: jnp.ndarray       # float32 [P, P, B]  raw pairs + dstv + data
+    dcsr_delta_bytes: jnp.ndarray  # float32 [P, P, B] delta pairs + dstv + data
+    csr_raw_bytes: jnp.ndarray    # float32 [P, P, B]  legacy idx + (dst, data)
+    dcsr_raw_bytes: jnp.ndarray   # float32 [P, P, B]  legacy pairs + (dst, data)
+    stored_bytes: jnp.ndarray     # float32 [P, P, B]  compressed-layout bytes
+    #                               on disk: every section of the chunk
     # --- static metadata (hashable) ---
     s_max: int
     inflate_ratio: float
@@ -62,13 +87,15 @@ register_static_dataclass(
     ChunkFormats,
     data_fields=["dcsr_src", "dcsr_edge_start", "dcsr_edge_count",
                  "dcsr_batch", "dcsr_part", "dcsr_valid", "dcsr_ptr",
-                 "has_csr", "csr_bytes", "dcsr_bytes", "stored_bytes"],
+                 "has_csr", "csr_bytes", "dcsr_bytes", "dcsr_delta_bytes",
+                 "csr_raw_bytes", "dcsr_raw_bytes", "stored_bytes"],
     static_fields=["s_max", "inflate_ratio", "gamma"],
 )
 
 _IDX_BYTES = 4       # one int32 per CSR idx entry
 _SRCIDX_BYTES = 8    # (src, idx) pair per DCSR entry
-_EDGE_BYTES = 8      # (dst, data) per edge
+_EDGE_BYTES = 8      # (dst, data) per edge (legacy interleaved payload)
+_DATA_BYTES = 4      # f32 data column of the compressed columnar payload
 
 
 def build_formats(g: DistGraph, *, inflate_ratio: float = DEFAULT_INFLATE_RATIO,
@@ -87,19 +114,27 @@ def build_formats(g: DistGraph, *, inflate_ratio: float = DEFAULT_INFLATE_RATIO,
         ratio = np.where(edges > 0, v_src / np.maximum(edges, 1), np.inf)
     has_csr = (ratio <= inflate_ratio) & (edges > 0)
 
-    csr_bytes = ((v_src + 1) * _IDX_BYTES + edges * _EDGE_BYTES).astype(np.int64)
-    dcsr_bytes = (chunk_nnz_np * _SRCIDX_BYTES
-                  + chunk_edges_np * _EDGE_BYTES).astype(np.int64)
+    csr_raw_bytes = ((v_src + 1) * _IDX_BYTES
+                     + edges * _EDGE_BYTES).astype(np.int64)
+    dcsr_raw_bytes = (chunk_nnz_np * _SRCIDX_BYTES
+                      + chunk_edges_np * _EDGE_BYTES).astype(np.int64)
     empty = chunk_edges_np == 0
-    csr_bytes[~has_csr] = 0
-    csr_bytes[empty] = 0
-    dcsr_bytes[empty] = 0
-    stored = dcsr_bytes + csr_bytes    # DCSR always built; CSR when accepted
+    csr_raw_bytes[~has_csr] = 0
+    csr_raw_bytes[empty] = 0
+    dcsr_raw_bytes[empty] = 0
 
     # --- DCSR device arrays (host pass over the already-sorted edges) ---
     src_local = np.asarray(g.edge_src_local)
+    dst_local = np.asarray(g.edge_dst_local)
     valid = np.asarray(g.edge_valid)
     chunk_ptr = np.asarray(g.chunk_ptr)
+    bs = spec.batch_size
+
+    # Compressed-section sizes (DESIGN.md §9), measured per chunk on the
+    # exact delta streams the store will write — model == disk by
+    # construction.
+    pair_delta_nb = np.zeros((p_cnt, p_cnt, b_cnt), np.int64)
+    dst_delta_nb = np.zeros((p_cnt, p_cnt, b_cnt), np.int64)
 
     per_q_entries = []
     for q in range(p_cnt):
@@ -114,8 +149,14 @@ def build_formats(g: DistGraph, *, inflate_ratio: float = DEFAULT_INFLATE_RATIO,
                 change = np.flatnonzero(np.diff(seg)) + 1
                 starts = np.concatenate([[0], change]) + s
                 ends = np.concatenate([change, [e - s]]) + s
+                rel = starts - s
+                pair_delta_nb[q, p, k] = codec.varint_sizes(
+                    codec.pair_delta_values(seg[rel], rel)).sum()
+                dst_delta_nb[q, p, k] = codec.varint_sizes(
+                    codec.dst_delta_values(dst_local[q, s:e], rel,
+                                           k * bs)).sum()
                 rows.append(np.stack([
-                    seg[starts - s],                 # src
+                    seg[rel],                        # src
                     starts,                          # edge_start
                     ends - starts,                   # edge_count
                     np.full(starts.shape, k),        # batch
@@ -123,6 +164,23 @@ def build_formats(g: DistGraph, *, inflate_ratio: float = DEFAULT_INFLATE_RATIO,
                 ], axis=1))
         per_q_entries.append(
             np.concatenate(rows, axis=0) if rows else np.zeros((0, 5), np.int64))
+
+    # Compressed read sizes: shared columnar payload (dst residues + f32
+    # data) under one of three index sections; empty chunks cost 0.
+    data_nb = chunk_edges_np * _DATA_BYTES
+    shared = dst_delta_nb + data_nb
+    dcsr_bytes = chunk_nnz_np * _SRCIDX_BYTES + shared
+    dcsr_delta_bytes = pair_delta_nb + shared
+    csr_bytes = (v_src.astype(np.int64) + 1) * _IDX_BYTES + shared
+    csr_bytes[~has_csr] = 0
+    for arr in (dcsr_bytes, dcsr_delta_bytes, csr_bytes):
+        arr[empty] = 0
+    # Storage cost of the compressed layout: every section of the chunk
+    # (both pair encodings always, idx when accepted, shared payload once).
+    stored = (chunk_nnz_np * _SRCIDX_BYTES + pair_delta_nb + shared
+              + np.where(has_csr,
+                         (v_src.astype(np.int64) + 1) * _IDX_BYTES, 0))
+    stored[empty] = 0
 
     s_max = max(1, max(r.shape[0] for r in per_q_entries))
     dcsr_src = np.zeros((p_cnt, s_max), np.int32)
@@ -162,6 +220,9 @@ def build_formats(g: DistGraph, *, inflate_ratio: float = DEFAULT_INFLATE_RATIO,
         has_csr=jnp.asarray(has_csr),
         csr_bytes=jnp.asarray(csr_bytes, jnp.float32),
         dcsr_bytes=jnp.asarray(dcsr_bytes, jnp.float32),
+        dcsr_delta_bytes=jnp.asarray(dcsr_delta_bytes, jnp.float32),
+        csr_raw_bytes=jnp.asarray(csr_raw_bytes, jnp.float32),
+        dcsr_raw_bytes=jnp.asarray(dcsr_raw_bytes, jnp.float32),
         stored_bytes=jnp.asarray(stored, jnp.float32),
         s_max=s_max,
         inflate_ratio=float(inflate_ratio),
@@ -303,15 +364,26 @@ def build_block_tiles(g: DistGraph, *, tile: int = 8
 
 
 def storage_summary(fmts: ChunkFormats, g: DistGraph) -> dict:
-    """Totals for the Fig.5-style I/O claims: adaptive store vs raw pairs."""
+    """Totals for the Fig.5-style I/O claims: adaptive store vs raw pairs.
+
+    ``adaptive_best_read_bytes`` prices the three-way compressed choice
+    (pruned CSR / raw-pair DCSR / delta-varint DCSR over the columnar
+    payload); ``adaptive_raw_read_bytes`` prices the legacy two-way
+    uncompressed layout for the same chunks, so their ratio is the
+    compression win at full-scan density."""
     has_csr = np.asarray(fmts.has_csr)
     csr_bytes = np.asarray(fmts.csr_bytes)
     dcsr_bytes = np.asarray(fmts.dcsr_bytes)
+    dcsr_delta = np.asarray(fmts.dcsr_delta_bytes)
     raw_pair_bytes = int(np.asarray(g.edge_valid).sum()) * 8
     csr_only = float(np.where(has_csr, csr_bytes, 0).sum())
     dcsr_only = float(dcsr_bytes.sum())
+    best_dcsr = np.minimum(dcsr_bytes, dcsr_delta)
     adaptive_read = float(np.minimum(
-        np.where(has_csr, csr_bytes, np.inf), dcsr_bytes).sum())
+        np.where(has_csr, csr_bytes, np.inf), best_dcsr).sum())
+    adaptive_raw = float(np.minimum(
+        np.where(has_csr, np.asarray(fmts.csr_raw_bytes), np.inf),
+        np.asarray(fmts.dcsr_raw_bytes)).sum())
     # non-adaptive baseline the paper improves on: CSR for EVERY live chunk
     # (each pays the full |V_src|+1 idx array regardless of sparsity)
     edges = np.asarray(g.chunk_edges, np.float64)
@@ -325,6 +397,8 @@ def storage_summary(fmts: ChunkFormats, g: DistGraph) -> dict:
                 csr_all_chunks_bytes=csr_all,
                 dcsr_total_bytes=dcsr_only,
                 adaptive_best_read_bytes=adaptive_read,
+                adaptive_raw_read_bytes=adaptive_raw,
+                compressed_over_raw=adaptive_read / max(adaptive_raw, 1.0),
                 adaptive_over_csr_all=adaptive_read / max(csr_all, 1.0),
                 stored_bytes=float(np.asarray(fmts.stored_bytes).sum()),
                 csr_chunk_fraction=float(has_csr.mean()))

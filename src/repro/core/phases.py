@@ -70,7 +70,8 @@ def routing_counts(recv_mask, xp=jnp):
         xp.float64 if xp is np else xp.float32)
 
 
-def net_bytes_model(counts, cross, v_max, msg_bytes, xp=jnp):
+def net_bytes_model(counts, cross, v_max, msg_bytes, gap_bytes=None,
+                    xp=jnp):
     """Analytic network bytes shared by every executor.
 
     counts: routing counts (any shape); cross: same-shape bool — True where
@@ -79,9 +80,24 @@ def net_bytes_model(counts, cross, v_max, msg_bytes, xp=jnp):
     dist_ooc).  Each nonempty crossing batch is priced at its adaptively
     chosen wire encoding — the same ``exchange.batch_wire_bytes`` the
     physical encoder uses, so dist_ooc's measured bytes equal this model by
-    construction."""
-    wire = batch_wire_bytes(counts, v_max, msg_bytes, xp=xp)
-    return xp.sum(xp.where(cross, wire, 0.0))
+    construction.
+
+    ``gap_bytes`` (same shape as ``counts``: the delta-varint index-stream
+    size of each batch's send mask, from
+    :func:`repro.core.codec.mask_gap_bytes`) enables the compressed
+    ``vpairs`` encoding in the choice.  Returns ``(net, net_raw)``: the
+    priced bytes under the running choice and the legacy two-way
+    pairs/slab price of the same routing counts — the compressed/raw
+    twins of the counter set.  With ``gap_bytes=None`` (compression off)
+    the two are equal."""
+    raw = xp.sum(xp.where(
+        cross, batch_wire_bytes(counts, v_max, msg_bytes, xp=xp), 0.0))
+    if gap_bytes is None:
+        return raw, raw
+    net = xp.sum(xp.where(
+        cross, batch_wire_bytes(counts, v_max, msg_bytes,
+                                gap_bytes=gap_bytes, xp=xp), 0.0))
+    return net, raw
 
 
 # ---------------------------------------------------------------------------
@@ -105,20 +121,37 @@ def dispatch_one_dest(dsrc, dpart, dbatch, dvalid, recv_mask, v_max, b_cnt):
 
 
 def format_choice_matrix(dcsr_ptr, has_csr, csr_bytes, dcsr_bytes,
-                         part_sizes, gamma, msgs_from, xp=jnp):
-    """Paper §4.1 per-chunk runtime CSR/DCSR selection for one destination.
+                         dcsr_delta_bytes, csr_raw_bytes, dcsr_raw_bytes,
+                         part_sizes, gamma, msgs_from, compression,
+                         xp=jnp):
+    """Paper §4.1 per-chunk runtime format selection for one destination,
+    extended to the three-way {CSR-pruned, DCSR-raw, DCSR-delta} choice of
+    the compression tier (DESIGN.md §9).
 
-    dcsr_ptr [P, B+1]; has_csr/csr_bytes/dcsr_bytes [P, B]; part_sizes [P];
-    msgs_from [P] — messages received from each source partition.
+    dcsr_ptr [P, B+1]; has_csr and all byte arrays [P, B]; part_sizes [P];
+    msgs_from [P] — messages received from each source partition;
+    ``compression`` (python bool, static under jit) selects the byte-model
+    family.
 
-    Returns (use_csr [P, B], seek [P, B], read_bytes [P, B]).  This is the
-    single source of truth for the decision: the in-HBM executors reduce it
-    to counters (:func:`format_choice_one_dest`) under jit (xp=jnp), the
-    OOC / dist_ooc executors issue the corresponding disk reads from their
-    host-side schedules (xp=np, so parallel workers never contend on the
-    jax dispatch path) — measured bytes match modeled bytes because both
-    come from here.  The cost arithmetic is pinned to float32 on both
-    paths so the numpy decision is bit-identical to the jitted one."""
+    The CSR-vs-DCSR arm is the paper's seek-cost rule and is deliberately
+    *independent* of compression (both DCSR encodings scan the same runs;
+    the pruned CSR seeks the same idx), so toggling the knob never changes
+    the selective schedule — only the bytes each read costs.  Within the
+    DCSR arm, compression picks the smaller of the raw-pair and
+    delta-varint sections (ties to raw: cheaper decode).
+
+    Returns (use_csr [P, B], use_delta [P, B], seek [P, B],
+    read_bytes [P, B], read_bytes_raw [P, B]) where ``read_bytes`` prices
+    the running choice and ``read_bytes_raw`` the legacy uncompressed
+    layout for the same choice (the compressed/raw counter twins).  This
+    is the single source of truth for the decision: the in-HBM executors
+    reduce it to counters (:func:`format_choice_one_dest`) under jit
+    (xp=jnp), the OOC / dist_ooc executors issue the corresponding disk
+    reads from their host-side schedules (xp=np, so parallel workers never
+    contend on the jax dispatch path) — measured bytes match modeled bytes
+    because both come from here.  The cost arithmetic is pinned to float32
+    on both paths so the numpy decision is bit-identical to the jitted
+    one."""
     nnz = (dcsr_ptr[:, 1:] - dcsr_ptr[:, :-1]).astype(xp.float32)
     v_src = part_sizes.astype(xp.float32)[:, None]             # [P, 1]
     m = msgs_from.astype(xp.float32)[:, None]
@@ -126,23 +159,41 @@ def format_choice_matrix(dcsr_ptr, has_csr, csr_bytes, dcsr_bytes,
     cost_csr = xp.minimum(xp.float32(gamma) * m, v_src)
     use_csr = has_csr & (cost_csr < cost_dcsr)
     seek = xp.where(use_csr, cost_csr, cost_dcsr)
-    per_chunk = xp.where(use_csr, csr_bytes, dcsr_bytes)
-    return use_csr, seek, per_chunk
+    per_raw = xp.where(use_csr, csr_raw_bytes, dcsr_raw_bytes)
+    if compression:
+        use_delta = (~use_csr) & (dcsr_delta_bytes < dcsr_bytes)
+        per_chunk = xp.where(use_csr, csr_bytes,
+                             xp.where(use_delta, dcsr_delta_bytes,
+                                      dcsr_bytes))
+    else:
+        use_delta = xp.zeros(use_csr.shape, bool)
+        per_chunk = per_raw
+    return use_csr, use_delta, seek, per_chunk, per_raw
 
 
 def format_choice_one_dest(dcsr_ptr, has_csr, csr_bytes, dcsr_bytes,
-                           part_sizes, gamma, msgs_from, chunk_active):
+                           dcsr_delta_bytes, csr_raw_bytes, dcsr_raw_bytes,
+                           part_sizes, gamma, msgs_from, compression,
+                           chunk_active):
     """Reduce :func:`format_choice_matrix` over active chunks.
 
-    Returns (seek_cost scalar, edge_read_bytes scalar)."""
-    _, seek, per_chunk = format_choice_matrix(
-        dcsr_ptr, has_csr, csr_bytes, dcsr_bytes, part_sizes, gamma,
-        msgs_from)
-    seek_cost = jnp.sum(jnp.where(chunk_active, seek, 0.0),
-                        dtype=jnp.float32)
-    read_bytes = jnp.sum(jnp.where(chunk_active, per_chunk, 0.0),
-                         dtype=jnp.float32)
-    return seek_cost, read_bytes
+    Returns the per-destination counter contributions: seek cost, the
+    compressed/raw read-byte twins, and the per-format active-chunk
+    counts."""
+    use_csr, use_delta, seek, per_chunk, per_raw = format_choice_matrix(
+        dcsr_ptr, has_csr, csr_bytes, dcsr_bytes, dcsr_delta_bytes,
+        csr_raw_bytes, dcsr_raw_bytes, part_sizes, gamma, msgs_from,
+        compression)
+    red = lambda x: jnp.sum(jnp.where(chunk_active, x, 0.0),
+                            dtype=jnp.float32)
+    return {
+        "seek_cost": red(seek),
+        "edge_read_bytes": red(per_chunk),
+        "edge_read_bytes_raw": red(per_raw),
+        "chunks_read_csr": red(use_csr.astype(jnp.float32)),
+        "chunks_read_dcsr_delta": red(use_delta.astype(jnp.float32)),
+        "chunks_read_dcsr": red((~use_csr & ~use_delta).astype(jnp.float32)),
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -11,7 +11,9 @@ from repro.core import (
     build_dist_graph, build_formats, make_spec,
 )
 from repro.core import algorithms as alg
-from repro.core.chunkstore import MANIFEST_NAME
+from repro.core.chunkstore import (
+    MANIFEST_NAME, MANIFEST_VERSION, REP_CSR, REP_DCSR, REP_DCSR_DELTA,
+)
 from repro.core.engine import MEASURED_PAIRS
 from repro.data.graphs import rmat_graph
 
@@ -32,8 +34,9 @@ def built(tmp_path_factory):
 # ---------------------------------------------------------------------------
 
 def test_roundtrip_bit_identical(built):
-    """Every nonempty chunk decodes — via DCSR *and* CSR where stored — to
-    exactly the (src, dst, data) triples of the in-HBM edge arrays."""
+    """Every nonempty chunk decodes — via raw DCSR, delta-varint DCSR, *and*
+    pruned CSR where stored — to exactly the (src, dst, data) triples of
+    the in-HBM edge arrays."""
     _, dg, fm, store = built
     spec = dg.spec
     chunk_ptr = np.asarray(dg.chunk_ptr)
@@ -49,9 +52,10 @@ def test_roundtrip_bit_identical(built):
                 if e <= s:
                     continue
                 n_nonempty += 1
-                reps = [False] + ([True] if has_csr[q, p, k] else [])
-                for use_csr in reps:
-                    src, dst, data, _ = store.read_chunk(q, p, k, use_csr)
+                reps = [REP_DCSR, REP_DCSR_DELTA] + (
+                    [REP_CSR] if has_csr[q, p, k] else [])
+                for rep in reps:
+                    src, dst, data, _ = store.read_chunk(q, p, k, rep)
                     np.testing.assert_array_equal(src, esl[q, s:e])
                     np.testing.assert_array_equal(dst, edl[q, s:e])
                     np.testing.assert_array_equal(data, edata[q, s:e])
@@ -59,18 +63,43 @@ def test_roundtrip_bit_identical(built):
 
 
 def test_stored_sizes_match_byte_model(built):
-    """On-disk read sizes equal the analytic csr_bytes / dcsr_bytes model —
-    the precondition for measured == modeled edge I/O."""
+    """On-disk read sizes equal the analytic csr_bytes / dcsr_bytes /
+    dcsr_delta_bytes model — the precondition for measured == modeled edge
+    I/O (compressed layout)."""
     _, dg, fm, store = built
     spec = dg.spec
     csr_bytes = np.asarray(fm.csr_bytes)
     dcsr_bytes = np.asarray(fm.dcsr_bytes)
+    delta_bytes = np.asarray(fm.dcsr_delta_bytes)
     for q in range(spec.num_partitions):
         for p in range(spec.num_partitions):
             for k in range(spec.num_batches):
-                d_nb, c_nb = store.chunk_stored_nbytes(q, p, k)
+                d_nb, c_nb, dd_nb = store.chunk_stored_nbytes(q, p, k)
                 assert d_nb == dcsr_bytes[q, p, k]
                 assert c_nb == csr_bytes[q, p, k]
+                assert dd_nb == delta_bytes[q, p, k]
+
+
+def test_uncompressed_store_sizes_match_raw_model(built, tmp_path):
+    """A compression=False store keeps the legacy layout whose read sizes
+    equal the *_raw model twins."""
+    _, dg, fm, _ = built
+    store = ChunkStore.build(dg, fm, str(tmp_path / "rawstore"),
+                             compression=False)
+    spec = dg.spec
+    csr_raw = np.asarray(fm.csr_raw_bytes)
+    dcsr_raw = np.asarray(fm.dcsr_raw_bytes)
+    for q in range(spec.num_partitions):
+        for p in range(spec.num_partitions):
+            for k in range(spec.num_batches):
+                d_nb, c_nb, dd_nb = store.chunk_stored_nbytes(q, p, k)
+                assert d_nb == dcsr_raw[q, p, k]
+                assert c_nb == csr_raw[q, p, k]
+                assert dd_nb == 0
+    nz = np.argwhere(np.asarray(dg.chunk_ptr)[:, :, 1:]
+                     > np.asarray(dg.chunk_ptr)[:, :, :-1])[0]
+    with pytest.raises(ValueError, match="without compression"):
+        store.read_chunk(*nz, REP_DCSR_DELTA)
 
 
 def test_read_counts_match_chosen_representation(built):
@@ -80,12 +109,14 @@ def test_read_counts_match_chosen_representation(built):
         np.asarray(fm.has_csr) &
         (chunk_ptr[:, :, 1:] > chunk_ptr[:, :, :-1]))[0]
     store.reset_io_counters()
-    *_, nb_d = store.read_chunk(q, p, k, use_csr=False)
-    *_, nb_c = store.read_chunk(q, p, k, use_csr=True)
+    *_, nb_d = store.read_chunk(q, p, k, REP_DCSR)
+    *_, nb_c = store.read_chunk(q, p, k, REP_CSR)
+    *_, nb_dd = store.read_chunk(q, p, k, REP_DCSR_DELTA)
     assert nb_d == np.asarray(fm.dcsr_bytes)[q, p, k]
     assert nb_c == np.asarray(fm.csr_bytes)[q, p, k]
-    assert store.chunks_read == 2
-    assert store.bytes_read == nb_d + nb_c
+    assert nb_dd == np.asarray(fm.dcsr_delta_bytes)[q, p, k]
+    assert store.chunks_read == 3
+    assert store.bytes_read == nb_d + nb_c + nb_dd
 
 
 def test_open_missing_manifest_raises(tmp_path):
@@ -126,11 +157,29 @@ def test_manifest_reopen(built):
     reopened = ChunkStore.open(store.root)
     chunk_ptr = np.asarray(dg.chunk_ptr)
     nz = np.argwhere(chunk_ptr[:, :, 1:] > chunk_ptr[:, :, :-1])[0]
-    a = store.read_chunk(*nz, use_csr=False)
-    b = reopened.read_chunk(*nz, use_csr=False)
+    a = store.read_chunk(*nz, REP_DCSR)
+    b = reopened.read_chunk(*nz, REP_DCSR)
     for x, y in zip(a[:3], b[:3]):
         np.testing.assert_array_equal(x, y)
     assert os.path.exists(os.path.join(store.root, MANIFEST_NAME))
+
+
+def test_open_old_manifest_version_raises(built, tmp_path):
+    """Opening a store written with a previous layout version must raise a
+    ChunkStoreError naming both the found and the expected version."""
+    import json
+    import shutil
+    _, _, _, store = built
+    root = tmp_path / "vold"
+    shutil.copytree(store.root, root)
+    manifest = json.loads((root / MANIFEST_NAME).read_text())
+    manifest["version"] = MANIFEST_VERSION - 1
+    (root / MANIFEST_NAME).write_text(json.dumps(manifest))
+    with pytest.raises(ChunkStoreError) as ei:
+        ChunkStore.open(str(root))
+    msg = str(ei.value)
+    assert f"found version {MANIFEST_VERSION - 1}" in msg
+    assert f"expected {MANIFEST_VERSION}" in msg
 
 
 # ---------------------------------------------------------------------------

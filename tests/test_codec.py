@@ -1,0 +1,274 @@
+"""Compression tier (DESIGN.md §9): varint/delta codec round trips, exact
+read-length == byte-model equality for every compressed representation, and
+the compression on/off parity gate — bit-identical algorithm results across
+executors with ``verify_io`` holding on both layouts.
+
+Run standalone by ``scripts/ci.sh`` as the codec + compression-parity gate.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChunkStore, Engine, EngineConfig, build_dist_graph, build_formats,
+    codec, make_spec,
+)
+from repro.core import algorithms as alg
+from repro.core.chunkstore import REP_CSR, REP_DCSR, REP_DCSR_DELTA
+from repro.data.graphs import rmat_graph
+
+
+# ---------------------------------------------------------------------------
+# Varint codec: adversarial explicit cases
+# ---------------------------------------------------------------------------
+
+def _roundtrip(vals):
+    vals = np.asarray(vals, np.uint64)
+    enc = codec.varint_encode(vals)
+    assert enc.size == int(codec.varint_sizes(vals).sum())
+    dec = codec.varint_decode(enc.tobytes(), vals.size)
+    np.testing.assert_array_equal(dec, vals)
+
+
+@pytest.mark.parametrize("case", [
+    [],                                     # empty chunk
+    [0],                                    # single edge, zero delta
+    [2**64 - 1],                            # max-gap: full 10-group varint
+    [0] * 4096,                             # dense: all one-byte residues
+    [127, 128, 2**14 - 1, 2**14, 2**21 - 1, 2**21, 2**28 - 1, 2**28,
+     2**35, 2**42, 2**49, 2**56, 2**63],    # every group-count boundary
+])
+def test_varint_roundtrip_adversarial(case):
+    _roundtrip(case)
+
+
+def test_varint_decode_rejects_corruption():
+    enc = codec.varint_encode(np.array([300, 5], np.uint64))
+    with pytest.raises(ValueError, match="corrupt"):
+        codec.varint_decode(enc.tobytes()[:-1], 2)      # truncated
+    with pytest.raises(ValueError, match="corrupt"):
+        codec.varint_decode(enc.tobytes(), 3)           # wrong count
+    with pytest.raises(ValueError, match="trailing"):
+        codec.varint_decode(enc.tobytes(), 0)
+
+
+def test_mask_gap_bytes_matches_encoder_and_jit():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    for density in (0.0, 0.01, 0.4, 1.0):
+        mask = rng.random((3, 257)) < density
+        host = codec.mask_gap_bytes(mask, xp=np)
+        jit = np.asarray(codec.mask_gap_bytes(jnp.asarray(mask), xp=jnp))
+        np.testing.assert_allclose(host, jit)
+        for row in range(mask.shape[0]):
+            gaps = np.diff(np.flatnonzero(mask[row]),
+                           prepend=-1).astype(np.uint64)
+            assert codec.varint_encode(gaps).size == host[row]
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis: delta codecs round-trip bit-exactly on adversarial chunks
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:              # pragma: no cover - explicit cases above
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(0, 2**64 - 1), max_size=200))
+    def test_varint_roundtrip_property(vals):
+        _roundtrip(vals)
+
+    @st.composite
+    def chunks(draw):
+        """An adversarial sorted chunk: edges grouped into runs by src,
+        dst non-decreasing within a run, all >= the batch base."""
+        base = draw(st.integers(0, 2**20)) * 16
+        n_runs = draw(st.integers(0, 12))
+        srcs = draw(st.lists(st.integers(0, 2**24), min_size=n_runs,
+                             max_size=n_runs, unique=True))
+        srcs = np.sort(np.asarray(srcs, np.int64))
+        runs, dst = [], []
+        for _ in range(n_runs):
+            r = draw(st.integers(1, 9))
+            runs.append(r)
+            d = draw(st.lists(st.integers(0, 2**20), min_size=r, max_size=r))
+            dst.extend(base + np.sort(np.asarray(d, np.int64)))
+        return base, srcs, np.asarray(runs, np.int64), \
+            np.asarray(dst, np.int64)
+
+    @settings(max_examples=50, deadline=None)
+    @given(chunks())
+    def test_chunk_delta_codecs_roundtrip_property(chunk):
+        base, srcs, runs, dst = chunk
+        starts = (np.cumsum(runs) - runs).astype(np.int64)  # empty-safe
+        # pair stream
+        pv = codec.pair_delta_values(srcs, starts)
+        s2, i2 = codec.pair_delta_restore(
+            codec.varint_decode(codec.varint_encode(pv).tobytes(),
+                                2 * srcs.size))
+        np.testing.assert_array_equal(s2, srcs)
+        np.testing.assert_array_equal(i2, starts)
+        # dst residue stream
+        res = codec.dst_delta_values(dst, starts, base)
+        d2 = codec.dst_delta_restore(
+            codec.varint_decode(codec.varint_encode(res).tobytes(),
+                                dst.size), starts, runs, base)
+        np.testing.assert_array_equal(d2, dst)
+
+
+# ---------------------------------------------------------------------------
+# Store: every compressed read's length equals the model's byte count
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    g = rmat_graph(7, 12, seed=9, weighted=True)
+    spec = make_spec(g, num_partitions=4, batch_size=16)
+    dg = build_dist_graph(g, spec)
+    fm = build_formats(dg)
+    root = tmp_path_factory.mktemp("codec_store")
+    return g, dg, fm, root
+
+
+def test_every_compressed_read_matches_model(built):
+    g, dg, fm, root = built
+    store = ChunkStore.build(dg, fm, str(root / "model"))
+    spec = dg.spec
+    model = {REP_DCSR: np.asarray(fm.dcsr_bytes),
+             REP_CSR: np.asarray(fm.csr_bytes),
+             REP_DCSR_DELTA: np.asarray(fm.dcsr_delta_bytes)}
+    has_csr = np.asarray(fm.has_csr)
+    chunk_ptr = np.asarray(dg.chunk_ptr)
+    checked = 0
+    for q in range(spec.num_partitions):
+        for p in range(spec.num_partitions):
+            for k in range(spec.num_batches):
+                if chunk_ptr[q, p, k + 1] <= chunk_ptr[q, p, k]:
+                    continue
+                reps = [REP_DCSR, REP_DCSR_DELTA] + (
+                    [REP_CSR] if has_csr[q, p, k] else [])
+                for rep in reps:
+                    index, payload, nb = store.read_chunk_bytes(q, p, k, rep)
+                    assert len(index) + len(payload) == nb
+                    assert nb == model[rep][q, p, k], (q, p, k, rep)
+                    checked += 1
+    assert checked > 0
+
+
+def test_compressed_choice_never_regresses_per_chunk(built):
+    """Acceptance: for any message density, the three-way compressed
+    choice's per-chunk bytes never exceed the legacy two-way choice's."""
+    from repro.core import phases
+    g, dg, fm, _ = built
+    spec = dg.spec
+    part_sizes = np.asarray(spec.partition_sizes(), np.float32)
+    args = lambda q: (np.asarray(fm.dcsr_ptr)[q], np.asarray(fm.has_csr)[q],
+                      np.asarray(fm.csr_bytes)[q].astype(np.float32),
+                      np.asarray(fm.dcsr_bytes)[q].astype(np.float32),
+                      np.asarray(fm.dcsr_delta_bytes)[q].astype(np.float32),
+                      np.asarray(fm.csr_raw_bytes)[q].astype(np.float32),
+                      np.asarray(fm.dcsr_raw_bytes)[q].astype(np.float32))
+    rng = np.random.default_rng(3)
+    for q in range(spec.num_partitions):
+        for density in (0.0, 0.1, 1.0):
+            msgs = (rng.random(spec.num_partitions)
+                    * density * spec.v_max).astype(np.int64)
+            uc_on, _, _, per_on, _ = phases.format_choice_matrix(
+                *args(q), part_sizes, fm.gamma, msgs, True, xp=np)
+            uc_off, _, _, per_off, _ = phases.format_choice_matrix(
+                *args(q), part_sizes, fm.gamma, msgs, False, xp=np)
+            # same selective schedule, lower-or-equal bytes per chunk
+            np.testing.assert_array_equal(uc_on, uc_off)
+            assert (per_on <= per_off).all()
+
+
+# ---------------------------------------------------------------------------
+# Parity gate: bit-identical results with compression on vs off + verify_io
+# ---------------------------------------------------------------------------
+
+def _run_all(engine, g):
+    src = int(np.argmax(g.out_degrees()))
+    out = [alg.pagerank(engine, 3), alg.bfs(engine, src),
+           alg.sssp(engine, src)]
+    return out
+
+
+def _assert_bit_identical(outs_a, outs_b):
+    for (va, sa), (vb, sb) in zip(outs_a, outs_b):
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+        assert sa.per_iter_return == sb.per_iter_return
+        # the raw twins must agree across the knob; the compressed columns
+        # may only shrink
+        assert sa.counters["edge_read_bytes_raw"] == \
+            sb.counters["edge_read_bytes_raw"]
+        assert sa.counters["net_bytes_raw"] == sb.counters["net_bytes_raw"]
+        assert sa.counters["edge_read_bytes"] <= \
+            sb.counters["edge_read_bytes"]
+        assert sa.counters["net_bytes"] <= sb.counters["net_bytes"]
+
+
+def test_local_compression_on_off_bit_identical(built):
+    g, dg, fm, _ = built
+    on = Engine(dg, fm, EngineConfig(compression=True))
+    off = Engine(dg, fm, EngineConfig(compression=False))
+    outs_on, outs_off = _run_all(on, g), _run_all(off, g)
+    _assert_bit_identical(outs_on, outs_off)
+    # off-mode pricing equals the raw twins exactly
+    for _, s in outs_off:
+        assert s.counters["edge_read_bytes"] == \
+            s.counters["edge_read_bytes_raw"]
+        assert s.counters["net_bytes"] == s.counters["net_bytes_raw"]
+        assert s.counters["chunks_read_dcsr_delta"] == 0
+
+
+def test_ooc_compression_on_off_bit_identical(built):
+    g, dg, fm, root = built
+    on = Engine(dg, fm, EngineConfig(executor="ooc"),
+                store=ChunkStore.build(dg, fm, str(root / "ooc_on")))
+    off = Engine(dg, fm,
+                 EngineConfig(executor="ooc", compression=False),
+                 store=ChunkStore.build(dg, fm, str(root / "ooc_off"),
+                                        compression=False))
+    # verify_io is on by default: every call cross-checks measured==model
+    _assert_bit_identical(_run_all(on, g), _run_all(off, g))
+
+
+@pytest.mark.parametrize("parallel", [False, True])
+def test_dist_compression_on_off_bit_identical(built, parallel):
+    g, dg, fm, root = built
+    tag = "par" if parallel else "seq"
+    on = Engine(dg, fm,
+                EngineConfig(executor="dist_ooc", num_workers=2,
+                             parallel_workers=parallel),
+                store=ChunkStore.build_sharded(
+                    dg, fm, str(root / f"d_on_{tag}"), 2))
+    off = Engine(dg, fm,
+                 EngineConfig(executor="dist_ooc", num_workers=2,
+                              compression=False, parallel_workers=parallel),
+                 store=ChunkStore.build_sharded(
+                     dg, fm, str(root / f"d_off_{tag}"), 2,
+                     compression=False))
+    outs_on, outs_off = _run_all(on, g), _run_all(off, g)
+    _assert_bit_identical(outs_on, outs_off)
+    # the wire audit holds on both layouts (accumulated, beyond the
+    # per-call verify_io)
+    for _, s in outs_on + outs_off:
+        assert abs(s.counters["measured_net_bytes"]
+                   - s.counters["net_bytes"]) < 1e-3
+    for _, s in outs_off:
+        assert s.counters["net_vpair_batches"] == 0
+
+
+def test_store_compression_mismatch_rejected(built):
+    g, dg, fm, root = built
+    store_off = ChunkStore.build(dg, fm, str(root / "mm_off"),
+                                 compression=False)
+    with pytest.raises(ValueError, match="compression"):
+        Engine(dg, fm, EngineConfig(executor="ooc"), store=store_off)
+    store_on = ChunkStore.build(dg, fm, str(root / "mm_on"))
+    with pytest.raises(ValueError, match="compression"):
+        Engine(dg, fm, EngineConfig(executor="ooc", compression=False),
+               store=store_on)

@@ -28,7 +28,8 @@ from repro.core import algorithms as alg
 from repro.core.chunkstore import ShardedChunkStore
 from repro.core.engine import DIST_MEASURED_PAIRS
 from repro.core.exchange import (
-    batch_wire_bytes, choose_slab, decode_batch, encode_batch,
+    FMT_SLAB, batch_wire_bytes, choose_wire_format, decode_batch,
+    encode_batch,
 )
 from repro.data.graphs import rmat_graph
 
@@ -65,7 +66,7 @@ def _state_parity(out_ref, out_dist, *, skip_net=True):
     assert s1.iterations == s2.iterations
     np.testing.assert_allclose(s1.per_iter_return, s2.per_iter_return,
                                rtol=1e-5, atol=1e-5)
-    skip = {"net_bytes"} if skip_net else set()
+    skip = {"net_bytes", "net_bytes_raw"} if skip_net else set()
     for k in s1.counters:
         if k in skip:
             continue
@@ -114,7 +115,10 @@ def test_dist_bfs_parity_selective(engines):
     total_chunks = int((np.asarray(dg.chunk_edges) > 0).sum())
     iters = out_d[1].iterations
     assert out_d[1].counters["chunks_read"] < total_chunks * iters
-    assert out_d[1].counters["net_pair_batches"] > 0
+    # compacted encodings (raw or delta-varint pairs, whichever the byte
+    # model priced cheaper) carry the sparse frontiers
+    assert (out_d[1].counters["net_pair_batches"]
+            + out_d[1].counters["net_vpair_batches"]) > 0
 
 
 def test_dist_sssp_parity(engines):
@@ -165,33 +169,52 @@ def test_dist_single_worker_has_no_wire_traffic(engines):
 # Adaptive wire format: both directions + measured == modeled by the model
 # ---------------------------------------------------------------------------
 
-def test_dist_adaptive_wire_both_directions(engines):
+def test_dist_adaptive_wire_both_directions(engines, tmp_path):
     """PageRank (every vertex active, filtering skipped toward dense need
-    lists) must push dense slabs; BFS's sparse frontiers must push pairs —
-    and in both regimes measured bytes equal the model."""
+    lists) must push dense encodings — slabs under the legacy two-way
+    choice (compression off; the vpairs tier raises the slab's density
+    threshold, so the dense direction is asserted there) — while BFS's
+    sparse frontiers must push compacted pairs; in every regime measured
+    bytes equal the model."""
     g, dg, fm, stores, _ = engines
     dist = dist_engine(dg, fm, stores, 2)
     _, st_pr = alg.pagerank(dist, 2)
-    assert st_pr.counters["net_slab_batches"] > 0
+    assert (st_pr.counters["net_slab_batches"]
+            + st_pr.counters["net_vpair_batches"]) > 0
     assert abs(st_pr.counters["measured_net_bytes"]
                - st_pr.counters["net_bytes"]) < 1e-3
+
+    store_off = ChunkStore.build_sharded(dg, fm, str(tmp_path / "off"), 2,
+                                         compression=False)
+    dist_off = dist_engine(dg, fm, {2: store_off}, 2, compression=False)
+    _, st_off = alg.pagerank(dist_off, 2)
+    assert st_off.counters["net_slab_batches"] > 0
+    assert st_off.counters["net_vpair_batches"] == 0
+    assert abs(st_off.counters["measured_net_bytes"]
+               - st_off.counters["net_bytes"]) < 1e-3
 
     dist2 = dist_engine(dg, fm, stores, 2)
     src = int(np.argmax(g.out_degrees()))
     _, st_bfs = alg.bfs(dist2, src)
-    assert st_bfs.counters["net_pair_batches"] > 0
+    # sparse frontiers travel compacted (the delta-varint vpairs encoding
+    # wins under the default compression=True)
+    assert (st_bfs.counters["net_pair_batches"]
+            + st_bfs.counters["net_vpair_batches"]) > 0
+    assert st_bfs.counters["net_vpair_batches"] > 0
     assert abs(st_bfs.counters["measured_net_bytes"]
                - st_bfs.counters["net_bytes"]) < 1e-3
 
 
 def test_wire_encode_decode_roundtrip_both_formats():
+    """Legacy two-way choice (compression off): pairs vs slab."""
     rng = np.random.default_rng(0)
     v_max = 40
     for density in (0.05, 0.95):
         mask = rng.random(v_max) < density
         values = rng.random(v_max).astype(np.float32)
         fmt, payload = encode_batch(mask, values)
-        expect_slab = choose_slab(int(mask.sum()), v_max, 4)
+        expect_slab = choose_wire_format(int(mask.sum()), v_max, 4) \
+            == FMT_SLAB
         assert (fmt == 1) == expect_slab
         assert len(payload) == float(batch_wire_bytes(
             int(mask.sum()), v_max, 4))
@@ -199,6 +222,29 @@ def test_wire_encode_decode_roundtrip_both_formats():
         np.testing.assert_array_equal(mask, m2)
         np.testing.assert_array_equal(np.where(mask, values, 0.0),
                                       np.where(m2, v2, 0.0))
+
+
+def test_wire_encode_decode_roundtrip_compressed():
+    """Three-way choice (compression on): the payload length equals the
+    three-way model and every format round-trips bit-exactly."""
+    from repro.core.codec import mask_gap_bytes
+    rng = np.random.default_rng(1)
+    v_max = 4096
+    seen = set()
+    for density in (0.001, 0.02, 0.3, 0.999):
+        mask = rng.random(v_max) < density
+        values = rng.random(v_max).astype(np.float32)
+        fmt, payload = encode_batch(mask, values, compression=True)
+        seen.add(fmt)
+        gb = float(mask_gap_bytes(mask[None, :])[0])
+        assert len(payload) == float(batch_wire_bytes(
+            int(mask.sum()), v_max, 4, gap_bytes=gb))
+        m2, v2 = decode_batch(fmt, payload, int(mask.sum()), v_max)
+        np.testing.assert_array_equal(mask, m2)
+        np.testing.assert_array_equal(np.where(mask, values, 0.0),
+                                      np.where(m2, v2, 0.0))
+    assert 2 in seen, "vpairs never chosen across the density sweep"
+    assert 1 in seen, "slab never chosen across the density sweep"
 
 
 def test_wire_model_picks_min():
@@ -270,10 +316,12 @@ def test_sharded_manifest_robust_open(tmp_path):
         ShardedChunkStore.open(str(root))
     (root / "shards.json").write_text(
         '{"version": 99, "num_workers": 1, "num_partitions": 2}')
-    with pytest.raises(ChunkStoreError, match="version"):
+    with pytest.raises(ChunkStoreError, match="found version 99"):
         ShardedChunkStore.open(str(root))
+    from repro.core.chunkstore import MANIFEST_VERSION
     (root / "shards.json").write_text(
-        '{"version": 1, "num_workers": 0, "num_partitions": 2}')
+        '{"version": %d, "num_workers": 0, "num_partitions": 2}'
+        % MANIFEST_VERSION)
     with pytest.raises(ChunkStoreError, match="positive integer"):
         ShardedChunkStore.open(str(root))
 
@@ -369,6 +417,6 @@ def test_sharded_store_reopen(built):
     assert re.num_workers == 2
     assert [tuple(s.partitions) for s in re.shards] == [(0, 1), (2, 3)]
     # a shard refuses reads for destinations it does not own
-    from repro.core import ChunkStoreError
+    from repro.core import ChunkStoreError, REP_DCSR
     with pytest.raises(ChunkStoreError, match="not owned"):
-        re.shards[0].read_chunk(3, 0, 0, use_csr=False)
+        re.shards[0].read_chunk(3, 0, 0, REP_DCSR)

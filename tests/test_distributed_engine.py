@@ -26,10 +26,25 @@ dist = Engine(dg, fm, mesh=mesh, axis="part")
 pr_l, st_l = alg.pagerank(local, 4)
 pr_d, st_d = alg.pagerank(dist, 4)
 np.testing.assert_allclose(pr_l, pr_d, rtol=1e-5)
-# identical message accounting on both executors
-for k in ("msgs_generated", "msgs_sent", "net_bytes"):
+# identical message accounting on both executors (incl. the compressed
+# three-way wire model and its raw twin)
+for k in ("msgs_generated", "msgs_sent", "net_bytes", "net_bytes_raw",
+          "edge_read_bytes", "edge_read_bytes_raw", "chunks_read_csr",
+          "chunks_read_dcsr", "chunks_read_dcsr_delta"):
     assert abs(st_l.counters[k] - st_d.counters[k]) < 1e-3, (
         k, st_l.counters[k], st_d.counters[k])
+
+# SHARD_MAP compression on/off parity: bit-identical values, raw twins
+# unchanged, compressed columns no larger (DESIGN.md §9)
+from repro.core import EngineConfig
+dist_off = Engine(dg, fm, EngineConfig(compression=False), mesh=mesh,
+                  axis="part")
+pr_o, st_o = alg.pagerank(dist_off, 4)
+np.testing.assert_array_equal(np.asarray(pr_d), np.asarray(pr_o))
+assert st_o.counters["net_bytes"] == st_o.counters["net_bytes_raw"]
+assert st_d.counters["net_bytes_raw"] == st_o.counters["net_bytes_raw"]
+assert st_d.counters["net_bytes"] <= st_o.counters["net_bytes"]
+assert st_d.counters["edge_read_bytes"] <= st_o.counters["edge_read_bytes"]
 
 src0 = int(np.argmax(g.out_degrees()))
 ds_l, _ = alg.sssp(local, src0)
