@@ -56,3 +56,27 @@ def run_algorithms(engine, g, source=None):
 
 def csv_row(name: str, seconds: float, derived: str) -> str:
     return f"{name},{seconds * 1e6:.1f},{derived}"
+
+
+def bench_record(benchmark: str, config: str, metric: str, value,
+                 units: str) -> dict:
+    """One perf-trajectory record (the BENCH_*.json schema): which
+    benchmark, which configuration row, which metric, its value, and the
+    value's units — flat so re-anchor tooling can diff curves across
+    commits without knowing any suite's layout."""
+    return dict(benchmark=benchmark, config=config, metric=metric,
+                value=float(value), units=units)
+
+
+def write_bench_json(filename: str, records: list) -> str:
+    """Write a perf-trajectory file (list of :func:`bench_record` dicts).
+
+    Files land in ``REPRO_BENCH_DIR`` (default: current directory) under
+    the given name, e.g. ``BENCH_kernels.json``; written atomically so a
+    killed benchmark run never leaves a truncated trajectory."""
+    from repro.utils import atomic_write_json
+    out_dir = os.environ.get("REPRO_BENCH_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, filename)
+    atomic_write_json(path, records)
+    return path

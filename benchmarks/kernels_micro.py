@@ -1,6 +1,10 @@
 """Kernel microbenchmarks: interpret-mode wall times (correctness-scale; TPU
 wall times require real hardware) + oracle-agreement deltas, so perf work on
 the kernels has a tracked baseline.
+
+Also writes ``BENCH_kernels.json`` (schema: benchmark, config, metric,
+value, units — see ``engines_common.bench_record``), the machine-readable
+perf trajectory re-anchors diff across commits.
 """
 from __future__ import annotations
 
@@ -8,12 +12,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.engines_common import csv_row, timed
+from benchmarks.engines_common import (
+    bench_record, csv_row, timed, write_bench_json,
+)
 from repro.kernels import ops, ref
 
 
 def main() -> list[str]:
     rows = []
+    records = []
+
+    def rec(config, metric, value, units):
+        records.append(bench_record("kernels_micro", config, metric,
+                                    value, units))
+
     rng = np.random.default_rng(0)
 
     # block-CSR SpMV
@@ -30,6 +42,7 @@ def main() -> list[str]:
     mode = "interp" if ops.default_interpret() else "compiled"
     rows.append(csv_row(f"kernel/csr_spmv_256v_4096e[{mode}]", t,
                         f"err={err:.2e};tile_overhead={dens:.1f}x"))
+    rec(f"csr_spmv_256v_4096e[{mode}]", "wall_time", t, "s")
 
     # selective monoid combine (the engine's chunk-scheduled phase 4):
     # all tiles live vs ~half the source blocks active
@@ -59,6 +72,7 @@ def main() -> list[str]:
         live_edges = float(np.asarray(hc).sum())
         rows.append(csv_row(f"kernel/csr_combine_{tag}[{mode}]", t,
                             f"live_edges={live_edges:.0f}"))
+        rec(f"csr_combine_{tag}[{mode}]", "wall_time", t, "s")
 
     # varint delta codec (the compression tier's decode rides the chunk
     # prefetcher's critical path — track its host throughput in MB/s)
@@ -74,6 +88,33 @@ def main() -> list[str]:
                         f"mb_per_s={enc_mbs:.1f};bytes={enc.nbytes}"))
     rows.append(csv_row("kernel/varint_decode_1M", t_dec,
                         f"mb_per_s={dec_mbs:.1f};bytes={enc.nbytes}"))
+    rec("varint_encode_1M[host]", "throughput", enc_mbs, "MB/s")
+    rec("varint_decode_1M[host]", "throughput", dec_mbs, "MB/s")
+
+    # host vs device varint decode at the same size (DESIGN.md §10: the
+    # Pallas decode path EngineConfig.device_decode routes chunk payloads
+    # through).  Same stream both ways; the device row is timed after a
+    # warm-up call so compiled mode reports steady-state throughput
+    # (interpret mode — the CI default — reports interpreter overhead,
+    # which is the tracked baseline until real hardware runs this).
+    from repro.kernels import varint as vk
+    n_dev = 1 << 16
+    gaps32 = gaps[:n_dev]                       # < 2**31: int32 kernel domain
+    enc32 = codec.varint_encode(gaps32)
+    buf = np.frombuffer(enc32.tobytes(), np.uint8)
+    _, t_host = timed(lambda: codec.varint_decode(enc32.tobytes(), n_dev))
+    dev = np.asarray(vk.varint_decode(buf, buf.size, count=n_dev))  # warm
+    np.testing.assert_array_equal(dev, gaps32.astype(np.int64))
+    _, t_dev = timed(
+        lambda: vk.varint_decode(buf, buf.size, count=n_dev))
+    host_mbs = enc32.nbytes / max(t_host, 1e-9) / 1e6
+    dev_mbs = enc32.nbytes / max(t_dev, 1e-9) / 1e6
+    rows.append(csv_row("kernel/varint_decode_64k[host]", t_host,
+                        f"mb_per_s={host_mbs:.1f};bytes={enc32.nbytes}"))
+    rows.append(csv_row(f"kernel/varint_decode_64k[device-{mode}]", t_dev,
+                        f"mb_per_s={dev_mbs:.1f};bytes={enc32.nbytes}"))
+    rec("varint_decode_64k[host]", "throughput", host_mbs, "MB/s")
+    rec(f"varint_decode_64k[device-{mode}]", "throughput", dev_mbs, "MB/s")
 
     # flash attention
     q = jax.random.normal(jax.random.PRNGKey(1), (4, 256, 64), jnp.bfloat16)
@@ -86,6 +127,7 @@ def main() -> list[str]:
                         - o_ref.astype(jnp.float32)).max())
     rows.append(csv_row("kernel/flash_attn_bh4_s256_d64", t,
                         f"err={err:.2e}"))
+    rec("flash_attn_bh4_s256_d64", "wall_time", t, "s")
 
     # chunked GLA
     bh, tt, dk, dv = 4, 256, 64, 64
@@ -99,6 +141,10 @@ def main() -> list[str]:
     y_ref, s_ref = ref.ref_gla(qg, kg, vg, wg)
     err = float(jnp.abs(y2 - y_ref).max())
     rows.append(csv_row("kernel/gla_bh4_t256_d64", t, f"err={err:.2e}"))
+    rec("gla_bh4_t256_d64", "wall_time", t, "s")
+
+    path = write_bench_json("BENCH_kernels.json", records)
+    rows.append(csv_row("kernel/bench_json", 0.0, f"path={path}"))
     return rows
 
 

@@ -32,7 +32,9 @@ import tempfile
 
 import numpy as np
 
-from benchmarks.engines_common import bench_graph, csv_row, timed
+from benchmarks.engines_common import (
+    bench_graph, bench_record, csv_row, timed, write_bench_json,
+)
 from repro.core import (
     ChunkStore, Engine, EngineConfig, build_dist_graph, build_formats,
     make_spec,
@@ -56,6 +58,12 @@ def per_partition_work(g, spec):
 def main(scale=10) -> list[str]:
     g = bench_graph(scale)
     rows = []
+    records = []
+
+    def rec(config, metric, value, units):
+        records.append(bench_record("table7_scaling", config, metric,
+                                    value, units))
+
     work1 = None
     for p in (1, 2, 4, 8):
         spec = make_spec(g, num_partitions=p, batch_size=64)
@@ -72,6 +80,9 @@ def main(scale=10) -> list[str]:
             f"max_work={work.max():.0f};modeled_speedup={speedup_model:.2f};"
             f"imbalance={imbalance:.3f};"
             f"msgs={st.counters['msgs_sent']:.0f}"))
+        rec(f"p{p}", "wall_time", t, "s")
+        rec(f"p{p}", "modeled_speedup", speedup_model, "x")
+        rec(f"p{p}", "max_partition_work", work.max(), "work_units")
 
     # dist_ooc: measured max per-worker traffic for W = 1, 2, 4 workers
     # (8 partitions; every byte below was physically served by a worker's
@@ -136,6 +147,18 @@ def main(scale=10) -> list[str]:
                 f"overlap_speedup={t_seq / max(t_par, 1e-9):.2f};"
                 f"max_worker_busy_s={max(busy):.3f};"
                 f"sum_worker_busy_s={sum(busy):.3f}"))
+            rec(f"dist_ooc_w{w}", "seq_wall_time", t_seq, "s")
+            rec(f"dist_ooc_w{w}", "par_wall_time", t_par, "s")
+            rec(f"dist_ooc_w{w}", "overlap_speedup",
+                t_seq / max(t_par, 1e-9), "x")
+            rec(f"dist_ooc_w{w}", "max_worker_disk_bytes", disk, "bytes")
+            rec(f"dist_ooc_w{w}", "max_worker_net_bytes", net, "bytes")
+            rec(f"dist_ooc_w{w}", "device_decoded_chunks",
+                st.counters.get("measured_chunks_device_decoded", 0.0),
+                "chunks")
+
+    path = write_bench_json("BENCH_scaling.json", records)
+    rows.append(csv_row("t7/bench_json", 0.0, f"path={path}"))
     return rows
 
 

@@ -115,18 +115,53 @@ if grep -q "skipped" "$DIST_OUT" && \
 fi
 suite_timer_end "distributed parity suite"
 
-# Opt-in slow gate (ROADMAP "larger-than-host graphs in CI"): stream a
-# larger-than-default RMAT graph through dist_ooc with compression on;
-# verify_io raises inside every call on any measured/model byte mismatch,
-# and the driver asserts compression strictly reduced disk+net traffic.
-if [ "${REPRO_SLOW:-0}" = "1" ]; then
-    suite_timer_start
-    if ! PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
-        python benchmarks/rmat_stream.py; then
-        echo "CI FAIL: RMAT streaming benchmark (benchmarks/rmat_stream.py)" >&2
-        exit 1
-    fi
-    suite_timer_end "RMAT streaming benchmark (REPRO_SLOW)"
+# The device-decode parity suite (DESIGN.md §10): Pallas varint/delta
+# kernels bit-identical to the numpy codec, per-chunk device decode ==
+# host decode, and EngineConfig.device_decode on/off bit-identity across
+# all four executors (shard_map in a subprocess on 8 forced host
+# devices); standalone for the same baseline-can't-hide-it reason.
+suite_timer_start
+if ! PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
+    tests/test_varint_kernels.py; then
+    echo "CI FAIL: device-decode parity suite" \
+         "(tests/test_varint_kernels.py)" >&2
+    exit 1
 fi
+suite_timer_end "device-decode parity suite"
+
+# Streaming gate (ROADMAP "larger-than-host graphs in CI"): push an RMAT
+# graph through dist_ooc with compression on; verify_io raises inside
+# every call on any measured/model byte mismatch, and the driver asserts
+# compression strictly reduced disk+net traffic.  The small configuration
+# (scale 12) runs on every CI invocation — the vectorized store build made
+# it cheap; REPRO_SLOW=1 switches to the large configuration (scale 16+).
+suite_timer_start
+if ! PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/rmat_stream.py; then
+    echo "CI FAIL: RMAT streaming benchmark (benchmarks/rmat_stream.py)" >&2
+    exit 1
+fi
+if [ "${REPRO_SLOW:-0}" = "1" ]; then
+    suite_timer_end "RMAT streaming benchmark (REPRO_SLOW)"
+else
+    suite_timer_end "RMAT streaming benchmark (small config)"
+fi
+
+# Kernel microbenchmarks: oracle-agreement gates inside the script (it
+# asserts decode parity and kernel error bounds) + the BENCH_kernels.json
+# perf trajectory (host vs device varint MB/s, DESIGN.md §10) that every
+# default CI run must produce so the curve is diffable across commits.
+suite_timer_start
+if ! PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/kernels_micro.py; then
+    echo "CI FAIL: kernel microbenchmarks (benchmarks/kernels_micro.py)" >&2
+    exit 1
+fi
+if [ ! -s "${REPRO_BENCH_DIR:-.}/BENCH_kernels.json" ]; then
+    echo "CI FAIL: benchmarks/kernels_micro.py did not write" \
+         "BENCH_kernels.json" >&2
+    exit 1
+fi
+suite_timer_end "kernel microbenchmarks + BENCH_kernels.json"
 
 echo "CI OK: no regressions vs baseline ($(wc -l < "$CURRENT") known failures)"

@@ -21,12 +21,12 @@ from repro.core.formats import (  # noqa: F401
 from repro.core import codec  # noqa: F401
 from repro.core.chunkstore import (  # noqa: F401
     REP_CSR, REP_DCSR, REP_DCSR_DELTA, ChunkPrefetcher, ChunkStore,
-    ChunkStoreError, DiskChunkSource, HBMChunkSource, ShardedChunkStore,
-    VertexSpill,
+    ChunkStoreError, DeviceChunkDecoder, DiskChunkSource, HBMChunkSource,
+    ShardedChunkStore, VertexSpill,
 )
 from repro.core.exchange import (  # noqa: F401
-    DecodeAhead, Exchange, batch_wire_bytes, choose_wire_format,
-    decode_batch, encode_batch,
+    FMT_PAIRS, FMT_SLAB, FMT_UVAL, FMT_VPAIRS, DecodeAhead, Exchange,
+    batch_wire_bytes, choose_wire_format, decode_batch, encode_batch,
 )
 from repro.core.engine import (  # noqa: F401
     ADD, MIN, MAX, Engine, EngineConfig, Monoid, accumulate_counters,

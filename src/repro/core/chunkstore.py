@@ -65,10 +65,12 @@ MANIFEST_NAME = "manifest.json"
 SHARD_MANIFEST_NAME = "shards.json"
 # v2: compressed chunk layout (delta-varint DCSR pair section + columnar
 # dst-residue/data payload, DESIGN.md §9) and the per-chunk section sizes
-# (pair_delta_nb, dst_delta_nb) recorded in the manifest.  v1 stores are
-# rejected with an error naming both versions — rebuild with
-# ChunkStore.build.
-MANIFEST_VERSION = 2
+# (pair_delta_nb, dst_delta_nb) recorded in the manifest.
+# v3: optional values-elided layout (DESIGN.md §10) — compressed stores of
+# unweighted graphs drop the uniform f32 data column entirely and record
+# ``values_elided`` in the manifest.  Older versions are rejected with an
+# error naming both versions — rebuild with ChunkStore.build.
+MANIFEST_VERSION = 3
 
 # Per-chunk representation codes, as they appear in read schedules.  The
 # first two keep bool compatibility (False -> raw DCSR, True -> CSR).
@@ -138,6 +140,7 @@ class ChunkStore:
         self.num_batches = b_cnt
         self.part_sizes = np.asarray(manifest["partition_sizes"], np.int64)
         self.compression = bool(manifest.get("compression", False))
+        self.values_elided = bool(manifest.get("values_elided", False))
         self.batch_size = int(manifest["batch_size"])
         # A full store owns every destination partition; a worker shard
         # (build_sharded) owns a subset and holds edge files only for those.
@@ -165,6 +168,7 @@ class ChunkStore:
             self._layout.append(_ChunkLayout(offset, nnz, edges, has_csr,
                                              pair_nb, dstv_nb))
         self._mm: dict[int, mmap.mmap] = {}
+        self._device_decoder = None
         self._lock = threading.Lock()
         self.chunks_read = 0
         self.bytes_read = 0
@@ -188,7 +192,17 @@ class ChunkStore:
         partitions (a worker shard for the dist_ooc executor); by default
         the store owns all of them.  ``compression`` selects the layout
         (see the class docstring) and must match the engine's
-        ``EngineConfig.compression`` — validated at Engine construction."""
+        ``EngineConfig.compression`` — validated at Engine construction.
+
+        Encoding is **batched per destination partition**: runs, pair
+        deltas, and dst residues for every chunk of ``q`` are computed and
+        varint-encoded in one whole-partition numpy pass (per-value codecs
+        concatenate byte-exactly, so slicing the partition-wide stream at
+        the per-chunk byte counts reproduces the per-chunk encodes bit for
+        bit); the remaining per-chunk loop only slices and writes.  With
+        ``fmts.values_elided`` (unweighted graph, compressed layout) the
+        uniform f32 data column is dropped from every chunk and
+        re-synthesized at decode (DESIGN.md §10)."""
         spec = g.spec
         p_cnt, b_cnt = spec.num_partitions, spec.num_batches
         bs = spec.batch_size
@@ -201,51 +215,104 @@ class ChunkStore:
         dst_l = np.asarray(g.edge_dst_local)
         data = np.asarray(g.edge_data)
         has_csr = np.asarray(fmts.has_csr)
+        elide = bool(compression) and bool(getattr(fmts, "values_elided",
+                                                   False))
 
         chunks_meta: dict[int, list] = {}
         for q in owned:
             meta_q = []
             off = 0
+            n_q = int(chunk_ptr[q, -1, -1])
+            # --- whole-partition pass: runs + delta streams for all chunks
+            flat = np.concatenate(
+                [chunk_ptr[q, :, :-1].reshape(-1),
+                 chunk_ptr[q, -1, -1:]]).astype(np.int64)
+            widths = np.diff(flat)                       # [P*B] chunk edges
+            src_q = src_l[q, :n_q].astype(np.int64)
+            dst_q = dst_l[q, :n_q].astype(np.int64)
+            cid = np.repeat(np.arange(widths.shape[0]), widths)
+            is_start = np.empty(n_q, bool)
+            if n_q:
+                is_start[0] = True
+                is_start[1:] = ((src_q[1:] != src_q[:-1])
+                                | (cid[1:] != cid[:-1]))
+            sidx = np.flatnonzero(is_start)              # global run starts
+            run_cid = cid[sidx]
+            first = np.empty(sidx.size, bool)
+            if sidx.size:
+                first[0] = True
+                first[1:] = run_cid[1:] != run_cid[:-1]
+            rel = sidx - flat[run_cid]                   # chunk-relative
+            pairs_all = np.empty(sidx.size, PAIR_DT)
+            pairs_all["src"] = src_q[sidx]
+            pairs_all["idx"] = rel
+            runs_per_chunk = np.bincount(run_cid,
+                                         minlength=widths.shape[0])
+            run_ptr = np.concatenate([[0], np.cumsum(runs_per_chunk)])
+            if compression:
+                # pair deltas (per chunk: diff prepend 0 on (src, rel))
+                prev_src = np.empty(sidx.size, np.int64)
+                prev_rel = np.empty(sidx.size, np.int64)
+                if sidx.size:
+                    prev_src[0] = prev_rel[0] = 0
+                    prev_src[1:] = src_q[sidx[:-1]]
+                    prev_rel[1:] = rel[:-1]
+                pair_vals = np.empty(2 * sidx.size, np.int64)
+                pair_vals[0::2] = np.where(first, src_q[sidx],
+                                           src_q[sidx] - prev_src)
+                pair_vals[1::2] = np.where(first, rel, rel - prev_rel)
+                pair_vals = pair_vals.astype(np.uint64)
+                pair_stream = codec.varint_encode(pair_vals)
+                pvnb = codec.varint_sizes(pair_vals)
+                pnb_chunk = np.bincount(
+                    np.repeat(run_cid, 2), weights=pvnb.astype(np.float64),
+                    minlength=widths.shape[0]).astype(np.int64)
+                pair_off = np.concatenate([[0], np.cumsum(pnb_chunk)])
+                # dst residues (per run: delta restart against batch base)
+                res = np.empty(n_q, np.int64)
+                if n_q:
+                    res[1:] = dst_q[1:] - dst_q[:-1]
+                    res[sidx] = dst_q[sidx] - (cid[sidx] % b_cnt) * bs
+                res = res.astype(np.uint64)
+                dst_stream = codec.varint_encode(res)
+                dnb_chunk = np.bincount(
+                    cid, weights=codec.varint_sizes(res).astype(np.float64),
+                    minlength=widths.shape[0]).astype(np.int64)
+                dst_off = np.concatenate([[0], np.cumsum(dnb_chunk)])
             with open(os.path.join(root, f"edges_q{q}.bin"), "wb") as f:
                 for p in range(p_cnt):
                     v_src = int(part_sizes[p])
                     for k in range(b_cnt):
-                        s = int(chunk_ptr[q, p, k])
-                        e = int(chunk_ptr[q, p, k + 1])
+                        c = p * b_cnt + k
+                        s, e = int(flat[c]), int(flat[c + 1])
                         if e <= s:
                             continue
-                        seg_src = src_l[q, s:e]
-                        # DCSR pairs: run-length by src (edges are sorted by
-                        # (src, dst) inside a chunk — partition.py's order)
-                        change = np.flatnonzero(np.diff(seg_src)) + 1
-                        starts = np.concatenate([[0], change]).astype(np.int32)
-                        pairs = np.empty(starts.shape[0], PAIR_DT)
-                        pairs["src"] = seg_src[starts]
-                        pairs["idx"] = starts
+                        pairs = pairs_all[run_ptr[c]:run_ptr[c + 1]]
                         f.write(pairs.tobytes())
                         nbytes = pairs.nbytes
                         pnb = vnb = 0
                         if compression:
-                            pd = codec.varint_encode(codec.pair_delta_values(
-                                seg_src[starts], starts))
-                            f.write(pd.tobytes())
-                            pnb = pd.nbytes
+                            f.write(pair_stream[
+                                pair_off[c]:pair_off[c + 1]].tobytes())
+                            pnb = int(pnb_chunk[c])
                             nbytes += pnb
                         if has_csr[q, p, k]:
                             idx = np.zeros(v_src + 1, np.int32)
-                            np.add.at(idx, seg_src + 1, 1)
+                            np.add.at(idx, src_l[q, s:e] + 1, 1)
                             idx = np.cumsum(idx, dtype=np.int32)
                             f.write(idx.tobytes())
                             nbytes += idx.nbytes
                         if compression:
-                            # Columnar payload: dst residues + f32 data.
-                            dv = codec.varint_encode(codec.dst_delta_values(
-                                dst_l[q, s:e], starts, k * bs))
-                            f.write(dv.tobytes())
-                            vnb = dv.nbytes
-                            f.write(np.ascontiguousarray(
-                                data[q, s:e], "<f4").tobytes())
-                            nbytes += vnb + (e - s) * 4
+                            # Columnar payload: dst residues (+ f32 data,
+                            # unless elided).
+                            f.write(dst_stream[
+                                dst_off[c]:dst_off[c + 1]].tobytes())
+                            vnb = int(dnb_chunk[c])
+                            nbytes += vnb
+                            if not elide:
+                                f.write(np.ascontiguousarray(
+                                    data[q, s:e], "<f4").tobytes())
+                                nbytes += (e - s) * 4
                         else:
                             payload = np.empty(e - s, EDGE_DT)
                             payload["dst"] = dst_l[q, s:e]
@@ -261,6 +328,7 @@ class ChunkStore:
         manifest = dict(
             version=MANIFEST_VERSION,
             compression=bool(compression),
+            values_elided=elide,
             num_partitions=p_cnt,
             num_batches=b_cnt,
             v_max=spec.v_max,
@@ -375,7 +443,8 @@ class ChunkStore:
         if lay.offset[p, k] < 0:
             return 0, 0, 0
         if self.compression:
-            pay = int(lay.dstv_nb[p, k]) + int(lay.edges[p, k]) * 4
+            pay = int(lay.dstv_nb[p, k]) + (
+                0 if self.values_elided else int(lay.edges[p, k]) * 4)
         else:
             pay = int(lay.edges[p, k]) * EDGE_DT.itemsize
         dcsr = int(lay.nnz[p, k]) * PAIR_DT.itemsize + pay
@@ -392,8 +461,9 @@ class ChunkStore:
         pairs_nb = nnz * PAIR_DT.itemsize
         idx_nb = (int(self.part_sizes[p]) + 1) * 4 if lay.has_csr[p, k] else 0
         if self.compression:
+            data_nb = 0 if self.values_elided else n_e * 4
             return (pairs_nb, int(lay.pair_nb[p, k]), idx_nb,
-                    int(lay.dstv_nb[p, k]) + n_e * 4)
+                    int(lay.dstv_nb[p, k]) + data_nb)
         return pairs_nb, 0, idx_nb, n_e * EDGE_DT.itemsize
 
     def read_chunk_bytes(self, q: int, p: int, k: int, rep: int
@@ -477,8 +547,30 @@ class ChunkStore:
         dst = codec.dst_delta_restore(
             codec.varint_decode(payload[:vnb], n_e), starts, runs,
             k * self.batch_size)
-        data = np.frombuffer(payload[vnb:], dtype="<f4").copy()
+        if self.values_elided:
+            data = np.ones(n_e, np.float32)
+        else:
+            data = np.frombuffer(payload[vnb:], dtype="<f4").copy()
         return src, dst, data
+
+    def decode_chunk_device(self, q: int, p: int, k: int, rep: int,
+                            index: bytes, payload: bytes):
+        """Device-resident twin of :meth:`decode_chunk` (compressed stores
+        only): varint expansion, pair-delta cumsums, and the run-structure
+        restores run as Pallas kernels (:mod:`repro.kernels.varint`), and
+        only the final exact-length triple is synced back to host numpy —
+        bit-identical to the numpy decode.  Unlike the host path this is
+        one jit dispatch per stage rather than a GIL-holding numpy burst,
+        so the parallel executors call it *outside* the compute token
+        (DESIGN.md §8, §10)."""
+        dec = self._device_decoder
+        if dec is None:
+            with self._lock:
+                dec = self._device_decoder
+                if dec is None:
+                    dec = DeviceChunkDecoder(self)
+                    self._device_decoder = dec
+        return dec.decode(q, p, k, rep, index, payload)
 
     def read_chunk(self, q: int, p: int, k: int, rep: int):
         """Read + decode one chunk; returns (src_local, dst_local, data,
@@ -492,6 +584,89 @@ class ChunkStore:
         with self._lock:
             self.chunks_read = 0
             self.bytes_read = 0
+
+
+class DeviceChunkDecoder:
+    """Fused on-device chunk decode for one compressed store (DESIGN.md §10).
+
+    Holds the static padded shapes — per-store maxima over chunk nnz, edge
+    counts, and varint section bytes — that key the jit-compiled Pallas
+    pipeline of :mod:`repro.kernels.varint`, so every chunk of the store
+    decodes through a handful of fixed-shape compiled programs.  Per call,
+    the raw section bytes are staged into zero-padded buffers, the varint /
+    delta / run-expand kernels run on device, and only the exact-length
+    ``(src, dst, data)`` triple is synced back — bit-identical to
+    :meth:`ChunkStore.decode_chunk`.
+    """
+
+    def __init__(self, store: ChunkStore):
+        if not store.compression:
+            raise ValueError(
+                f"device decode requires a compressed store; the store at "
+                f"{store.root} was built with compression=False")
+        # Imported here so opening a store never touches jax device state.
+        from repro.kernels import varint as vk
+        self._vk = vk
+        self.store = store
+        max_nnz = max_edges = pair_nb = dstv_nb = 1
+        for q in store.partitions:
+            lay = store._layout_of(q)
+            if lay.nnz.size:
+                max_nnz = max(max_nnz, int(lay.nnz.max()))
+                max_edges = max(max_edges, int(lay.edges.max()))
+                pair_nb = max(pair_nb, int(lay.pair_nb.max()))
+                dstv_nb = max(dstv_nb, int(lay.dstv_nb.max()))
+        self._max_nnz = max_nnz
+        self._epad = max_edges
+        self._pair_nb_pad = pair_nb
+        self._dstv_nb_pad = dstv_nb
+        self._vpad = int(store.part_sizes.max()) + 1
+
+    def decode(self, q: int, p: int, k: int, rep: int,
+               index: bytes, payload: bytes):
+        vk = self._vk
+        store = self.store
+        lay = store._layout_of(q)
+        n_e = int(lay.edges[p, k])
+        nnz = int(lay.nnz[p, k])
+        v_src = int(store.part_sizes[p])
+        vnb = int(lay.dstv_nb[p, k])
+        base = k * store.batch_size
+        epad = self._epad
+        if rep == REP_CSR:
+            idx = np.zeros(self._vpad, np.int32)
+            idx[:v_src + 1] = np.frombuffer(index, "<i4")
+            src_d, smask = vk.expand_csr_index(idx, v_src, n_e,
+                                               out_len=epad)
+        elif rep == REP_DCSR_DELTA:
+            pb = np.zeros(self._pair_nb_pad, np.uint8)
+            pb[:len(index)] = np.frombuffer(index, np.uint8)
+            pv = vk.varint_decode(pb, len(index),
+                                  count=2 * self._max_nnz)
+            srcs, starts = vk.pair_delta_restore(pv)
+            src_d, smask = vk.expand_dcsr_index(srcs, starts, nnz, n_e,
+                                                out_len=epad)
+        elif rep == REP_DCSR:
+            pairs = np.frombuffer(index, PAIR_DT)
+            srcs = np.zeros(self._max_nnz, np.int32)
+            starts = np.zeros(self._max_nnz, np.int32)
+            srcs[:nnz] = pairs["src"]
+            starts[:nnz] = pairs["idx"]
+            src_d, smask = vk.expand_dcsr_index(srcs, starts, nnz, n_e,
+                                                out_len=epad)
+        else:
+            raise ValueError(f"unknown chunk representation {rep!r}")
+        db = np.zeros(self._dstv_nb_pad, np.uint8)
+        db[:vnb] = np.frombuffer(payload[:vnb], np.uint8)
+        res = vk.varint_decode(db, vnb, count=epad)
+        dst_d = vk.dst_delta_restore(res, smask, base, n_e)
+        src = np.asarray(src_d)[:n_e]
+        dst = np.asarray(dst_d)[:n_e]
+        if store.values_elided:
+            data = np.ones(n_e, np.float32)
+        else:
+            data = np.frombuffer(payload[vnb:], dtype="<f4").copy()
+        return src, dst, data
 
 
 class ShardedChunkStore:
@@ -777,6 +952,10 @@ class DiskChunkSource:
                      index: bytes, payload: bytes):
         return self.store.decode_chunk(q, p, k, rep, index, payload)
 
+    def decode_chunk_device(self, q: int, p: int, k: int, rep: int,
+                            index: bytes, payload: bytes):
+        return self.store.decode_chunk_device(q, p, k, rep, index, payload)
+
 
 # ---------------------------------------------------------------------------
 # Double-buffered prefetch pipeline
@@ -806,6 +985,7 @@ class BatchWork:
     data: np.ndarray       # f32  [E] edge payloads
     nbytes: int            # measured bytes read for this item
     n_chunks: int
+    n_device_chunks: int = 0   # chunks decoded on device (DESIGN.md §10)
 
 
 class ChunkPrefetcher:
@@ -843,14 +1023,26 @@ class ChunkPrefetcher:
     to host the prefetch loop — reusing warm threads instead of spawning
     one per pipeline, which the parallel dist_ooc executor would
     otherwise do 2·W times per iteration.
+
+    ``device_decode`` routes the decode of each chunk through the Pallas
+    kernel pipeline (:meth:`ChunkStore.decode_chunk_device`, DESIGN.md
+    §10) instead of the host numpy codec.  The device decode is NOT run
+    under the compute token: it is a chain of jit dispatches that release
+    the GIL while the accelerator works, not a host-CPU burst, so holding
+    the token would serialize exactly the work that no longer needs
+    serializing.  Results are bit-identical either way; the number of
+    device-decoded chunks is reported per item
+    (``BatchWork.n_device_chunks`` -> the executors'
+    ``measured_chunks_device_decoded`` counter).
     """
 
     _DONE = object()
 
     def __init__(self, source: DiskChunkSource, schedule, depth: int = 2,
-                 compute_lock=None, runner=None):
+                 compute_lock=None, runner=None, device_decode: bool = False):
         self._source = source
         self._schedule = schedule
+        self._device_decode = bool(device_decode)
         self._lock_ctx = token_ctx(compute_lock)
         self._queue: queue.Queue = queue.Queue(maxsize=max(1, depth))
         self._stop = threading.Event()
@@ -861,6 +1053,26 @@ class ChunkPrefetcher:
         else:
             future = runner.submit(self._run)
             self._join = lambda: future.exception()
+
+    @staticmethod
+    def _assemble(q: int, k: int, decoded, n_chunks: int,
+                  n_device: int = 0) -> "BatchWork":
+        """Concatenate per-chunk (src, dst, data) triples into one
+        :class:`BatchWork` (shared by the host and device decode paths)."""
+        srcs, parts, dsts, datas = [], [], [], []
+        nbytes = 0
+        for p, (s, d, w), nb in decoded:
+            srcs.append(s)
+            parts.append(np.full(s.shape[0], p, np.int32))
+            dsts.append(d)
+            datas.append(w)
+            nbytes += nb
+        cat = lambda xs, dt: (np.concatenate(xs) if xs
+                              else np.zeros(0, dt))
+        return BatchWork(
+            q=q, k=k, src=cat(srcs, np.int32), part=cat(parts, np.int32),
+            dst=cat(dsts, np.int32), data=cat(datas, np.float32),
+            nbytes=nbytes, n_chunks=n_chunks, n_device_chunks=n_device)
 
     def _put(self, item) -> bool:
         """Blocking put that aborts when the consumer closed the pipeline
@@ -888,25 +1100,23 @@ class ChunkPrefetcher:
                     raw = [(p, rep,
                             self._source.read_chunk_bytes(q, p, k, rep))
                            for p, rep in chunks]
-                    with self._lock_ctx:     # token held: decode burst
-                        srcs, parts, dsts, datas = [], [], [], []
-                        nbytes = 0
-                        for p, rep, (index, payload, nb) in raw:
-                            s, d, w = self._source.decode_chunk(
-                                q, p, k, rep, index, payload)
-                            srcs.append(s)
-                            parts.append(np.full(s.shape[0], p, np.int32))
-                            dsts.append(d)
-                            datas.append(w)
-                            nbytes += nb
-                        cat = lambda xs, dt: (np.concatenate(xs) if xs
-                                              else np.zeros(0, dt))
-                        work = BatchWork(
-                            q=q, k=k, src=cat(srcs, np.int32),
-                            part=cat(parts, np.int32),
-                            dst=cat(dsts, np.int32),
-                            data=cat(datas, np.float32), nbytes=nbytes,
-                            n_chunks=len(chunks))
+                    if self._device_decode:
+                        # Device decode: jit dispatches, GIL released while
+                        # the kernels run — no compute token needed.
+                        decoded = [
+                            (p, self._source.decode_chunk_device(
+                                q, p, k, rep, index, payload), nb)
+                            for p, rep, (index, payload, nb) in raw]
+                        work = self._assemble(q, k, decoded, len(chunks),
+                                              n_device=len(chunks))
+                    else:
+                        with self._lock_ctx:   # token held: decode burst
+                            decoded = [
+                                (p, self._source.decode_chunk(
+                                    q, p, k, rep, index, payload), nb)
+                                for p, rep, (index, payload, nb) in raw]
+                            work = self._assemble(q, k, decoded,
+                                                  len(chunks))
                     if not self._put(work):  # token released: may block
                         return
                 self._put(self._DONE)

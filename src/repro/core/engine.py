@@ -189,6 +189,19 @@ class EngineConfig:
     purely a wall-clock knob; ``benchmarks/table7_scaling.py`` reports the
     sequential-vs-parallel times side by side."""
 
+    device_decode: bool | None = None
+    """ooc / dist_ooc, compressed stores only: decode chunk payloads with
+    the Pallas varint/delta kernels (``kernels/varint.py``) instead of the
+    host numpy codec (DESIGN.md §10).  The decode becomes a chain of jit
+    dispatches that release the GIL, so prefetch threads skip the compute
+    token for it; bytes read from disk, the byte model, and the decoded
+    triples are bit-identical either way — only where the byte-unpacking
+    runs changes.  ``None`` (auto) enables it exactly when the Pallas
+    kernels would compile rather than run interpreted (i.e. a real
+    accelerator backend is present, same auto-selection as
+    ``kernels/csr_spmv.py``); uncompressed stores always decode on the
+    host (their payload is a plain memcpy, nothing to decode)."""
+
 
 COUNTER_KEYS = (
     "msgs_generated", "msgs_sent", "msgs_sent_nofilter",
@@ -206,6 +219,10 @@ COUNTER_KEYS = (
 MEASURED_KEYS = (
     "measured_chunks_read", "measured_edge_read_bytes",
     "measured_vertex_read_bytes", "measured_vertex_write_bytes",
+    # how many of the measured chunk reads were decoded by the Pallas
+    # kernels (EngineConfig.device_decode); no analytic twin — it reports
+    # the decode path taken, not bytes moved
+    "measured_chunks_device_decoded",
 )
 
 MEASURED_PAIRS = (
@@ -220,7 +237,7 @@ MEASURED_PAIRS = (
 # cross-worker message batch chose.
 DIST_MEASURED_KEYS = (
     "measured_net_bytes", "net_pair_batches", "net_vpair_batches",
-    "net_slab_batches",
+    "net_slab_batches", "net_uval_batches",
 )
 
 DIST_MEASURED_PAIRS = MEASURED_PAIRS + (
@@ -308,6 +325,22 @@ class Engine:
         self._measured_pairs = (DIST_MEASURED_PAIRS if self._dist_ooc
                                 else MEASURED_PAIRS)
         self.store = store
+        # Resolve the device_decode knob (docstring on EngineConfig): auto
+        # means "on exactly when the Pallas kernels would compile", and the
+        # flag is only meaningful on the executors that decode compressed
+        # chunk payloads.
+        if config.device_decode and not config.compression:
+            raise ValueError(
+                "device_decode=True requires compression=True: uncompressed "
+                "chunk payloads are plain column memcpys with nothing to "
+                "decode on device")
+        if config.device_decode is None:
+            from repro.kernels.csr_spmv import default_interpret
+            self.device_decode = (config.compression
+                                  and (self._ooc or self._dist_ooc)
+                                  and not default_interpret())
+        else:
+            self.device_decode = bool(config.device_decode)
         if self._ooc or self._dist_ooc:
             name = config.executor
             if self._distributed:
@@ -345,6 +378,15 @@ class Engine:
                     f"compression={stored}, but EngineConfig.compression="
                     f"{config.compression}; the physical layout must match "
                     "the byte model (rebuild the store or flip the knob)")
+            elided = bool(manifest.get("values_elided", False))
+            want_elided = config.compression and bool(
+                getattr(fmts, "values_elided", False))
+            if elided != want_elided:
+                raise ValueError(
+                    f"chunk store at {root} has values_elided={elided}, but "
+                    f"this graph's formats price values_elided={want_elided}"
+                    "; the physical layout must match the byte model "
+                    "(rebuild the store from these formats)")
 
         if self._ooc:
             if not isinstance(store, ChunkStore):

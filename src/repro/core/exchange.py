@@ -20,6 +20,14 @@ adaptively (the §4.1 CSR/DCSR idea applied to the network):
   ``ceil(v_max / 8) + v_max * msg_bytes`` bytes.  The CSR-analogue —
   position-indexed, wins when most vertices send (grown out of
   :func:`repro.core.sparse_collectives.filtered_all_to_all`).
+* ``uval``  — the wire twin of the chunk store's values-elided layout
+  (DESIGN.md §10): when every message value in the batch is identical
+  (BFS frontiers, unweighted label propagation), the value column
+  collapses to ONE f32 — ``gap_bytes(mask) + msg_bytes`` bytes.
+  Chosen only when ``EngineConfig.compression`` is on; uniformity is
+  decided by the same masked min==max reduction the analytic model uses
+  (:func:`repro.core.phases.batch_value_uniform`), so the priced and the
+  serialized bytes agree per batch.
 
 The decision rule (cheapest of the enabled encodings, ties preferring the
 cheaper decode: pairs, then vpairs, then slab) and the priced bytes come
@@ -59,6 +67,7 @@ _IDX_BYTES = 4              # int32 source-local index per compacted pair
 FMT_PAIRS = 0
 FMT_SLAB = 1
 FMT_VPAIRS = 2              # delta-varint index stream + dense value column
+FMT_UVAL = 3                # delta-varint index stream + ONE uniform value
 
 
 # ---------------------------------------------------------------------------
@@ -82,42 +91,63 @@ def vpair_batch_bytes(count, gap_bytes, msg_bytes: int):
     return gap_bytes + count * float(msg_bytes)
 
 
+def uval_batch_bytes(gap_bytes, msg_bytes: int):
+    """Uniform-value batch: the gap stream plus ONE value for the whole
+    batch (the wire twin of the chunk store's values-elided layout).
+    Valid only for batches whose masked values are all identical."""
+    return gap_bytes + float(msg_bytes)
+
+
 def batch_wire_bytes(count, v_max: int, msg_bytes: int, gap_bytes=None,
-                     xp=np):
+                     uniform=None, xp=np):
     """Priced wire bytes of one (p -> q) message batch.
 
     ``count`` may be a scalar or an array (numpy or jnp via ``xp``); empty
     batches are never sent and cost 0.  With ``gap_bytes`` (the delta-
-    varint index stream size of the same mask) the price is the three-way
-    minimum including the compressed ``vpairs`` encoding; without it, the
-    legacy two-way pairs/slab choice (``EngineConfig.compression`` off).
-    This is the single source of truth for the network model: every
-    executor's ``net_bytes`` counter and the encoder's format choice
-    derive from it.  The host (numpy) path prices in float64 so the model
-    stays exact against the integer byte sum the wire measures (float32
-    would round past the verify_io tolerance once a call moves ≳16 MB);
-    the jit path keeps float32, matching the analytic counters' dtype."""
+    varint index stream size of the same mask) the price is the
+    compressed-tier minimum including the ``vpairs`` encoding — and,
+    where ``uniform`` (same shape as ``count``: every masked value of the
+    batch identical, from :func:`repro.core.phases.batch_value_uniform`)
+    is True, the single-value ``uval`` encoding.  Without ``gap_bytes``,
+    the legacy two-way pairs/slab choice (``EngineConfig.compression``
+    off; ``uniform`` is then ignored).  This is the single source of
+    truth for the network model: every executor's ``net_bytes`` counter
+    and the encoder's format choice derive from it.  The host (numpy)
+    path prices in float64 so the model stays exact against the integer
+    byte sum the wire measures (float32 would round past the verify_io
+    tolerance once a call moves ≳16 MB); the jit path keeps float32,
+    matching the analytic counters' dtype."""
     acc = xp.float64 if xp is np else xp.float32
     pairs = pair_batch_bytes(xp.asarray(count, acc), msg_bytes)
     slab = slab_batch_bytes(v_max, msg_bytes)
     best = xp.minimum(pairs, slab)
     if gap_bytes is not None:
+        gb = xp.asarray(gap_bytes, acc)
         best = xp.minimum(best, vpair_batch_bytes(
-            xp.asarray(count, acc), xp.asarray(gap_bytes, acc), msg_bytes))
+            xp.asarray(count, acc), gb, msg_bytes))
+        if uniform is not None:
+            best = xp.where(
+                xp.asarray(uniform),
+                xp.minimum(best, uval_batch_bytes(gb, msg_bytes)), best)
     return xp.where(xp.asarray(count) > 0, best, 0.0)
 
 
 def choose_wire_format(count: int, v_max: int, msg_bytes: int,
-                       gap_bytes=None) -> int:
+                       gap_bytes=None, uniform: bool = False) -> int:
     """The encoder's scalar realization of :func:`batch_wire_bytes`: the
     cheapest enabled encoding, ties preferring the cheaper decode
-    (pairs, then vpairs, then slab).  Any tie-break yields the same byte
-    count as the model's minimum — which is the invariant that matters."""
+    (pairs, then vpairs, then uval, then slab).  Any tie-break yields the
+    same byte count as the model's minimum — which is the invariant that
+    matters."""
     best, cost = FMT_PAIRS, pair_batch_bytes(count, msg_bytes)
     if gap_bytes is not None:
         vb = vpair_batch_bytes(count, float(gap_bytes), msg_bytes)
         if vb < cost:
             best, cost = FMT_VPAIRS, vb
+        if uniform:
+            ub = uval_batch_bytes(float(gap_bytes), msg_bytes)
+            if ub < cost:
+                best, cost = FMT_UVAL, ub
     if slab_batch_bytes(v_max, msg_bytes) < cost:
         best = FMT_SLAB
     return best
@@ -135,9 +165,10 @@ def encode_batch(mask: np.ndarray, values: np.ndarray,
     mask [v_max] bool, values [v_max] float32 (entries where ``mask`` is
     False are never read — unread spill batches may hold garbage).
     ``count`` is the mask's popcount if the caller already has it.
-    ``compression`` enables the delta-varint ``vpairs`` encoding in the
-    choice.  The payload length equals :func:`batch_wire_bytes` (with
-    ``gap_bytes`` iff ``compression``) exactly."""
+    ``compression`` enables the delta-varint ``vpairs`` / single-value
+    ``uval`` encodings in the choice.  The payload length equals
+    :func:`batch_wire_bytes` (with ``gap_bytes`` + ``uniform`` iff
+    ``compression``) exactly."""
     v_max = mask.shape[0]
     if count is None:
         count = int(mask.sum())
@@ -147,13 +178,23 @@ def encode_batch(mask: np.ndarray, values: np.ndarray,
         dense = np.where(mask, values, 0.0).astype("<f4")
         return FMT_SLAB, bits.tobytes() + dense.tobytes()
 
+    # Batch uniformity: the identical masked min == max reduction the
+    # analytic model runs (phases.batch_value_uniform), so the encoder
+    # and the net_bytes counters always agree on whether uval applies.
+    uni = False
+    if compression and count:
+        vm = np.asarray(values, np.float32)
+        hi = np.max(np.where(mask, vm, -np.inf))
+        uni = bool(hi == np.min(np.where(mask, vm, np.inf)))
     # Dense fast path: when the slab beats the pairs AND the vpairs floor
     # (every gap varint is >= 1 byte, so vpairs >= count * (msg + 1)), the
-    # slab is certainly the three-way minimum — skip building the index
-    # column entirely (dense PageRank supersteps post slabs per (p, q)
-    # batch; the old two-way encoder had the same O(1) slab path).
+    # slab is certainly the minimum — skip building the index column
+    # entirely (dense PageRank supersteps post slabs per (p, q) batch; the
+    # old two-way encoder had the same O(1) slab path).  A uniform batch
+    # never takes it: uval's floor (count + msg) undercuts the slab for
+    # any realistic v_max.
     slab = slab_batch_bytes(v_max, WIRE_MSG_BYTES)
-    if slab < pair_batch_bytes(count, WIRE_MSG_BYTES) and (
+    if not uni and slab < pair_batch_bytes(count, WIRE_MSG_BYTES) and (
             not compression
             or slab < vpair_batch_bytes(count, float(count),
                                         WIRE_MSG_BYTES)):
@@ -163,9 +204,12 @@ def encode_batch(mask: np.ndarray, values: np.ndarray,
     if compression:
         gaps = np.diff(idx, prepend=-1).astype(np.uint64)
         gb = int(codec.varint_sizes(gaps).sum())
-    fmt = choose_wire_format(count, v_max, WIRE_MSG_BYTES, gb)
+    fmt = choose_wire_format(count, v_max, WIRE_MSG_BYTES, gb, uniform=uni)
     if fmt == FMT_SLAB:
         return slab_payload()
+    if fmt == FMT_UVAL:
+        return FMT_UVAL, (codec.varint_encode(gaps).tobytes()
+                          + np.asarray(hi, "<f4").tobytes())
     vals = np.asarray(values, "<f4")[idx]
     if fmt == FMT_VPAIRS:
         return FMT_VPAIRS, (codec.varint_encode(gaps).tobytes()
@@ -173,9 +217,32 @@ def encode_batch(mask: np.ndarray, values: np.ndarray,
     return FMT_PAIRS, idx.astype("<i4").tobytes() + vals.tobytes()
 
 
-def decode_batch(fmt: int, payload: bytes, count: int, v_max: int
-                 ) -> tuple[np.ndarray, np.ndarray]:
-    """Inverse of :func:`encode_batch` -> (mask [v_max], values [v_max])."""
+def _gap_decode(stream: bytes, count: int, device: bool) -> np.ndarray:
+    """Decode a batch's delta-varint gap stream to sorted indices.
+
+    ``device=True`` runs the byte-level varint unpacking through the
+    Pallas kernel (``kernels/varint.py``; gaps are < 2**31, its int32
+    domain) — bit-identical to the host codec, but a GIL-releasing jit
+    dispatch instead of a host numpy burst (DESIGN.md §10).  Buffer and
+    count are padded to power-of-two buckets so compiled mode sees O(log²)
+    distinct shapes, not one per batch."""
+    if device and count:
+        from repro.kernels import varint as vk
+        nb = len(stream)
+        buf = np.zeros(1 << max(4, (nb - 1).bit_length()), np.uint8)
+        buf[:nb] = np.frombuffer(stream, np.uint8)
+        cap = 1 << max(4, (count - 1).bit_length())
+        gaps = np.asarray(vk.varint_decode(buf, nb, count=cap))[:count]
+    else:
+        gaps = codec.varint_decode(stream, count)
+    return (np.cumsum(gaps.astype(np.int64)) - 1).astype(np.int64)
+
+
+def decode_batch(fmt: int, payload: bytes, count: int, v_max: int,
+                 device: bool = False) -> tuple[np.ndarray, np.ndarray]:
+    """Inverse of :func:`encode_batch` -> (mask [v_max], values [v_max]).
+    ``device`` routes the varint gap streams (vpairs / uval) through the
+    Pallas decode kernel; results are bit-identical either way."""
     if fmt == FMT_SLAB:
         nbits = ceil_div(v_max, 8)
         bits = np.frombuffer(payload[:nbits], np.uint8)
@@ -184,9 +251,13 @@ def decode_batch(fmt: int, payload: bytes, count: int, v_max: int
         return mask, values
     if fmt == FMT_VPAIRS:
         vals_nb = count * WIRE_MSG_BYTES
-        gaps = codec.varint_decode(payload[:len(payload) - vals_nb], count)
-        idx = (np.cumsum(gaps.astype(np.int64)) - 1).astype(np.int64)
+        idx = _gap_decode(payload[:len(payload) - vals_nb], count, device)
         vals = np.frombuffer(payload[len(payload) - vals_nb:], "<f4")
+    elif fmt == FMT_UVAL:
+        idx = _gap_decode(payload[:len(payload) - WIRE_MSG_BYTES], count,
+                          device)
+        vals = np.full(count, np.frombuffer(
+            payload[len(payload) - WIRE_MSG_BYTES:], "<f4")[0], np.float32)
     elif fmt == FMT_PAIRS:
         idx = np.frombuffer(payload[:count * _IDX_BYTES], "<i4")
         vals = np.frombuffer(payload[count * _IDX_BYTES:], "<f4")
@@ -240,6 +311,7 @@ class Exchange:
         self.pair_batches = 0
         self.slab_batches = 0
         self.vpair_batches = 0
+        self.uval_batches = 0
         self.bytes_by_sender = np.zeros(num_workers, np.float64)
 
     def post(self, src_worker: int, dst_worker: int, p: int, q: int,
@@ -264,14 +336,18 @@ class Exchange:
                 self.slab_batches += 1
             elif fmt == FMT_VPAIRS:
                 self.vpair_batches += 1
+            elif fmt == FMT_UVAL:
+                self.uval_batches += 1
             else:
                 self.pair_batches += 1
             box.append((p, ("wire", fmt, count, payload)))
 
-    def take_dest(self, dst_worker: int, q: int, p_cnt: int
+    def take_dest(self, dst_worker: int, q: int, p_cnt: int,
+                  device_decode: bool = False
                   ) -> tuple[np.ndarray, np.ndarray]:
         """Assemble destination partition q's receive-major view:
-        (recv_mask [P, v_max], recv_msg [P, v_max])."""
+        (recv_mask [P, v_max], recv_msg [P, v_max]).  ``device_decode``
+        routes varint gap streams through the Pallas kernels."""
         recv_mask = np.zeros((p_cnt, self.v_max), bool)
         recv_msg = np.zeros((p_cnt, self.v_max), np.float32)
         with self._lock:
@@ -285,7 +361,7 @@ class Exchange:
             else:
                 _, fmt, count, payload = entry
                 recv_mask[p], recv_msg[p] = decode_batch(
-                    fmt, payload, count, self.v_max)
+                    fmt, payload, count, self.v_max, device=device_decode)
         return recv_mask, recv_msg
 
 
@@ -310,11 +386,13 @@ class DecodeAhead:
 
     def __init__(self, exchange: Exchange, worker: int,
                  dests: Sequence[int], p_cnt: int, depth: int = 1,
-                 compute_lock=None, runner=None):
+                 compute_lock=None, runner=None,
+                 device_decode: bool = False):
         self._exchange = exchange
         self._worker = worker
         self._dests = list(dests)
         self._p_cnt = p_cnt
+        self._device_decode = bool(device_decode)
         self._lock_ctx = token_ctx(compute_lock)
         self._queue: queue.Queue = queue.Queue(maxsize=max(1, depth))
         self._stop = threading.Event()
@@ -340,7 +418,8 @@ class DecodeAhead:
             for q in self._dests:
                 with self._lock_ctx:       # compute token: decode burst
                     mask, msg = self._exchange.take_dest(
-                        self._worker, q, self._p_cnt)
+                        self._worker, q, self._p_cnt,
+                        device_decode=self._device_decode)
                 if not self._put((q, mask, msg)):
                     return
             self._put(self._DONE)

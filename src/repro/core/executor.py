@@ -322,12 +322,15 @@ def make_local_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
         # (three-way — incl. the delta-varint vpairs, whose data-dependent
         # index size comes from the same masks — when compression is on).
         counts = phases.routing_counts(recv_mask)                # [Q, P]
-        gapb = (codec.mask_gap_bytes(recv_mask, xp=jnp)
-                if cfg.compression else None)
+        gapb = unib = None
+        if cfg.compression:
+            gapb = codec.mask_gap_bytes(recv_mask, xp=jnp)
+            unib = phases.batch_value_uniform(recv_mask, msg[None, :, :])
         cross = jnp.arange(p_cnt)[:, None] != jnp.arange(p_cnt)[None, :]
         counters["net_bytes"], counters["net_bytes_raw"] = (
             phases.net_bytes_model(counts, cross, spec.v_max,
-                                   cfg.msg_bytes, gap_bytes=gapb))
+                                   cfg.msg_bytes, gap_bytes=gapb,
+                                   uniform=unib))
         counters["net_bytes_nofilter"] = ((p_cnt - 1) * n_active
                                           * (cfg.msg_bytes + 4))
 
@@ -401,12 +404,14 @@ def make_sharded_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
         # recovers the full [Q, P] sum): per-destination batch counts,
         # priced at the adaptive wire encoding, self-shard excluded.
         counts = phases.routing_counts(sendmask)                 # [Q]
-        gapb = (codec.mask_gap_bytes(sendmask, xp=jnp)
-                if cfg.compression else None)
+        gapb = unib = None
+        if cfg.compression:
+            gapb = codec.mask_gap_bytes(sendmask, xp=jnp)
+            unib = phases.batch_value_uniform(sendmask, msg[0][None, :])
         counters["net_bytes"], counters["net_bytes_raw"] = (
             phases.net_bytes_model(counts, jnp.arange(p_cnt) != my,
                                    spec.v_max, cfg.msg_bytes,
-                                   gap_bytes=gapb))
+                                   gap_bytes=gapb, uniform=unib))
         counters["net_bytes_nofilter"] = ((p_cnt - 1) * m_p
                                           * (cfg.msg_bytes + 4))
         send_msg = jnp.where(sendmask, msg[0][None, :], 0)   # [P, V]
@@ -735,11 +740,15 @@ def make_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
         counters["msgs_sent"] = total_sent
         counters["msgs_sent_nofilter"] = p_cnt * n_active
         counts = phases.routing_counts(recv_mask, xp=np)         # [Q, P]
-        gapb = (codec.mask_gap_bytes(recv_mask, xp=np)
-                if cfg.compression else None)
+        gapb = unib = None
+        if cfg.compression:
+            gapb = codec.mask_gap_bytes(recv_mask, xp=np)
+            unib = phases.batch_value_uniform(recv_mask, msg[None, :, :],
+                                              xp=np)
         cross = np.arange(p_cnt)[:, None] != np.arange(p_cnt)[None, :]
         net, net_raw = phases.net_bytes_model(
-            counts, cross, v_max, cfg.msg_bytes, gap_bytes=gapb, xp=np)
+            counts, cross, v_max, cfg.msg_bytes, gap_bytes=gapb,
+            uniform=unib, xp=np)
         counters["net_bytes"] = float(net)
         counters["net_bytes_raw"] = float(net_raw)
         counters["net_bytes_nofilter"] = (p_cnt - 1) * n_active * mb
@@ -772,7 +781,8 @@ def make_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
                 return vec_cache[q]
 
         for w in ChunkPrefetcher(source, schedule,
-                                 depth=cfg.ooc_prefetch_depth):
+                                 depth=cfg.ooc_prefetch_depth,
+                                 device_decode=engine.device_decode):
             xv_q, xc_q = (vectors(w.q) if backend == "block_csr"
                           else (None, None))
             edges_touched += _combine_stream_batch(
@@ -781,6 +791,7 @@ def make_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
                 v_max=v_max)
             counters["measured_chunks_read"] += w.n_chunks
             counters["measured_edge_read_bytes"] += w.nbytes
+            counters["measured_chunks_device_decoded"] += w.n_device_chunks
         counters["edges_touched"] = edges_touched
 
         # Apply: read updated batches, masked update, write back + bitmap
@@ -967,6 +978,7 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
                     global_id[lo:hi]), np.float32)
             counts_w = np.zeros((p_cnt, len(parts)), np.float64)
             gapb_w = np.zeros((p_cnt, len(parts)), np.float64)
+            unib_w = np.zeros((p_cnt, len(parts)), bool)
             for i, p in enumerate(parts):
                 with tok:                   # compute token: filter + encode
                     m_p = float(am_w[i].sum())
@@ -974,15 +986,18 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
                         am_w[i], need[p], need_counts[p], m_p, cfg, xp=np)
                     counts_w[:, i] = phases.routing_counts(sendmask, xp=np)
                     if cfg.compression:
-                        # vpairs index-stream sizes of the very masks the
-                        # wire serializes — the model's data-dependent term.
+                        # vpairs index-stream sizes and value-uniformity
+                        # of the very masks the wire serializes — the
+                        # model's data-dependent terms.
                         gapb_w[:, i] = codec.mask_gap_bytes(sendmask, xp=np)
+                        unib_w[:, i] = phases.batch_value_uniform(
+                            sendmask, msg_w[i][None, :], xp=np)
                     for q in range(p_cnt):
                         c = int(counts_w[q, i])
                         if c:
                             ex.post(w, int(worker_of[q]), p, q, sendmask[q],
                                     msg_w[i], count=c)
-            return counts_w, gapb_w, float(gen_b.sum()), \
+            return counts_w, gapb_w, unib_w, float(gen_b.sum()), \
                 time.perf_counter() - t0
 
         send_out = run_worker_pool(
@@ -990,11 +1005,14 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
             parallel, pool=engine.worker_pool)
         counts = np.zeros((p_cnt, p_cnt), np.float64)       # [q, p] routing
         gapb = np.zeros((p_cnt, p_cnt), np.float64)
+        unib = np.zeros((p_cnt, p_cnt), bool)
         gen_batches_total = 0.0
-        for w, (counts_w, gapb_w, gen_b_sum, dt) in enumerate(send_out):
+        for w, (counts_w, gapb_w, unib_w, gen_b_sum, dt) in \
+                enumerate(send_out):
             lo, hi = worker_parts[w][0], worker_parts[w][-1] + 1
             counts[:, lo:hi] = counts_w
             gapb[:, lo:hi] = gapb_w
+            unib[:, lo:hi] = unib_w
             gen_batches_total += gen_b_sum
             engine.worker_times[w]["send_s"] += dt
 
@@ -1009,13 +1027,15 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
         cross = (worker_of[np.newaxis, :] != worker_of[:, np.newaxis])
         net, net_raw = phases.net_bytes_model(
             counts, cross, v_max, cfg.msg_bytes,
-            gap_bytes=gapb if cfg.compression else None, xp=np)
+            gap_bytes=gapb if cfg.compression else None,
+            uniform=unib if cfg.compression else None, xp=np)
         counters["net_bytes"] = float(net)
         counters["net_bytes_raw"] = float(net_raw)
         counters["measured_net_bytes"] = ex.bytes_sent
         counters["net_pair_batches"] = float(ex.pair_batches)
         counters["net_slab_batches"] = float(ex.slab_batches)
         counters["net_vpair_batches"] = float(ex.vpair_batches)
+        counters["net_uval_batches"] = float(ex.uval_batches)
 
         # Phases 3 + 4 + apply per worker, against its own shard.  The
         # send pool has fully joined, so every message batch is posted
@@ -1042,7 +1062,8 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
                 # dispatch, and q-1's tail disk reads all overlap.
                 for q, recv_mask_q, recv_msg_q in exchange_mod.DecodeAhead(
                         ex, w, parts, p_cnt, compute_lock=token,
-                        runner=engine.pipeline_pool):
+                        runner=engine.pipeline_pool,
+                        device_decode=engine.device_decode):
                     with tok:               # compute token: dispatch burst
                         cd, _, sched_q = _dispatch_schedule_one_dest(
                             source, q, recv_mask_q, part_sizes, gamma,
@@ -1054,18 +1075,21 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
                     yield from sched_q
 
             w_edges = 0.0
+            w_dev_chunks = 0.0
             cur = None
             xv_q = xc_q = None
             for item in ChunkPrefetcher(source, lazy_schedule(),
                                         depth=cfg.ooc_prefetch_depth,
                                         compute_lock=token,
-                                        runner=engine.pipeline_pool):
+                                        runner=engine.pipeline_pool,
+                                        device_decode=engine.device_decode):
                 if isinstance(item, DestHeader):
                     cur = item
                     xv_q = xc_q = None
                     for ck, cv in item.counter_delta.items():
                         cw[ck] = cw.get(ck, 0.0) + cv
                     continue
+                w_dev_chunks += item.n_device_chunks
                 with tok:                   # compute token: combine burst
                     if backend == "block_csr" and xv_q is None:
                         xv_q, xc_q = _block_dest_vectors(
@@ -1104,6 +1128,7 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
                       + (spill.bytes_written - sw0))
             cw["measured_chunks_read"] = source.store.chunks_read - cr0
             cw["measured_edge_read_bytes"] = edge_b
+            cw["measured_chunks_device_decoded"] = w_dev_chunks
             cw["measured_vertex_read_bytes"] = spill.bytes_read - sr0
             cw["measured_vertex_write_bytes"] = spill.bytes_written - sw0
             cw["edges_touched"] = w_edges

@@ -70,8 +70,22 @@ def routing_counts(recv_mask, xp=jnp):
         xp.float64 if xp is np else xp.float32)
 
 
+def batch_value_uniform(mask, values, xp=jnp):
+    """Per-batch uniformity of the masked message values: True where every
+    value the batch actually sends is identical (and the batch is
+    nonempty).  Reduces over the last axis; ``values`` broadcasts against
+    ``mask``.  This masked min == max reduction is the SAME computation
+    :func:`repro.core.exchange.encode_batch` runs before choosing the
+    single-value ``uval`` wire encoding, so the analytic model and the
+    physical encoder always agree per batch (exact float32 comparison —
+    a NaN anywhere in the batch reads as non-uniform on both sides)."""
+    hi = xp.max(xp.where(mask, values, -xp.inf), axis=-1)
+    lo = xp.min(xp.where(mask, values, xp.inf), axis=-1)
+    return (hi == lo) & xp.any(mask, axis=-1)
+
+
 def net_bytes_model(counts, cross, v_max, msg_bytes, gap_bytes=None,
-                    xp=jnp):
+                    uniform=None, xp=jnp):
     """Analytic network bytes shared by every executor.
 
     counts: routing counts (any shape); cross: same-shape bool — True where
@@ -85,18 +99,21 @@ def net_bytes_model(counts, cross, v_max, msg_bytes, gap_bytes=None,
     ``gap_bytes`` (same shape as ``counts``: the delta-varint index-stream
     size of each batch's send mask, from
     :func:`repro.core.codec.mask_gap_bytes`) enables the compressed
-    ``vpairs`` encoding in the choice.  Returns ``(net, net_raw)``: the
-    priced bytes under the running choice and the legacy two-way
-    pairs/slab price of the same routing counts — the compressed/raw
-    twins of the counter set.  With ``gap_bytes=None`` (compression off)
-    the two are equal."""
+    ``vpairs`` encoding in the choice; ``uniform`` (same shape, from
+    :func:`batch_value_uniform`) additionally enables the single-value
+    ``uval`` encoding for batches whose values are all identical.
+    Returns ``(net, net_raw)``: the priced bytes under the running choice
+    and the legacy two-way pairs/slab price of the same routing counts —
+    the compressed/raw twins of the counter set.  With ``gap_bytes=None``
+    (compression off) the two are equal."""
     raw = xp.sum(xp.where(
         cross, batch_wire_bytes(counts, v_max, msg_bytes, xp=xp), 0.0))
     if gap_bytes is None:
         return raw, raw
     net = xp.sum(xp.where(
         cross, batch_wire_bytes(counts, v_max, msg_bytes,
-                                gap_bytes=gap_bytes, xp=xp), 0.0))
+                                gap_bytes=gap_bytes, uniform=uniform,
+                                xp=xp), 0.0))
     return net, raw
 
 
