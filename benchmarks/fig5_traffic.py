@@ -14,21 +14,44 @@ section extends the audit to the network: 4 workers with their own chunk
 shards exchange need-list-filtered message batches over a measured wire,
 and the measured/modeled column pair must again be equal ("only necessary
 network requests").
+
+The serving section (DESIGN.md §11) adds the concurrent-query curve: the
+same selective chunk stream amortized across Q simultaneous BFS queries,
+with measured bytes-per-query collapsing ~1/Q as Q grows.  Section
+selection: ``REPRO_FIG5_SECTIONS=traffic,serving`` (default both) lets CI
+run the serving gate standalone.
 """
 from __future__ import annotations
 
+import os
 import tempfile
 
 import numpy as np
 
-from benchmarks.engines_common import bench_graph, build_engine, csv_row, timed
-from repro.core import ChunkStore, Engine, EngineConfig, storage_summary
+from benchmarks.engines_common import (
+    bench_graph, bench_record, build_engine, csv_row, timed,
+    write_bench_json,
+)
+from repro.core import (
+    ChunkStore, Engine, EngineConfig, accumulate_counters, storage_summary,
+)
 from repro.core import algorithms as alg
 from repro.core.baselines import ChaosLikeEngine
 from repro.core.engine import DIST_MEASURED_PAIRS, MEASURED_PAIRS
 
 
 def main(scale=11) -> list[str]:
+    sections = os.environ.get("REPRO_FIG5_SECTIONS", "traffic,serving")
+    wanted = {s.strip() for s in sections.split(",") if s.strip()}
+    rows = []
+    if "traffic" in wanted:
+        rows += _traffic_section(scale)
+    if "serving" in wanted:
+        rows += _serving_section(scale)
+    return rows
+
+
+def _traffic_section(scale=11) -> list[str]:
     g = bench_graph(scale)
     rows = []
     p = 8
@@ -152,6 +175,80 @@ def main(scale=11) -> list[str]:
             f"csr_pruned={st_d.counters['chunks_read_csr']:.0f};"
             f"dcsr_raw={st_d.counters['chunks_read_dcsr']:.0f};"
             f"dcsr_delta={st_d.counters['chunks_read_dcsr_delta']:.0f}"))
+    return rows
+
+
+def _serving_section(scale=11) -> list[str]:
+    """Bytes-per-query vs Q: one fixed workload of 8 BFS queries served
+    as 8/Q batches of Q on the disk-backed executor.  Disk bytes are the
+    storage tier's *measured* counters (edge chunks + vertex spill);
+    network bytes are the adaptive wire model priced once over the union
+    frontier.  The curve is the tentpole claim: the selective chunk
+    stream is paid per batch, not per query, so per-query traffic
+    collapses ~1/Q.  Writes BENCH_serving.json and asserts the Q=8 point
+    sits below half the Q=1 point (the CI gate re-checks the JSON)."""
+    g = bench_graph(scale)
+    rows, records = [], []
+    p = 8
+    base = build_engine(g, p=p, batch_size=64)
+
+    order = np.argsort(-np.asarray(g.out_degrees()))
+    sources = [int(v) for v in order[:8]]
+    n_total = len(sources)
+
+    per_query = {}
+    levels_by_q = {}
+    for q in (1, 2, 4, 8):
+        # Fresh store per Q: the vertex spill records its panel width at
+        # init and (by design) refuses to reopen under a different Q.
+        with tempfile.TemporaryDirectory() as root:
+            store = ChunkStore.build(base.graph, base.fmts, root)
+            eng = Engine(base.graph, base.fmts,
+                         EngineConfig(executor="ooc", num_queries=q),
+                         store=store)
+            counters = {}
+            cols = []
+            t_tot = 0.0
+            for gi in range(n_total // q):
+                batch = sources[gi * q:(gi + 1) * q]
+                (lv, st), t = timed(
+                    lambda b=batch: alg.multi_bfs(eng, b))
+                cols.append(np.asarray(lv))
+                counters = accumulate_counters(counters, st.counters)
+                t_tot += t
+        levels_by_q[q] = np.concatenate(cols, axis=1)
+        disk = (counters["measured_edge_read_bytes"]
+                + counters["measured_vertex_read_bytes"]
+                + counters["measured_vertex_write_bytes"])
+        net = counters["net_bytes"]
+        per_query[q] = (disk + net) / n_total
+        rows.append(csv_row(
+            f"f5/serving/Q={q}", t_tot,
+            f"disk={disk:.0f};net={net:.0f};"
+            f"bytes_per_query={per_query[q]:.1f}"))
+        for metric, val, units in (
+                ("disk_bytes", disk, "bytes"),
+                ("net_bytes", net, "bytes"),
+                ("bytes_per_query", per_query[q], "bytes")):
+            records.append(bench_record(
+                "fig5_serving", f"ooc/Q={q}/queries=8", metric, val,
+                units))
+
+    # Batching must not change any answer: every Q partitions the same 8
+    # queries, so the concatenated level columns are bit-identical.
+    for q in (2, 4, 8):
+        np.testing.assert_array_equal(levels_by_q[1], levels_by_q[q])
+
+    ratio = per_query[8] / max(per_query[1], 1.0)
+    rows.append(csv_row("f5/serving/amortization", 0.0,
+                        f"q8_over_q1={ratio:.4f}"))
+    records.append(bench_record("fig5_serving", "ooc/Q=8_vs_Q=1",
+                                "bytes_per_query_ratio", ratio, "ratio"))
+    path = write_bench_json("BENCH_serving.json", records)
+    rows.append(csv_row("f5/serving/bench_json", 0.0, f"path={path}"))
+    assert ratio < 0.5, (
+        f"serving amortization regressed: bytes/query(Q=8) = {ratio:.3f}x "
+        f"bytes/query(Q=1), expected < 0.5x")
     return rows
 
 

@@ -164,4 +164,52 @@ if [ ! -s "${REPRO_BENCH_DIR:-.}/BENCH_kernels.json" ]; then
 fi
 suite_timer_end "kernel microbenchmarks + BENCH_kernels.json"
 
+# The multi-query parity suite (DESIGN.md §11): Q-batched execution
+# bit-identical to Q independent runs on all four executors, per-query
+# convergence, batched measured bytes <= the sum of solo runs, and the
+# serving session.  8 forced host devices for the shard_map panel path;
+# REPRO_DIST_PARALLEL=1 so the dist_ooc W=2 parity cases run the
+# thread-pooled parallel-worker pipeline, not just the sequential
+# reference.  Standalone for the baseline-can't-hide-it reason above.
+suite_timer_start
+if ! XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    REPRO_DIST_PARALLEL=1 \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
+    tests/test_multiquery.py; then
+    echo "CI FAIL: multi-query parity suite (tests/test_multiquery.py," \
+         "parallel_workers on)" >&2
+    exit 1
+fi
+suite_timer_end "multi-query parity suite"
+
+# The serving amortization gate (DESIGN.md §11): run fig5's serving
+# section (reduced scale — the curve's shape, not its magnitude, is the
+# gate) and re-check from BENCH_serving.json that serving 8 queries in
+# one batch costs < 0.5x the per-query bytes of serving them one at a
+# time.  The section's own in-script asserts additionally cover
+# bit-identical answers across every Q.
+suite_timer_start
+if ! REPRO_FIG5_SECTIONS=serving REPRO_BENCH_DIR="$SCRATCH/serving" \
+    PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
+    python -c "from benchmarks import fig5_traffic; fig5_traffic.main(scale=9)"; then
+    echo "CI FAIL: fig5 serving section (benchmarks/fig5_traffic.py)" >&2
+    exit 1
+fi
+if ! python - "$SCRATCH/serving/BENCH_serving.json" <<'EOF'
+import json, sys
+recs = json.load(open(sys.argv[1]))
+per_q = {r["config"]: r["value"] for r in recs
+         if r["metric"] == "bytes_per_query"}
+q1, q8 = per_q["ooc/Q=1/queries=8"], per_q["ooc/Q=8/queries=8"]
+ratio = q8 / q1
+print(f"serving gate: bytes/query Q=8 is {ratio:.3f}x Q=1")
+sys.exit(0 if ratio < 0.5 else 1)
+EOF
+then
+    echo "CI FAIL: serving amortization gate —" \
+         "bytes/query(Q=8) >= 0.5x bytes/query(Q=1)" >&2
+    exit 1
+fi
+suite_timer_end "serving amortization gate + BENCH_serving.json"
+
 echo "CI OK: no regressions vs baseline ($(wc -l < "$CURRENT") known failures)"

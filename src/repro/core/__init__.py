@@ -32,3 +32,6 @@ from repro.core.engine import (  # noqa: F401
     ADD, MIN, MAX, Engine, EngineConfig, Monoid, accumulate_counters,
     zero_counters,
 )
+from repro.core.serve import (  # noqa: F401
+    GraphServeSession, QueryResult,
+)

@@ -188,6 +188,132 @@ def sssp(engine: Engine, source: int, max_iters: int = 10_000):
 
 
 # ---------------------------------------------------------------------------
+# Multi-query algorithms (DESIGN.md §11): Q concurrent queries, one pass
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MultiRunStats:
+    iterations: list          # per-query ProcessEdges calls while alive
+    counters: dict
+    per_iter_return: list     # [Q] return vector per batched iteration
+
+
+def _gather_panel(engine: Engine, panel) -> np.ndarray:
+    """[P, V, Q] panel -> [n, Q] global values (one gather per column)."""
+    arr = np.asarray(panel)
+    return np.stack([gather_vertex_values(engine.graph.spec, arr[:, :, j])
+                     for j in range(arr.shape[-1])], axis=1)
+
+
+def multi_bfs(engine: Engine, sources, max_iters: int = 10_000):
+    """Q simultaneous BFS queries through one selective pass per level.
+
+    ``sources`` lists one source per query (len == num_queries).  Each
+    query's level column and iteration count are bit-identical to the
+    solo :func:`bfs` from that source; a query whose frontier dies stops
+    being counted (and, on the streamed executors, stops costing bytes)
+    while the batch keeps iterating for the others."""
+    g = engine.graph
+    nq = engine.config.num_queries
+    if len(sources) != nq:
+        raise ValueError(f"multi_bfs needs one source per query: got "
+                         f"{len(sources)} sources for num_queries={nq}")
+    inf = jnp.float32(np.finfo(np.float32).max)
+    gid = engine.global_id
+    srcs = jnp.asarray(np.asarray(sources, np.int32))            # [Q]
+    hit = gid[..., None] == srcs                                 # [P, V, Q]
+    state = engine.init_state(
+        level=jnp.where(hit, 0.0, inf).astype(jnp.float32))
+    active = hit & g.vertex_valid[..., None]
+    if engine._distributed:
+        import jax
+        active = jax.device_put(active, engine._shard)
+    counters, rets = {}, []
+    iters = [0] * nq
+    alive = [True] * nq
+    it = 0
+    while any(alive) and it < max_iters:
+        state, active, updated, c = engine.process_edges_multi(
+            state,
+            signal_fn=lambda s, gid: s["level"] + 1.0,
+            slot_fn=lambda msg, data: msg,
+            monoid=MIN,
+            apply_fn=lambda s, agg, has, gid: (
+                {"level": jnp.minimum(s["level"], agg)},
+                has & (agg < s["level"]),
+                (agg < s["level"]).astype(jnp.float32)),
+            active=active,
+        )
+        counters = accumulate_counters(counters, c)
+        updated = np.asarray(updated, np.float64)
+        rets.append(updated)
+        for j in range(nq):
+            if alive[j]:
+                iters[j] += 1
+                if float(updated[j]) == 0.0:
+                    alive[j] = False
+        it += 1
+    return (_gather_panel(engine, state["level"]),
+            MultiRunStats(iters, counters, rets))
+
+
+def personalized_pagerank(engine: Engine, sources, num_iters: int = 5,
+                          damping: float = 0.85):
+    """Q personalized PageRank queries (teleport to each query's source)
+    in one batched power iteration: rank_0 = e_s and
+    rank <- (1 - d) * e_s + d * A^T D^{-1} rank per query column.  The
+    teleport indicator rides in the state panel (``tele``), so the
+    unchanged single-query callbacks stay per-query."""
+    g = engine.graph
+    nq = engine.config.num_queries
+    if len(sources) != nq:
+        raise ValueError(f"personalized_pagerank needs one source per "
+                         f"query: got {len(sources)} sources for "
+                         f"num_queries={nq}")
+    gid = engine.global_id
+    srcs = jnp.asarray(np.asarray(sources, np.int32))
+    tele = (gid[..., None] == srcs).astype(jnp.float32)          # [P, V, Q]
+    outdeg = jnp.maximum(g.out_degree, 1).astype(jnp.float32)
+    panel = lambda a: jnp.broadcast_to(a[..., None], a.shape + (nq,))
+    state = engine.init_state(
+        rank=tele, acc=jnp.zeros_like(tele), tele=tele,
+        outdeg=panel(outdeg))
+    counters, rets = {}, []
+    for _ in range(num_iters):
+        state, _, _, c = engine.process_edges_multi(
+            state,
+            signal_fn=lambda s, gid: s["rank"] / s["outdeg"],
+            slot_fn=lambda msg, data: msg,
+            monoid=ADD,
+            apply_fn=lambda s, agg, has, gid: ({"acc": agg}, has & False,
+                                               agg),
+        )
+        counters = accumulate_counters(counters, c)
+        state, tot, c2 = engine.process_vertices_multi(
+            state,
+            work_fn=lambda s, gid: (
+                {"rank": (1.0 - damping) * s["tele"] + damping * s["acc"],
+                 "acc": jnp.zeros_like(s["acc"])},
+                jnp.abs(s["rank"])),
+        )
+        counters = accumulate_counters(counters, c2)
+        rets.append(np.asarray(tot, np.float64))
+    return (_gather_panel(engine, state["rank"]),
+            MultiRunStats([num_iters] * nq, counters, rets))
+
+
+def pairwise_reachability(engine: Engine, pairs):
+    """Q reachability queries (src_j -> dst_j?) as one multi-source BFS
+    batch; returns (bool [Q], per-query finite levels stats)."""
+    sources = [s for s, _ in pairs]
+    levels, stats = multi_bfs(engine, sources)
+    inf = np.float32(np.finfo(np.float32).max)
+    reachable = np.array([levels[d, j] < inf
+                          for j, (_, d) in enumerate(pairs)])
+    return reachable, stats
+
+
+# ---------------------------------------------------------------------------
 # Pure-numpy oracles (for tests and baseline validation)
 # ---------------------------------------------------------------------------
 
@@ -199,6 +325,19 @@ def ref_pagerank(n, src, dst, num_iters=5, damping=0.85):
         acc = np.zeros(n, np.float64)
         np.add.at(acc, dst, contrib)
         rank = (1 - damping) / n + damping * acc
+    return rank
+
+
+def ref_ppr(n, src, dst, source, num_iters=5, damping=0.85):
+    tele = np.zeros(n, np.float64)
+    tele[source] = 1.0
+    rank = tele.copy()
+    outdeg = np.maximum(np.bincount(src, minlength=n), 1)
+    for _ in range(num_iters):
+        contrib = rank[src] / outdeg[src]
+        acc = np.zeros(n, np.float64)
+        np.add.at(acc, dst, contrib)
+        rank = (1 - damping) * tele + damping * acc
     return rank
 
 

@@ -752,17 +752,44 @@ class VertexSpill:
     unmeasured preprocessing sync; ``read``/``write``/``read_bitmap``/
     ``write_bitmap`` are the measured per-request entry points the OOC
     executor issues.
+
+    Multi-query runs (DESIGN.md §11) flatten the [P, v_max, Q] state panel
+    into per-query arrays named ``{key}@q{j}`` and per-query bitmap files
+    (``name=`` on the bitmap entry points), so query *j*'s reads and writes
+    touch exactly the batches and bytes a solo run of query *j* would.
+    ``num_queries`` is recorded in ``spill_meta.json`` next to the arrays;
+    reopening a spill with a different Q raises :class:`ChunkStoreError`
+    (the on-disk column layout would not match the engine's panel width).
     """
 
     def __init__(self, root: str, num_partitions: int, num_batches: int,
-                 batch_size: int, v_max: int):
+                 batch_size: int, v_max: int, num_queries: int = 1):
+        if num_queries < 1:
+            raise ChunkStoreError(
+                f"vertex spill at {root}: num_queries must be >= 1, got "
+                f"{num_queries}")
         self.root = root
         self.p_cnt = num_partitions
         self.b_cnt = num_batches
         self.batch_size = batch_size
         self.v_max = v_max
         self.v_pad = num_batches * batch_size
+        self.num_queries = num_queries
         os.makedirs(root, exist_ok=True)
+        meta_path = os.path.join(root, "spill_meta.json")
+        if os.path.exists(meta_path):
+            with open(meta_path) as f:
+                meta = json.load(f)
+            found = int(meta.get("num_queries", 1))
+            if found != num_queries:
+                raise ChunkStoreError(
+                    f"vertex spill at {root} was built for num_queries="
+                    f"{found}, but the engine requires num_queries="
+                    f"{num_queries}; use a fresh spill root (or an engine "
+                    f"with the matching Q) — the per-query column files "
+                    f"on disk do not match the requested panel width")
+        else:
+            atomic_write_json(meta_path, {"num_queries": num_queries})
         self._mm: dict[str, np.memmap] = {}
         self.bytes_read = 0
         self.bytes_written = 0
@@ -785,9 +812,12 @@ class VertexSpill:
     def names(self) -> list[str]:
         return list(self._mm)
 
-    def arrays_bytes(self) -> int:
-        """Per-vertex byte width across all spilled arrays (model constant)."""
-        return sum(mm.dtype.itemsize for mm in self._mm.values())
+    def arrays_bytes(self, keys: Sequence[str] | None = None) -> int:
+        """Per-vertex byte width across the spilled arrays (model constant).
+        ``keys`` restricts the width to a subset — multi-query runs price
+        each query over its own ``{key}@q{j}`` columns only."""
+        names = self._mm if keys is None else keys
+        return sum(self._mm[name].dtype.itemsize for name in names)
 
     def state_views(self) -> dict[str, np.ndarray]:
         """Zero-copy [P, v_max] views of the authoritative on-disk state."""
@@ -810,13 +840,18 @@ class VertexSpill:
                 runs.append((p, int(grp[0]) * bs, (int(grp[-1]) + 1) * bs))
         return runs
 
-    def read(self, batch_mask: np.ndarray) -> dict[str, np.ndarray]:
+    def read(self, batch_mask: np.ndarray,
+             keys: Sequence[str] | None = None) -> dict[str, np.ndarray]:
         """Measured read of every batch with a set bit in ``batch_mask``
-        [P, B].  Returns padded [P, v_pad] copies, zeros where unread."""
+        [P, B].  Returns padded [P, v_pad] copies, zeros where unread.
+        ``keys`` restricts the request (and the byte count) to a subset of
+        arrays — the multi-query executors read only the requesting
+        query's ``{key}@q{j}`` columns at that query's batches."""
         out = {}
         touched = int(batch_mask.sum())
         runs = self._batch_runs(batch_mask)
-        for name, mm in self._mm.items():
+        for name in (self._mm if keys is None else keys):
+            mm = self._mm[name]
             arr = np.zeros((self.p_cnt, self.v_pad), mm.dtype)
             for p, lo, hi in runs:
                 arr[p, lo:hi] = mm[p, lo:hi]
@@ -860,14 +895,14 @@ class VertexSpill:
     def bitmap_nbytes(self) -> int:
         return bitmap_nbytes(self.p_cnt, self.v_max)
 
-    def write_bitmap(self, mask: np.ndarray) -> None:
+    def write_bitmap(self, mask: np.ndarray, name: str = "active") -> None:
         packed = np.packbits(np.asarray(mask, bool), axis=1)
-        with open(os.path.join(self.root, "active.bits"), "wb") as f:
+        with open(os.path.join(self.root, f"{name}.bits"), "wb") as f:
             f.write(packed.tobytes())
         self.bytes_written += packed.nbytes
 
-    def read_bitmap(self) -> np.ndarray | None:
-        path = os.path.join(self.root, "active.bits")
+    def read_bitmap(self, name: str = "active") -> np.ndarray | None:
+        path = os.path.join(self.root, f"{name}.bits")
         row = ceil_div(self.v_max, 8)
         if not os.path.exists(path):
             self.bytes_read += self.p_cnt * row   # a fresh file reads zeros

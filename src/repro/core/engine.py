@@ -56,6 +56,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 import os
 
 from repro.core import executor as _executor
+from repro.core import multiquery as _multiquery
 from repro.core.chunkstore import (
     ChunkStore, DiskChunkSource, HBMChunkSource, ShardedChunkStore,
     VertexSpill,
@@ -202,6 +203,17 @@ class EngineConfig:
     ``kernels/csr_spmv.py``); uncompressed stores always decode on the
     host (their payload is a plain memcpy, nothing to decode)."""
 
+    num_queries: int = 1
+    """Q for the multi-query serving surface (``process_edges_multi`` /
+    ``process_vertices_multi``, DESIGN.md §11): vertex state carries a
+    trailing query axis ([P, V, Q] panels) and ONE selective pass serves
+    all Q frontiers — the scheduled active set is the union of the
+    per-query frontiers, per-query masks keep the combines independent.
+    The ooc / dist_ooc vertex spills are laid out per query
+    (``{key}@q{j}`` columns, ``active_q{j}`` bitmaps), so a spill root
+    must be (re)built with the same Q (``VertexSpill`` validates).  The
+    single-query API is unaffected by this knob."""
+
 
 COUNTER_KEYS = (
     "msgs_generated", "msgs_sent", "msgs_sent_nofilter",
@@ -315,6 +327,9 @@ class Engine:
         # OOC / dist_ooc executor state (DESIGN.md §6, §7)
         if config.executor not in ("auto", "ooc", "dist_ooc"):
             raise ValueError(f"unknown executor: {config.executor!r}")
+        if config.num_queries < 1:
+            raise ValueError(
+                f"num_queries must be >= 1, got {config.num_queries}")
         if config.parallel_workers and config.executor != "dist_ooc":
             raise ValueError(
                 "parallel_workers applies only to executor='dist_ooc' (the "
@@ -357,6 +372,7 @@ class Engine:
                                  "(the measured/modeled cross-check needs "
                                  "both)")
             self._ooc_last_state = None
+            self._mq_last_state = None
 
         def check_store_spec(manifest, root):
             """A store built for a different partitioning must fail here
@@ -396,7 +412,8 @@ class Engine:
             self.ooc_source = DiskChunkSource(store, graph, fmts)
             self.spill = VertexSpill(
                 os.path.join(store.root, "vertex"), spec.num_partitions,
-                spec.num_batches, spec.batch_size, spec.v_max)
+                spec.num_batches, spec.batch_size, spec.v_max,
+                num_queries=config.num_queries)
         if self._dist_ooc:
             if not isinstance(store, ShardedChunkStore):
                 raise ValueError(
@@ -419,7 +436,8 @@ class Engine:
                                  for s in store.shards]
             self.spills = [VertexSpill(
                 os.path.join(s.root, "vertex"), len(parts),
-                spec.num_batches, spec.batch_size, spec.v_max)
+                spec.num_batches, spec.batch_size, spec.v_max,
+                num_queries=config.num_queries)
                 for s, parts in zip(store.shards, self.worker_parts)]
             self.reset_worker_totals()
             # Long-lived phase pool (parallel_workers): one thread per
@@ -475,6 +493,7 @@ class Engine:
         unmeasured preprocessing sync."""
         if state is self._ooc_last_state:
             return
+        self._mq_last_state = None
         arrs = {k: np.asarray(v) for k, v in state.items()}
         valid = np.asarray(self.graph.vertex_valid)
         if self._dist_ooc:
@@ -487,6 +506,33 @@ class Engine:
         self.spill.load(arrs)
         self.spill.write_bitmap(valid)
         self.spill.reset_io_counters()
+
+    def _sync_mq_state(self, state) -> None:
+        """Multi-query twin of :meth:`_sync_ooc_state`: make the spill(s)
+        authoritative for a [P, V, Q] state panel, flattened to the
+        per-query ``{key}@q{j}`` columns with one ``active_q{j}`` bitmap
+        each.  Panels returned by multi-query OOC/dist calls are
+        recognized by identity and skipped; anything else loads as an
+        unmeasured preprocessing sync."""
+        if state is self._mq_last_state:
+            return
+        self._ooc_last_state = None
+        nq = self.config.num_queries
+        arrs = {k: np.asarray(v) for k, v in state.items()}
+        valid = np.asarray(self.graph.vertex_valid)
+
+        def load_one(spill, lo, hi):
+            spill.load({f"{k}@q{j}": v[lo:hi, :, j]
+                        for k, v in arrs.items() for j in range(nq)})
+            for j in range(nq):
+                spill.write_bitmap(valid[lo:hi], name=f"active_q{j}")
+            spill.reset_io_counters()
+
+        if self._dist_ooc:
+            for w, parts in enumerate(self.worker_parts):
+                load_one(self.spills[w], parts[0], parts[-1] + 1)
+            return
+        load_one(self.spill, 0, self.graph.spec.num_partitions)
 
     def _dist_state_views(self) -> State:
         """Lazy [P, V] state over the per-worker spills (the worker blocks
@@ -807,3 +853,289 @@ class Engine:
         self._check_measured(counters)
         self._ooc_last_state = new_state
         return new_state, new_active, total, counters
+
+    # -- Multi-query serving surface (DESIGN.md §11) -------------------------
+    def _check_mq_state(self, state, active) -> None:
+        nq = self.config.num_queries
+        for k, v in state.items():
+            if np.ndim(v) != 3 or np.shape(v)[-1] != nq:
+                raise ValueError(
+                    "multi-query state arrays must be [P, V, "
+                    f"num_queries={nq}] panels; state[{k!r}] has shape "
+                    f"{np.shape(v)}")
+        if active is not None and (np.ndim(active) != 3
+                                   or np.shape(active)[-1] != nq):
+            raise ValueError(
+                f"multi-query active must be a [P, V, num_queries={nq}] "
+                f"panel; got shape {np.shape(active)}")
+
+    def process_edges_multi(self, state: State, *,
+                            signal_fn: Callable, slot_fn: Callable,
+                            monoid: Monoid, apply_fn: Callable,
+                            active: jnp.ndarray | None = None):
+        """One ProcessEdges call serving ``num_queries`` concurrent
+        queries through a single selective pass (DESIGN.md §11).
+
+        ``state`` holds [P, V, Q] panels and ``active`` (if given) a
+        [P, V, Q] boolean panel; the per-vertex callbacks are the
+        unchanged single-query ``signal_fn`` / ``slot_fn`` / ``apply_fn``,
+        applied per query column.  Each query's column of the result is
+        bit-identical to the solo ``process_edges`` run for that query;
+        the chunk stream, the seeks, and the shared-index wire panels are
+        paid once over the union frontier.  Returns
+        (new_state panels, new_active [P, V, Q], totals [Q], counters)."""
+        cfg = self.config
+        nq = cfg.num_queries
+        self._check_mq_state(state, active)
+        if not cfg.enable_adaptive_formats:
+            raise ValueError(
+                "process_edges_multi requires enable_adaptive_formats: "
+                "the union-frontier chunk price is the adaptive min-bytes "
+                "choice (DESIGN.md §11)")
+        backend = cfg.compute_backend
+        if backend not in ("segment", "block_csr"):
+            raise ValueError(f"unknown compute_backend: {backend!r}")
+        if self._ooc or self._dist_ooc:
+            return self._mq_ooc_process_edges(state, signal_fn, slot_fn,
+                                              monoid, apply_fn, active,
+                                              backend)
+        if backend == "block_csr":
+            raise ValueError(
+                "multi-query block_csr runs on the streamed executors "
+                "(ooc / dist_ooc), where one decoded chunk feeds the "
+                "Q-panel kernel; LOCAL / SHARD_MAP multi-query supports "
+                "compute_backend='segment'")
+        keys = tuple(_executor.fn_code_key(f)
+                     for f in (signal_fn, slot_fn, apply_fn))
+        cache_key = None
+        if all(k is not None for k in keys):
+            cache_key = ("mq",) + keys + (monoid.name, nq,
+                                          active is not None)
+        fn = self._pe_cache.get(cache_key) if cache_key is not None else None
+        if not self._distributed:
+            if fn is None:
+                fn = _multiquery.make_local_pe_mq(
+                    self, signal_fn, slot_fn, monoid, apply_fn, nq)
+                if cache_key is not None:
+                    self._pe_cache[cache_key] = fn
+            return fn(state, active, self.graph, self.fmts, self.global_id)
+        if fn is None:
+            fn = _multiquery.make_sharded_pe_mq(
+                self, signal_fn, slot_fn, monoid, apply_fn, nq,
+                active is not None)
+            if cache_key is not None:
+                self._pe_cache[cache_key] = fn
+        return fn(state, active, self._garrs)
+
+    def _mq_ooc_process_edges(self, state, signal_fn, slot_fn, monoid,
+                              apply_fn, active, backend):
+        """OOC / dist_ooc realization of :meth:`process_edges_multi`."""
+        mode_meta = None
+        if backend == "block_csr":
+            probe = self._probe_slot(slot_fn, monoid)
+            if probe is None:
+                backend = "segment"
+            else:
+                _, mode, a_const, _, _ = probe
+                mode_meta = (mode, a_const)
+        make = (_multiquery.make_dist_ooc_pe_mq if self._dist_ooc
+                else _multiquery.make_ooc_pe_mq)
+        nq = self.config.num_queries
+        keys = tuple(_executor.fn_code_key(f)
+                     for f in (signal_fn, slot_fn, apply_fn))
+        cache_key = None
+        if all(k is not None for k in keys):
+            cache_key = ("mq", self.config.executor) + keys + (
+                monoid.name, backend, mode_meta, nq)
+        fn = self._pe_cache.get(cache_key) if cache_key is not None else None
+        if fn is None:
+            fn = make(self, signal_fn, slot_fn, monoid, apply_fn, backend,
+                      mode_meta, nq)
+            if cache_key is not None:
+                self._pe_cache[cache_key] = fn
+        self._sync_mq_state(state)
+        new_state, new_active, totals, counters = fn(active)
+        self._check_measured(counters)
+        self._mq_last_state = new_state
+        return new_state, new_active, totals, counters
+
+    def process_vertices_multi(self, state: State, work_fn: Callable,
+                               active: jnp.ndarray | None = None):
+        """Multi-query ProcessVertices: ``work_fn(state, global_id)`` runs
+        per query column, updating vertices in that query's ``active``
+        column (all valid, if None).  A query with an empty active column
+        is physically skipped (zero vertex I/O, matching the
+        ProcessEdges executors).  Returns (new_state, totals [Q],
+        counters)."""
+        g, cfg = self.graph, self.config
+        nq = cfg.num_queries
+        spec = g.spec
+        self._check_mq_state(state, active)
+        if self._ooc:
+            return self._mq_ooc_process_vertices(state, work_fn, active)
+        if self._dist_ooc:
+            return self._mq_dist_process_vertices(state, work_fn, active)
+
+        def step_one(state_j, amask_j, global_id, *, psum):
+            updates, ret = work_fn(state_j, global_id)
+            ns_j = dict(state_j)
+            for k, v in updates.items():
+                ns_j[k] = jnp.where(amask_j, v, state_j[k])
+            total_j = jnp.sum(jnp.where(amask_j, ret, 0).astype(jnp.float32))
+            io = {}
+            if cfg.account_io:
+                arrays_bytes = sum(np.dtype(v.dtype).itemsize
+                                   for v in state_j.values())
+                touched = batch_touched(amask_j, spec.batch_size)
+                # The bitmap term is shape-static; gate the query's I/O
+                # on (global) aliveness so converged queries price zero,
+                # like the physical skip on the streamed executors.
+                n_alive = jnp.sum(amask_j, dtype=jnp.float32)
+                if psum:
+                    n_alive = jax.lax.psum(n_alive, self.axis)
+                alive_f = (n_alive > 0).astype(jnp.float32)
+                io["vertex_read_bytes"] = alive_f * (
+                    touched * arrays_bytes + bitmap_model_bytes(amask_j))
+                io["vertex_write_bytes"] = alive_f * touched * arrays_bytes
+            return ns_j, total_j, io
+
+        def step(state, active, vertex_valid, global_id, *, psum=False):
+            counters = zero_counters()
+            new_cols, totals = {k: [] for k in state}, []
+            for j in range(nq):
+                state_j = {k: v[..., j] for k, v in state.items()}
+                amask_j = (vertex_valid if active is None
+                           else (active[..., j] & vertex_valid))
+                ns_j, total_j, io = step_one(state_j, amask_j, global_id,
+                                             psum=psum)
+                for k, v in io.items():
+                    counters[k] += v
+                for k in state:
+                    new_cols[k].append(ns_j[k])
+                totals.append(total_j)
+            new_state = {k: jnp.stack(cols, axis=-1)
+                         for k, cols in new_cols.items()}
+            return new_state, jnp.stack(totals), counters
+
+        if not self._distributed:
+            return jax.jit(step)(state, active, g.vertex_valid,
+                                 self.global_id)
+
+        mesh, axis = self.mesh, self.axis
+
+        def inner(state, active, vertex_valid, global_id):
+            new_state, totals, counters = step(state, active, vertex_valid,
+                                               global_id, psum=True)
+            totals = jax.lax.psum(totals, axis)
+            counters = {k: jax.lax.psum(v, axis) for k, v in counters.items()}
+            return new_state, totals, counters
+
+        in_specs = ({k: P(axis) for k in state},
+                    None if active is None else P(axis), P(axis), P(axis))
+        out_specs = ({k: P(axis) for k in state}, P(),
+                     {k: P() for k in COUNTER_KEYS})
+        fn = jax.jit(_executor.shard_map_compat(
+            inner, mesh=mesh, in_specs=in_specs, out_specs=out_specs))
+        return fn(state, active, self._garrs["vertex_valid"],
+                  self._garrs["global_id"])
+
+    def _mq_spill_process_vertices(self, spill, amask_rows, gid_rows,
+                                   work_fn, base, alive, counters):
+        """One spill's multi-query ProcessVertices body: each alive
+        query's bitmap + active batches are read, computed, and merged
+        back into its own ``{key}@q{j}`` columns (dead queries cost zero
+        bytes, measured and modeled alike)."""
+        spec = self.graph.spec
+        bs, b_cnt, v_max = spec.batch_size, spec.num_batches, spec.v_max
+        nq = self.config.num_queries
+        sr0, sw0 = spill.bytes_read, spill.bytes_written
+        totals = np.zeros(nq, np.float64)
+        for j in alive:
+            keys_j = _multiquery.mq_query_keys(base, j)
+            spill.read_bitmap(name=f"active_q{j}")              # measured
+            batches = _executor._batch_any(amask_rows[j], bs, b_cnt)
+            rstate_pad = spill.read(batches, keys=keys_j)       # measured
+            rstate = {bk: rstate_pad[f"{bk}@q{j}"][:, :v_max]
+                      for bk in base}
+            updates, ret = work_fn({bk: jnp.asarray(v)
+                                    for bk, v in rstate.items()}, gid_rows)
+            upd_renamed = {f"{bk}@q{j}": v for bk, v in updates.items()}
+            spill.merge_write(rstate_pad, upd_renamed, amask_rows[j],
+                              batches)                          # measured
+            totals[j] = float(np.where(
+                amask_rows[j], np.asarray(ret, np.float32), 0.0).sum())
+            touched = float(batches.sum()) * bs
+            ab_j = spill.arrays_bytes(keys_j)
+            counters["vertex_read_bytes"] += (
+                touched * ab_j + float(spill.bitmap_nbytes()))
+            counters["vertex_write_bytes"] += touched * ab_j
+        dr = spill.bytes_read - sr0
+        dw = spill.bytes_written - sw0
+        counters["measured_vertex_read_bytes"] += dr
+        counters["measured_vertex_write_bytes"] += dw
+        return totals, dr, dw
+
+    def _mq_amasks(self, active):
+        nq = self.config.num_queries
+        vertex_valid = np.asarray(self.graph.vertex_valid)
+        return [(vertex_valid if active is None
+                 else np.asarray(active[..., j], bool) & vertex_valid)
+                for j in range(nq)]
+
+    def _mq_ooc_process_vertices(self, state, work_fn, active):
+        self._sync_mq_state(state)
+        nq = self.config.num_queries
+        amask = self._mq_amasks(active)
+        alive = [j for j in range(nq) if amask[j].any()]
+        counters = {k: 0.0 for k in self.counter_keys}
+        base = _multiquery.mq_base_names(self.spill)
+        totals, _, _ = self._mq_spill_process_vertices(
+            self.spill, amask, self.global_id, work_fn, base, alive,
+            counters)
+        self._check_measured(counters)
+        views = self.spill.state_views()
+        new_state = {bk: np.stack([views[f"{bk}@q{j}"]
+                                   for j in range(nq)], axis=-1)
+                     for bk in base}
+        self._mq_last_state = new_state
+        return new_state, totals, counters
+
+    def _mq_dist_process_vertices(self, state, work_fn, active):
+        self._sync_mq_state(state)
+        nq = self.config.num_queries
+        amask = self._mq_amasks(active)
+        alive = [j for j in range(nq) if amask[j].any()]
+        counters = {k: 0.0 for k in self.counter_keys}
+        base = _multiquery.mq_base_names(self.spills[0])
+        token = threading.Lock() if self.config.parallel_workers else None
+        tok = token_ctx(token)
+
+        def pv_task(w):
+            t0 = time.perf_counter()
+            parts = self.worker_parts[w]
+            lo, hi = parts[0], parts[-1] + 1
+            cw = dict.fromkeys(
+                ("vertex_read_bytes", "vertex_write_bytes",
+                 "measured_vertex_read_bytes",
+                 "measured_vertex_write_bytes"), 0.0)
+            with tok:
+                t, dr, dw = self._mq_spill_process_vertices(
+                    self.spills[w], [m[lo:hi] for m in amask],
+                    self.global_id[lo:hi], work_fn, base, alive, cw)
+            self.worker_totals[w]["disk_bytes"] += dr + dw
+            return cw, t, time.perf_counter() - t0
+
+        out = _executor.run_worker_pool(
+            [functools.partial(pv_task, w)
+             for w in range(self.config.num_workers)],
+            self.config.parallel_workers, pool=self.worker_pool)
+        reduce_worker_counters(counters, [cw for cw, _, _ in out])
+        totals = np.zeros(nq, np.float64)
+        for w, (_, t, dt) in enumerate(out):
+            totals += t
+            self.worker_times[w]["pv_s"] += dt
+        self._check_measured(counters)
+        new_state = _multiquery._dist_mq_state_views(
+            self.spills, self.worker_parts, base, nq)
+        self._mq_last_state = new_state
+        return new_state, totals, counters

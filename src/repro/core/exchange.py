@@ -68,6 +68,9 @@ FMT_PAIRS = 0
 FMT_SLAB = 1
 FMT_VPAIRS = 2              # delta-varint index stream + dense value column
 FMT_UVAL = 3                # delta-varint index stream + ONE uniform value
+FMT_MQPANEL = 4             # multi-query panel: ONE union gap stream +
+                            # per-query presence bitmap + value column
+                            # (DESIGN.md §11)
 
 
 # ---------------------------------------------------------------------------
@@ -217,6 +220,73 @@ def encode_batch(mask: np.ndarray, values: np.ndarray,
     return FMT_PAIRS, idx.astype("<i4").tobytes() + vals.tobytes()
 
 
+def mq_encode_panel(masks: np.ndarray, values: np.ndarray,
+                    union_mask: np.ndarray, counts: Sequence[int]
+                    ) -> tuple[list, bytes]:
+    """Serialize one multi-query (p -> q) batch as a **panel**: one
+    delta-varint gap stream over the union positions, then — for each query
+    with a nonempty column — a presence bitmap over those union positions
+    plus its value column (ONE value when the masked values are all
+    identical, the uval idea per column; else ``count_j`` values).
+
+    masks [Q, v_max] bool, values [Q, v_max] f32.  Returns
+    ``(cols, payload)`` where ``cols`` is the framing metadata the decoder
+    needs: ``[(j, count_j, uniform_j), ...]`` plus the gap-stream length is
+    recoverable as ``len(payload) - sum(column bytes)``.  The payload
+    length equals the panel arm of
+    :func:`repro.core.phases.mq_wire_bytes` exactly."""
+    idx_u = np.flatnonzero(union_mask)
+    gaps = np.diff(idx_u, prepend=-1).astype(np.uint64)
+    parts = [codec.varint_encode(gaps).tobytes()]
+    cols = []
+    for j, c in enumerate(counts):
+        if not c:
+            continue
+        mj = np.asarray(masks[j], bool)
+        vm = np.asarray(values[j], np.float32)
+        hi = np.max(np.where(mj, vm, -np.inf))
+        uni = bool(hi == np.min(np.where(mj, vm, np.inf)))
+        parts.append(np.packbits(mj[idx_u]).tobytes())
+        if uni:
+            parts.append(np.asarray(hi, "<f4").tobytes())
+        else:
+            parts.append(vm[mj].astype("<f4").tobytes())
+        cols.append((j, int(c), uni))
+    return cols, b"".join(parts)
+
+
+def mq_decode_panel(cols: list, payload: bytes, union_count: int,
+                    v_max: int, num_queries: int, device: bool = False
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Inverse of :func:`mq_encode_panel` ->
+    (masks [Q, v_max] bool, values [Q, v_max] f32)."""
+    masks = np.zeros((num_queries, v_max), bool)
+    values = np.zeros((num_queries, v_max), np.float32)
+    pres_nb = ceil_div(union_count, 8)
+    cols_nb = sum(pres_nb + (WIRE_MSG_BYTES if uni
+                             else c * WIRE_MSG_BYTES)
+                  for _, c, uni in cols)
+    idx_u = _gap_decode(payload[:len(payload) - cols_nb], union_count,
+                        device)
+    off = len(payload) - cols_nb
+    for j, c, uni in cols:
+        bits = np.frombuffer(payload[off:off + pres_nb], np.uint8)
+        off += pres_nb
+        pres = np.unpackbits(bits)[:union_count].astype(bool)
+        pos = idx_u[pres]
+        if uni:
+            vals = np.full(c, np.frombuffer(
+                payload[off:off + WIRE_MSG_BYTES], "<f4")[0], np.float32)
+            off += WIRE_MSG_BYTES
+        else:
+            vals = np.frombuffer(payload[off:off + c * WIRE_MSG_BYTES],
+                                 "<f4")
+            off += c * WIRE_MSG_BYTES
+        masks[j, pos] = True
+        values[j, pos] = vals
+    return masks, values
+
+
 def _gap_decode(stream: bytes, count: int, device: bool) -> np.ndarray:
     """Decode a batch's delta-varint gap stream to sorted indices.
 
@@ -312,6 +382,7 @@ class Exchange:
         self.slab_batches = 0
         self.vpair_batches = 0
         self.uval_batches = 0
+        self.mq_batches = 0
         self.bytes_by_sender = np.zeros(num_workers, np.float64)
 
     def post(self, src_worker: int, dst_worker: int, p: int, q: int,
@@ -341,6 +412,90 @@ class Exchange:
             else:
                 self.pair_batches += 1
             box.append((p, ("wire", fmt, count, payload)))
+
+    def post_mq(self, src_worker: int, dst_worker: int, p: int, q: int,
+                masks: np.ndarray, values: np.ndarray,
+                counts: Sequence[int]) -> None:
+        """Post one multi-query (p, q) batch: ``masks``/``values`` are
+        [Q, v_max] per-query send masks and message values, ``counts``
+        their popcounts (>= 1 must be nonempty).  Cross-worker batches
+        serialize as the cheaper of the two arms the analytic model prices
+        (:func:`repro.core.phases.mq_wire_bytes`): Q independent solo-format
+        batches, or one shared-index panel (compression on) — so
+        ``bytes_sent`` equals the model by construction."""
+        if src_worker == dst_worker:
+            with self._lock:
+                box = self._inbox[dst_worker].setdefault(q, [])
+                box.append((p, ("local_mq", masks, values)))
+            return
+        items = []
+        legacy_sum = 0
+        for j, c in enumerate(counts):
+            if not c:
+                continue
+            fmt, payload = encode_batch(masks[j], values[j], int(c),
+                                        compression=self.compression)
+            legacy_sum += len(payload)
+            items.append((j, fmt, int(c), payload))
+        panel = None
+        if self.compression:
+            u = int(np.asarray(masks, bool).any(axis=0).sum())
+            cols, payload = mq_encode_panel(
+                masks, values, np.asarray(masks, bool).any(axis=0), counts)
+            if len(payload) < legacy_sum:
+                panel = (cols, u, payload)
+        with self._lock:
+            box = self._inbox[dst_worker].setdefault(q, [])
+            if panel is not None:
+                cols, u, payload = panel
+                self.bytes_sent += len(payload)
+                self.bytes_by_sender[src_worker] += len(payload)
+                self.mq_batches += 1
+                box.append((p, ("wire_mq_panel", cols, u, payload)))
+                return
+            self.bytes_sent += legacy_sum
+            self.bytes_by_sender[src_worker] += legacy_sum
+            for _, fmt, _, _ in items:
+                if fmt == FMT_SLAB:
+                    self.slab_batches += 1
+                elif fmt == FMT_VPAIRS:
+                    self.vpair_batches += 1
+                elif fmt == FMT_UVAL:
+                    self.uval_batches += 1
+                else:
+                    self.pair_batches += 1
+            box.append((p, ("wire_mq_legacy", items)))
+
+    def take_dest_mq(self, dst_worker: int, q: int, p_cnt: int,
+                     num_queries: int, device_decode: bool = False
+                     ) -> tuple[np.ndarray, np.ndarray]:
+        """Assemble destination partition q's multi-query receive view:
+        (recv_mask [Q, P, v_max], recv_msg [Q, P, v_max])."""
+        nq = num_queries
+        recv_mask = np.zeros((nq, p_cnt, self.v_max), bool)
+        recv_msg = np.zeros((nq, p_cnt, self.v_max), np.float32)
+        with self._lock:
+            entries = self._inbox[dst_worker].pop(q, ())
+        for p, entry in entries:
+            if entry[0] == "local_mq":
+                _, masks, values = entry
+                m = np.asarray(masks, bool)
+                recv_mask[:, p] = m
+                recv_msg[:, p] = np.where(m, values, 0.0)
+            elif entry[0] == "wire_mq_panel":
+                _, cols, u, payload = entry
+                masks, values = mq_decode_panel(
+                    cols, payload, u, self.v_max, nq,
+                    device=device_decode)
+                recv_mask[:, p] = masks
+                recv_msg[:, p] = values
+            else:
+                _, items = entry
+                for j, fmt, count, payload in items:
+                    recv_mask[j, p], recv_msg[j, p] = decode_batch(
+                        fmt, payload, count, self.v_max,
+                        device=device_decode)
+        return recv_mask, recv_msg
 
     def take_dest(self, dst_worker: int, q: int, p_cnt: int,
                   device_decode: bool = False
@@ -387,12 +542,15 @@ class DecodeAhead:
     def __init__(self, exchange: Exchange, worker: int,
                  dests: Sequence[int], p_cnt: int, depth: int = 1,
                  compute_lock=None, runner=None,
-                 device_decode: bool = False):
+                 device_decode: bool = False, num_queries: int = 1):
         self._exchange = exchange
         self._worker = worker
         self._dests = list(dests)
         self._p_cnt = p_cnt
         self._device_decode = bool(device_decode)
+        # num_queries > 1 assembles [Q, P, v_max] panel views via
+        # take_dest_mq (DESIGN.md §11); 1 keeps the solo [P, v_max] view.
+        self._num_queries = int(num_queries)
         self._lock_ctx = token_ctx(compute_lock)
         self._queue: queue.Queue = queue.Queue(maxsize=max(1, depth))
         self._stop = threading.Event()
@@ -417,9 +575,15 @@ class DecodeAhead:
         try:
             for q in self._dests:
                 with self._lock_ctx:       # compute token: decode burst
-                    mask, msg = self._exchange.take_dest(
-                        self._worker, q, self._p_cnt,
-                        device_decode=self._device_decode)
+                    if self._num_queries > 1:
+                        mask, msg = self._exchange.take_dest_mq(
+                            self._worker, q, self._p_cnt,
+                            self._num_queries,
+                            device_decode=self._device_decode)
+                    else:
+                        mask, msg = self._exchange.take_dest(
+                            self._worker, q, self._p_cnt,
+                            device_decode=self._device_decode)
                 if not self._put((q, mask, msg)):
                     return
             self._put(self._DONE)

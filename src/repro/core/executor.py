@@ -506,23 +506,18 @@ def _max_tiles_per_batch_row(g, tile, pb):
     return best
 
 
-def _ooc_combine_batch(work, xv_q, xc_q, slot_fn, monoid, mode,
-                       *, tile, pb, n_rows_b, max_tpr, bs, interpret):
-    """Phase 4 for one streamed dst-batch through the Pallas combine kernel.
+def _stream_tile_layout(work, *, tile, pb, n_rows_b, max_tpr, n_col_blocks,
+                        bs):
+    """Fixed-shape rectangular block-CSR layout for one streamed dst-batch.
 
-    The streamed chunk edges are laid out into a fixed-shape rectangular
-    block-CSR (n_rows_b * max_tpr slots) so every batch reuses one compiled
-    kernel; value tiles are scattered from the per-edge affine coefficients
-    (a, b) evaluated on the streamed edge data (affinity was certified by
-    the engine's slot probe)."""
+    The streamed chunk edges are laid out into n_rows_b * max_tpr slots so
+    every batch reuses one compiled kernel.  Returns (row_ptr, tile_idx,
+    tile_col, row_cnt, cells, n_slots) where ``cells`` is the
+    (slot, row-offset, col-offset) scatter target of each edge — the
+    query-independent half of the per-batch kernel inputs, built once and
+    shared by every query of a multi-query combine (DESIGN.md §11)."""
     t = tile
-    identity = float(monoid.identity)
     dst_b = work.dst - work.k * bs
-    d = jnp.asarray(work.data)
-    b_e = np.asarray(slot_fn(jnp.zeros_like(d), d), np.float32)
-    a_e = np.asarray(slot_fn(jnp.ones_like(d), d), np.float32) - b_e
-
-    n_col_blocks = xc_q.shape[0] // t
     slot_row, slot_col, rp, eslot = build_tile_struct(
         dst_b // t, work.part.astype(np.int64) * pb + work.src // t,
         n_rows_b, n_col_blocks)
@@ -535,8 +530,20 @@ def _ooc_combine_batch(work, xv_q, xc_q, slot_fn, monoid, mode,
     row_cnt = (rp[1:] - rp[:-1]).astype(np.int32)
     row_ptr = np.arange(0, n_slots + 1, max_tpr, dtype=np.int32)
     tile_idx = np.arange(n_slots, dtype=np.int32)
-
     cells = (padded_slot[eslot], dst_b % t, work.src % t)
+    return row_ptr, tile_idx, tile_col, row_cnt, cells, n_slots
+
+
+def _stream_value_tiles(work, cells, n_slots, slot_fn, monoid, mode, tile):
+    """Scatter the per-edge affine coefficients of one streamed dst-batch
+    into value tiles: (tiles_cnt, tiles_v, tiles_b).  The coefficients are
+    probed on the streamed edge data (affinity was certified by the
+    engine's slot probe); like the layout, they are query-independent."""
+    t = tile
+    identity = float(monoid.identity)
+    d = jnp.asarray(work.data)
+    b_e = np.asarray(slot_fn(jnp.zeros_like(d), d), np.float32)
+    a_e = np.asarray(slot_fn(jnp.ones_like(d), d), np.float32) - b_e
     tiles_cnt = np.zeros((n_slots, t, t), np.float32)
     np.add.at(tiles_cnt, cells, 1.0)
     tiles_v = tiles_b = None
@@ -550,6 +557,22 @@ def _ooc_combine_batch(work, xv_q, xc_q, slot_fn, monoid, mode,
         tiles_b = np.full((n_slots, t, t), identity, np.float32)
         scatter = np.minimum if mode == "min" else np.maximum
         scatter.at(tiles_b, cells, b_e)
+    return tiles_cnt, tiles_v, tiles_b
+
+
+def _ooc_combine_batch(work, xv_q, xc_q, slot_fn, monoid, mode,
+                       *, tile, pb, n_rows_b, max_tpr, bs, interpret):
+    """Phase 4 for one streamed dst-batch through the Pallas combine
+    kernel: fixed-shape layout + value tiles (helpers above), one kernel
+    call."""
+    t = tile
+    identity = float(monoid.identity)
+    row_ptr, tile_idx, tile_col, row_cnt, cells, n_slots = (
+        _stream_tile_layout(work, tile=t, pb=pb, n_rows_b=n_rows_b,
+                            max_tpr=max_tpr,
+                            n_col_blocks=xc_q.shape[0] // t, bs=bs))
+    tiles_cnt, tiles_v, tiles_b = _stream_value_tiles(
+        work, cells, n_slots, slot_fn, monoid, mode, t)
 
     to_j = lambda x: None if x is None else jnp.asarray(x)
     val, hc = block_csr_combine(

@@ -117,6 +117,74 @@ def net_bytes_model(counts, cross, v_max, msg_bytes, gap_bytes=None,
     return net, raw
 
 
+def mq_wire_bytes(counts, union_count, v_max, msg_bytes, gap_bytes=None,
+                  union_gap=None, uniform=None, xp=jnp):
+    """Adaptive wire price of one multi-query (p, q) message batch
+    (DESIGN.md §11).
+
+    ``counts`` [Q, ...] per-query routing counts; ``union_count`` [...] the
+    routing counts of the OR of the per-query send masks; ``gap_bytes`` /
+    ``uniform`` [Q, ...] the per-query delta-varint index-stream sizes and
+    value-uniformity flags; ``union_gap`` [...] the index-stream size of
+    the union mask.
+
+    Two arms, priced per batch and min-combined exactly like the solo
+    adaptive choice:
+
+    * **legacy sum** — each nonempty per-query column ships as its own
+      solo-format batch (:func:`repro.core.exchange.batch_wire_bytes`);
+      always available, and with compression off it is the only arm.
+    * **panel** (compression on) — ONE union gap stream, then per
+      participating query a presence bitmap over the union positions
+      (``ceil(u/8)`` bytes) plus its value column (one value when uniform,
+      else ``count_j`` values).  Queries whose frontiers overlap share the
+      index stream, which is what collapses per-query wire bytes ~1/Q.
+
+    Because the result is ``min(panel, legacy_sum)`` per batch, a
+    Q-query batch never prices above the sum of its Q solo batches.  The
+    SAME function prices the model (jnp under jit, np on the host
+    executors) and sizes :meth:`repro.core.exchange.Exchange.post_mq`'s
+    physical serialization, keeping measured == modeled network bytes
+    exact.  Returns the priced bytes, zero where the union is empty."""
+    acc = xp.float64 if xp is np else xp.float32
+    legacy = batch_wire_bytes(counts, v_max, msg_bytes, gap_bytes=gap_bytes,
+                              uniform=uniform, xp=xp)
+    legacy_sum = xp.sum(legacy.astype(acc), axis=0)
+    if gap_bytes is None:
+        return legacy_sum
+    c = counts.astype(acc)
+    pres = xp.floor((union_count.astype(acc) + xp.asarray(7.0, acc)) / 8.0)
+    vb = xp.where(uniform, xp.asarray(float(msg_bytes), acc),
+                  c * xp.asarray(float(msg_bytes), acc))
+    percol = xp.where(c > 0, pres[None] + vb, xp.asarray(0.0, acc))
+    panel = union_gap.astype(acc) + xp.sum(percol, axis=0)
+    best = xp.minimum(panel, legacy_sum)
+    return xp.where(union_count > 0, best, xp.asarray(0.0, acc))
+
+
+def mq_net_bytes_model(counts, union_count, cross, v_max, msg_bytes,
+                       gap_bytes=None, union_gap=None, uniform=None,
+                       xp=jnp):
+    """Analytic network bytes of a multi-query pass.
+
+    ``counts``/``gap_bytes``/``uniform`` carry a leading query axis over
+    the solo shapes; ``cross`` matches the union shape.  Returns
+    ``(net, net_raw)`` where ``net`` prices each crossing batch via
+    :func:`mq_wire_bytes` and ``net_raw`` is the sum of the per-query
+    legacy two-way (pairs/slab) prices — the same compressed/raw twin
+    structure as the solo :func:`net_bytes_model`."""
+    raw = xp.sum(xp.where(
+        cross[None], batch_wire_bytes(counts, v_max, msg_bytes, xp=xp),
+        0.0))
+    if gap_bytes is None:
+        return raw, raw
+    net = xp.sum(xp.where(
+        cross, mq_wire_bytes(counts, union_count, v_max, msg_bytes,
+                             gap_bytes=gap_bytes, union_gap=union_gap,
+                             uniform=uniform, xp=xp), 0.0))
+    return net, raw
+
+
 # ---------------------------------------------------------------------------
 # Phase 3: intra-node dispatch over the dispatching graph (paper §4.2)
 # ---------------------------------------------------------------------------
@@ -198,6 +266,67 @@ def format_choice_one_dest(dcsr_ptr, has_csr, csr_bytes, dcsr_bytes,
     compressed/raw read-byte twins, and the per-format active-chunk
     counts."""
     use_csr, use_delta, seek, per_chunk, per_raw = format_choice_matrix(
+        dcsr_ptr, has_csr, csr_bytes, dcsr_bytes, dcsr_delta_bytes,
+        csr_raw_bytes, dcsr_raw_bytes, part_sizes, gamma, msgs_from,
+        compression)
+    red = lambda x: jnp.sum(jnp.where(chunk_active, x, 0.0),
+                            dtype=jnp.float32)
+    return {
+        "seek_cost": red(seek),
+        "edge_read_bytes": red(per_chunk),
+        "edge_read_bytes_raw": red(per_raw),
+        "chunks_read_csr": red(use_csr.astype(jnp.float32)),
+        "chunks_read_dcsr_delta": red(use_delta.astype(jnp.float32)),
+        "chunks_read_dcsr": red((~use_csr & ~use_delta).astype(jnp.float32)),
+    }
+
+
+def mq_format_choice_matrix(dcsr_ptr, has_csr, csr_bytes, dcsr_bytes,
+                            dcsr_delta_bytes, csr_raw_bytes, dcsr_raw_bytes,
+                            part_sizes, gamma, msgs_from, compression,
+                            xp=jnp):
+    """Per-chunk format selection for a multi-query (union-frontier) pass.
+
+    Same signature and return structure as :func:`format_choice_matrix`,
+    but the choice is **pure min-bytes** over the available representations
+    instead of the solo seek-cost heuristic: the byte columns are static
+    per chunk, so every chunk the union schedule reads costs
+    ``min(csr, dcsr, dcsr_delta)`` — at most what ANY solo run would have
+    paid for the same chunk.  That mask-independence is what makes the
+    batched run's edge bytes provably <= the sum of the Q solo runs (each
+    union-active chunk is active in at least one solo frontier, and there
+    it cost at least this much).  ``msgs_from`` (union counts) only feeds
+    the modeled seek term, which keeps the solo formula for the chosen
+    arm."""
+    nnz = (dcsr_ptr[:, 1:] - dcsr_ptr[:, :-1]).astype(xp.float32)
+    v_src = part_sizes.astype(xp.float32)[:, None]             # [P, 1]
+    m = msgs_from.astype(xp.float32)[:, None]
+    cost_dcsr = xp.float32(2.0) * nnz
+    cost_csr = xp.minimum(xp.float32(gamma) * m, v_src)
+    if compression:
+        dcsr_best = xp.minimum(dcsr_bytes, dcsr_delta_bytes)
+        use_csr = has_csr & (csr_bytes < dcsr_best)
+        use_delta = (~use_csr) & (dcsr_delta_bytes < dcsr_bytes)
+        per_chunk = xp.where(use_csr, csr_bytes,
+                             xp.where(use_delta, dcsr_delta_bytes,
+                                      dcsr_bytes))
+    else:
+        use_csr = has_csr & (csr_raw_bytes < dcsr_raw_bytes)
+        use_delta = xp.zeros(use_csr.shape, bool)
+        per_chunk = xp.where(use_csr, csr_raw_bytes, dcsr_raw_bytes)
+    seek = xp.where(use_csr, cost_csr, cost_dcsr)
+    per_raw = xp.where(use_csr, csr_raw_bytes, dcsr_raw_bytes)
+    return use_csr, use_delta, seek, per_chunk, per_raw
+
+
+def mq_format_choice_one_dest(dcsr_ptr, has_csr, csr_bytes, dcsr_bytes,
+                              dcsr_delta_bytes, csr_raw_bytes,
+                              dcsr_raw_bytes, part_sizes, gamma, msgs_from,
+                              compression, chunk_active):
+    """Reduce :func:`mq_format_choice_matrix` over union-active chunks —
+    the multi-query twin of :func:`format_choice_one_dest`, same counter
+    keys."""
+    use_csr, use_delta, seek, per_chunk, per_raw = mq_format_choice_matrix(
         dcsr_ptr, has_csr, csr_bytes, dcsr_bytes, dcsr_delta_bytes,
         csr_raw_bytes, dcsr_raw_bytes, part_sizes, gamma, msgs_from,
         compression)

@@ -267,6 +267,153 @@ def block_csr_combine(row_ptr, tile_idx, tile_col, row_cnt,
 
 
 # ---------------------------------------------------------------------------
+# Multi-query value panels: [tile] -> [tile, Q] (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def _make_combine_kernel_mq(mode: str, identity: float, num_queries: int):
+    """Panel variant of :func:`_make_combine_kernel`: the tile refs are the
+    shared decoded chunk structure, the vector refs carry one column per
+    query ([T, Q] blocks), and the per-query column ops are unrolled so each
+    column runs exactly the single-vector kernel's op sequence (per-column
+    gemv / masked extremum) — bit-identical to Q separate kernel calls over
+    the same tiles, which is what makes "one decode feeds Q combines" safe
+    to assert in the parity suite."""
+    comb = {"min": jnp.minimum, "max": jnp.maximum}.get(mode)
+    nq = num_queries
+
+    def init(val_ref, hc_ref):
+        val_ref[...] = jnp.full_like(val_ref, identity)
+        hc_ref[...] = jnp.zeros_like(hc_ref)
+
+    if mode == "add":
+        def kernel(rp_ref, idx_ref, col_ref, cnt_ref,
+                   tv_ref, tc_ref, xv_ref, xc_ref, val_ref, hc_ref):
+            r, j = pl.program_id(0), pl.program_id(1)
+
+            @pl.when(j == 0)
+            def _():
+                init(val_ref, hc_ref)
+
+            @pl.when(j < cnt_ref[r])
+            def _():
+                for c in range(nq):
+                    val_ref[:, c] += jnp.dot(
+                        tv_ref[0], xv_ref[:, c],
+                        preferred_element_type=jnp.float32)
+                    hc_ref[:, c] += jnp.dot(
+                        tc_ref[0], xc_ref[:, c],
+                        preferred_element_type=jnp.float32)
+        return kernel
+
+    if mode == "add_b":
+        def kernel(rp_ref, idx_ref, col_ref, cnt_ref,
+                   tv_ref, tb_ref, tc_ref, xv_ref, xc_ref, val_ref, hc_ref):
+            r, j = pl.program_id(0), pl.program_id(1)
+
+            @pl.when(j == 0)
+            def _():
+                init(val_ref, hc_ref)
+
+            @pl.when(j < cnt_ref[r])
+            def _():
+                for c in range(nq):
+                    val_ref[:, c] += (
+                        jnp.dot(tv_ref[0], xv_ref[:, c],
+                                preferred_element_type=jnp.float32)
+                        + jnp.dot(tb_ref[0], xc_ref[:, c],
+                                  preferred_element_type=jnp.float32))
+                    hc_ref[:, c] += jnp.dot(
+                        tc_ref[0], xc_ref[:, c],
+                        preferred_element_type=jnp.float32)
+        return kernel
+
+    reduce = jnp.min if mode == "min" else jnp.max
+
+    def kernel(rp_ref, idx_ref, col_ref, cnt_ref,
+               tb_ref, tc_ref, xv_ref, xc_ref, val_ref, hc_ref):
+        r, j = pl.program_id(0), pl.program_id(1)
+
+        @pl.when(j == 0)
+        def _():
+            init(val_ref, hc_ref)
+
+        @pl.when(j < cnt_ref[r])
+        def _():
+            for c in range(nq):
+                contrib = tb_ref[0] + xv_ref[:, c][None, :]      # [T, T]
+                val_ref[:, c] = comb(val_ref[:, c],
+                                     reduce(contrib, axis=1))
+                hc_ref[:, c] += jnp.dot(tc_ref[0], xc_ref[:, c],
+                                        preferred_element_type=jnp.float32)
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "tile", "max_tiles_per_row",
+                                    "num_queries", "identity", "interpret"))
+def block_csr_combine_mq(row_ptr, tile_idx, tile_col, row_cnt,
+                         tiles_v, tiles_b, tiles_cnt, xv, xc, *,
+                         mode: str, tile: int, max_tiles_per_row: int,
+                         num_queries: int, identity: float = 0.0,
+                         interpret: bool | None = None):
+    """:func:`block_csr_combine` over Q-column value panels.
+
+    Same tile structure arguments; ``xv`` / ``xc`` are [C * T, Q] panels
+    (one slot-transformed message column + presence column per query) and
+    the outputs are [R * T, Q] panels.  The decoded tiles are read once per
+    grid step and combined against all Q columns, which is the multi-query
+    amortization at the kernel level; each column's result is bit-identical
+    to a single-query :func:`block_csr_combine` call with that column."""
+    if interpret is None:
+        interpret = default_interpret()
+    t = tile
+    nq = num_queries
+    n_rows = row_ptr.shape[0] - 1
+    n_slots = tile_idx.shape[0]
+
+    def slot(r, j, rp, idx, col, cnt):
+        return jnp.minimum(rp[r] + j, n_slots - 1)
+
+    tile_spec = pl.BlockSpec(
+        (1, t, t), lambda r, j, rp, idx, col, cnt:
+        (idx[slot(r, j, rp, idx, col, cnt)], 0, 0))
+    vec_spec = pl.BlockSpec(
+        (t, nq), lambda r, j, rp, idx, col, cnt:
+        (col[slot(r, j, rp, idx, col, cnt)], 0))
+    out_spec = pl.BlockSpec((t, nq),
+                            lambda r, j, rp, idx, col, cnt: (r, 0))
+
+    if mode == "add":
+        tensors = (tiles_v, tiles_cnt, xv, xc)
+        in_specs = [tile_spec, tile_spec, vec_spec, vec_spec]
+    elif mode == "add_b":
+        tensors = (tiles_v, tiles_b, tiles_cnt, xv, xc)
+        in_specs = [tile_spec, tile_spec, tile_spec, vec_spec, vec_spec]
+    elif mode in ("min", "max"):
+        tensors = (tiles_b, tiles_cnt, xv, xc)
+        in_specs = [tile_spec, tile_spec, vec_spec, vec_spec]
+    else:
+        raise ValueError(mode)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,      # row_ptr, tile_idx, tile_col, row_cnt
+        grid=(n_rows, max_tiles_per_row),
+        in_specs=in_specs,
+        out_specs=[out_spec, out_spec],
+    )
+
+    return pl.pallas_call(
+        _make_combine_kernel_mq(mode, identity, nq),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n_rows * t, nq), jnp.float32),
+                   jax.ShapeDtypeStruct((n_rows * t, nq), jnp.float32)],
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(row_ptr, tile_idx, tile_col, row_cnt, *tensors)
+
+
+# ---------------------------------------------------------------------------
 # Host-side structure builders
 # ---------------------------------------------------------------------------
 

@@ -216,6 +216,62 @@ def test_vertex_spill_batch_io(tmp_path):
     assert bm.shape == (p_cnt, v_max) and bm.all()
 
 
+def test_vertex_spill_num_queries_validation(tmp_path):
+    """A spill root records its Q; reopening with a different panel width
+    must fail with a clear ChunkStoreError, not oblique key errors."""
+    with pytest.raises(ChunkStoreError, match="num_queries"):
+        VertexSpill(str(tmp_path / "bad"), 2, 3, 4, 10, num_queries=0)
+    root = str(tmp_path / "q2")
+    VertexSpill(root, 2, 3, 4, 10, num_queries=2)
+    with pytest.raises(ChunkStoreError, match="num_queries=2") as ei:
+        VertexSpill(root, 2, 3, 4, 10, num_queries=3)
+    assert "fresh spill root" in str(ei.value)
+    VertexSpill(root, 2, 3, 4, 10, num_queries=2)   # matching reopen OK
+
+
+def test_vertex_spill_per_query_io_accounting(tmp_path):
+    """Multi-query layout: ``keys=`` restricts reads (and bytes) to one
+    query's ``{key}@q{j}`` columns, ``name=`` gives each query its own
+    measured bitmap file — query j pays exactly a solo run's bytes."""
+    p_cnt, b_cnt, bs, v_max = 2, 3, 4, 10
+    spill = VertexSpill(str(tmp_path), p_cnt, b_cnt, bs, v_max,
+                        num_queries=2)
+    rng = np.random.default_rng(1)
+    state = {f"x@q{j}": rng.random((p_cnt, v_max)).astype(np.float32)
+             for j in range(2)}
+    spill.load(state)
+    assert spill.arrays_bytes(["x@q0"]) == 4
+    assert spill.arrays_bytes() == 8
+
+    mask = np.zeros((p_cnt, b_cnt), bool)
+    mask[0, 1] = True
+    got = spill.read(mask, keys=["x@q1"])
+    assert set(got) == {"x@q1"}
+    assert spill.bytes_read == bs * 4                # one column array only
+    np.testing.assert_array_equal(got["x@q1"][0, bs:2 * bs],
+                                  state["x@q1"][0, bs:2 * bs])
+
+    spill.reset_io_counters()
+    row = (v_max + 7) // 8
+    spill.write_bitmap(np.ones((p_cnt, v_max), bool), name="active_q1")
+    assert spill.bytes_written == p_cnt * row
+    assert spill.read_bitmap(name="active_q1").all()
+    assert spill.read_bitmap(name="active_q0") is None  # fresh file
+    assert spill.bytes_read == 2 * p_cnt * row       # both reads measured
+
+    # per-query merge_write touches only the requested columns' bytes
+    spill.reset_io_counters()
+    pad = spill.read(mask, keys=["x@q0"])
+    upd = {"x@q0": np.full((p_cnt, v_max), 7.0, np.float32)}
+    vm = np.zeros((p_cnt, v_max), bool)
+    vm[0, bs:2 * bs] = True
+    spill.merge_write(pad, upd, vm, mask)
+    assert spill.bytes_written == bs * 4
+    assert (spill.state_views()["x@q0"][0, bs:2 * bs] == 7.0).all()
+    np.testing.assert_array_equal(spill.state_views()["x@q1"],
+                                  state["x@q1"])
+
+
 # ---------------------------------------------------------------------------
 # OOC executor parity: all four algorithms, values + counters + measured I/O
 # ---------------------------------------------------------------------------
