@@ -68,6 +68,66 @@ def bench_record(benchmark: str, config: str, metric: str, value,
                 value=float(value), units=units)
 
 
+_SHARDMAP_PROBE_CODE = """
+import json, os, sys
+cfg = json.loads(sys.argv[1])
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=%d" % cfg["p"])
+import jax
+import numpy as np
+from repro.core import (make_spec, build_dist_graph, build_formats, Engine,
+                        EngineConfig)
+from repro.core import algorithms as alg
+from repro.data.graphs import rmat_graph
+
+g = rmat_graph(cfg["scale"], cfg["edge_factor"], seed=cfg["seed"],
+               weighted=True)
+spec = make_spec(g, num_partitions=cfg["p"], batch_size=cfg["batch_size"])
+dg = build_dist_graph(g, spec)
+fm = build_formats(dg)
+mesh = jax.make_mesh((cfg["p"],), ("part",))
+src = int(np.argmax(g.out_degrees()))
+out = {}
+for algo in cfg["algos"]:
+    eng = Engine(dg, fm, mesh=mesh, axis="part")
+    if algo == "pagerank":
+        _, st = alg.pagerank(eng, 5)
+    elif algo == "bfs":
+        _, st = alg.bfs(eng, src)
+    elif algo == "sssp":
+        _, st = alg.sssp(eng, src)
+    else:
+        raise ValueError(algo)
+    out[algo] = {k: float(v) for k, v in st.counters.items()}
+print("PROBE_JSON:" + json.dumps(out))
+"""
+
+
+def shardmap_payload_probe(scale: int, p: int, algos=("pagerank", "bfs"),
+                           edge_factor=16, seed=7, batch_size=64,
+                           timeout=1800) -> dict:
+    """Run SHARD_MAP algorithms on ``p`` forced host devices in a child
+    process (the main process keeps seeing one device) and return
+    ``{algo: counters}``.  The engine is built with defaults, so the
+    physical sparse exchange arbitrates per iteration (DESIGN.md §12) and
+    the counters carry the dense-vs-compacted payload-element pair."""
+    import json
+    import subprocess
+    cfg = dict(scale=scale, p=p, algos=list(algos), edge_factor=edge_factor,
+               seed=seed, batch_size=batch_size)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
+    r = subprocess.run(
+        [sys.executable, "-c", _SHARDMAP_PROBE_CODE, json.dumps(cfg)],
+        capture_output=True, text=True, env=env, cwd=repo, timeout=timeout)
+    for line in r.stdout.splitlines():
+        if line.startswith("PROBE_JSON:"):
+            return json.loads(line[len("PROBE_JSON:"):])
+    raise RuntimeError(
+        f"shardmap probe failed (p={p}, scale={scale}):\n"
+        f"{r.stdout[-1000:]}\n{r.stderr[-3000:]}")
+
+
 def write_bench_json(filename: str, records: list) -> str:
     """Write a perf-trajectory file (list of :func:`bench_record` dicts).
 
@@ -80,3 +140,23 @@ def write_bench_json(filename: str, records: list) -> str:
     path = os.path.join(out_dir, filename)
     atomic_write_json(path, records)
     return path
+
+
+def merge_bench_json(filename: str, records: list) -> str:
+    """Like :func:`write_bench_json`, but benchmarks that share a
+    trajectory file (table7 + fig5 both contribute to
+    ``BENCH_shardmap.json``) replace only their own ``benchmark`` rows and
+    keep everyone else's."""
+    import json
+    out_dir = os.environ.get("REPRO_BENCH_DIR", ".")
+    path = os.path.join(out_dir, filename)
+    mine = {r["benchmark"] for r in records}
+    kept = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                kept = [r for r in json.load(f)
+                        if r.get("benchmark") not in mine]
+        except (json.JSONDecodeError, OSError):
+            kept = []
+    return write_bench_json(filename, kept + records)

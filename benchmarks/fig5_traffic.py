@@ -29,8 +29,8 @@ import tempfile
 import numpy as np
 
 from benchmarks.engines_common import (
-    bench_graph, bench_record, build_engine, csv_row, timed,
-    write_bench_json,
+    bench_graph, bench_record, build_engine, csv_row, merge_bench_json,
+    shardmap_payload_probe, timed, write_bench_json,
 )
 from repro.core import (
     ChunkStore, Engine, EngineConfig, accumulate_counters, storage_summary,
@@ -41,13 +41,16 @@ from repro.core.engine import DIST_MEASURED_PAIRS, MEASURED_PAIRS
 
 
 def main(scale=11) -> list[str]:
-    sections = os.environ.get("REPRO_FIG5_SECTIONS", "traffic,serving")
+    sections = os.environ.get("REPRO_FIG5_SECTIONS",
+                              "traffic,serving,shardmap")
     wanted = {s.strip() for s in sections.split(",") if s.strip()}
     rows = []
     if "traffic" in wanted:
         rows += _traffic_section(scale)
     if "serving" in wanted:
         rows += _serving_section(scale)
+    if "shardmap" in wanted:
+        rows += _shardmap_section(scale)
     return rows
 
 
@@ -249,6 +252,42 @@ def _serving_section(scale=11) -> list[str]:
     assert ratio < 0.5, (
         f"serving amortization regressed: bytes/query(Q=8) = {ratio:.3f}x "
         f"bytes/query(Q=1), expected < 0.5x")
+    return rows
+
+
+def _shardmap_section(scale=11) -> list[str]:
+    """Physical sparse exchange on the 8-device mesh (DESIGN.md §12):
+    dense-vs-compacted payload elements actually moved by the SHARD_MAP
+    collective, per algorithm.  PageRank's all-active frontier arbitrates
+    the dense slab every iteration (pair == dense); BFS's selective
+    frontiers must ship strictly fewer elements compacted.  Writes the
+    fig5 rows of BENCH_shardmap.json (the CI gate re-checks the JSON)."""
+    p = 8
+    rows, records = [], []
+    counters = shardmap_payload_probe(scale, p, algos=("pagerank", "bfs"))
+    for algo, c in counters.items():
+        dense, comp = c["net_payload_elems_dense"], c["net_payload_elems"]
+        assert comp <= dense, (algo, comp, dense)
+        assert abs(c["measured_net_payload_elems"] - comp) <= 0.5, (algo, c)
+        if algo == "bfs":
+            assert comp < dense, (
+                "shard_map compaction never beat dense on BFS")
+            assert c["exchange_compacted_iters"] >= 1, c
+        rows.append(csv_row(
+            f"f5/shardmap/{algo}", 0.0,
+            f"payload_elems={comp:.0f};payload_elems_dense={dense:.0f};"
+            f"compacted_iters={c['exchange_compacted_iters']:.0f};"
+            f"dense_iters={c['exchange_dense_iters']:.0f}"))
+        for metric, val, units in (
+                ("payload_elems", comp, "elems"),
+                ("payload_elems_dense", dense, "elems"),
+                ("compacted_iters", c["exchange_compacted_iters"],
+                 "iters"),
+                ("dense_iters", c["exchange_dense_iters"], "iters")):
+            records.append(bench_record(
+                "fig5_shardmap", f"{algo}/p{p}", metric, val, units))
+    path = merge_bench_json("BENCH_shardmap.json", records)
+    rows.append(csv_row("f5/shardmap/bench_json", 0.0, f"path={path}"))
     return rows
 
 

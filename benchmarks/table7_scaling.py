@@ -33,7 +33,8 @@ import tempfile
 import numpy as np
 
 from benchmarks.engines_common import (
-    bench_graph, bench_record, csv_row, timed, write_bench_json,
+    bench_graph, bench_record, csv_row, merge_bench_json,
+    shardmap_payload_probe, timed, write_bench_json,
 )
 from repro.core import (
     ChunkStore, Engine, EngineConfig, build_dist_graph, build_formats,
@@ -156,6 +157,34 @@ def main(scale=10) -> list[str]:
             rec(f"dist_ooc_w{w}", "device_decoded_chunks",
                 st.counters.get("measured_chunks_device_decoded", 0.0),
                 "chunks")
+
+    # shard_map physical exchange: dense-vs-compacted payload elements as
+    # the mesh widens (BFS — selective frontiers are where compaction
+    # pays; run on p forced host devices in a child so this process keeps
+    # seeing one device).  Compacted must never exceed the dense slab and
+    # must be strictly below it on at least one selective iteration.
+    sm_records = []
+    for p in (2, 4, 8):
+        c = shardmap_payload_probe(scale, p, algos=("bfs",))["bfs"]
+        dense, comp = c["net_payload_elems_dense"], c["net_payload_elems"]
+        assert comp <= dense, (p, comp, dense)
+        assert comp < dense, (
+            f"shard_map compaction never beat dense at p={p}")
+        assert abs(c["measured_net_payload_elems"] - comp) <= 0.5, (p, c)
+        rows.append(csv_row(
+            f"t7/shardmap/p{p}", 0.0,
+            f"payload_elems={comp:.0f};payload_elems_dense={dense:.0f};"
+            f"compacted_iters={c['exchange_compacted_iters']:.0f};"
+            f"dense_iters={c['exchange_dense_iters']:.0f}"))
+        for metric, val in (("payload_elems", comp),
+                            ("payload_elems_dense", dense),
+                            ("compacted_iters",
+                             c["exchange_compacted_iters"])):
+            sm_records.append(bench_record(
+                "table7_shardmap", f"bfs/p{p}", metric, val,
+                "elems" if "elems" in metric else "iters"))
+    sm_path = merge_bench_json("BENCH_shardmap.json", sm_records)
+    rows.append(csv_row("t7/shardmap/bench_json", 0.0, f"path={sm_path}"))
 
     path = write_bench_json("BENCH_scaling.json", records)
     rows.append(csv_row("t7/bench_json", 0.0, f"path={path}"))

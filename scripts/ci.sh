@@ -212,4 +212,58 @@ then
 fi
 suite_timer_end "serving amortization gate + BENCH_serving.json"
 
+# The shard_map sparse-exchange parity suite (DESIGN.md §12): compacted
+# collectives' padding/overflow contracts, compaction + scatter-back ==
+# the dense filtered exchange bit-for-bit, and the
+# physical_sparse_exchange knob bit-identical to the dense slab for all
+# four algorithms + multi-BFS with the measured==model payload audit.
+# Standalone for the baseline-can't-hide-it reason above; 8 forced host
+# devices so the collectives run on a real (emulated) mesh.
+suite_timer_start
+if ! XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
+    tests/test_shardmap_exchange.py; then
+    echo "CI FAIL: shard_map sparse-exchange parity suite" \
+         "(tests/test_shardmap_exchange.py)" >&2
+    exit 1
+fi
+if ! python -c "import hypothesis" 2>/dev/null; then
+    echo "CI WARNING: hypothesis not installed —" \
+         "tests/test_sparse_collectives.py's compacted round-trip" \
+         "property suite was SKIPPED (its deterministic twins in" \
+         "tests/test_shardmap_exchange.py did run)" >&2
+fi
+suite_timer_end "shard_map sparse-exchange parity suite"
+
+# The physical-exchange payload gate (DESIGN.md §12): run fig5's shardmap
+# section (reduced scale) and re-check from BENCH_shardmap.json that the
+# compacted collective shipped strictly fewer payload elements than the
+# dense slab on BFS while never exceeding it on PageRank.
+suite_timer_start
+if ! REPRO_FIG5_SECTIONS=shardmap REPRO_BENCH_DIR="$SCRATCH/shardmap" \
+    PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
+    python -c "from benchmarks import fig5_traffic; fig5_traffic.main(scale=9)"; then
+    echo "CI FAIL: fig5 shardmap section (benchmarks/fig5_traffic.py)" >&2
+    exit 1
+fi
+if ! python - "$SCRATCH/shardmap/BENCH_shardmap.json" <<'EOF'
+import json, sys
+recs = json.load(open(sys.argv[1]))
+vals = {(r["config"], r["metric"]): r["value"] for r in recs
+        if r["benchmark"] == "fig5_shardmap"}
+bfs, bfs_d = vals[("bfs/p8", "payload_elems")], \
+    vals[("bfs/p8", "payload_elems_dense")]
+pr, pr_d = vals[("pagerank/p8", "payload_elems")], \
+    vals[("pagerank/p8", "payload_elems_dense")]
+print(f"shardmap gate: bfs {bfs:.0f}/{bfs_d:.0f} elems,"
+      f" pagerank {pr:.0f}/{pr_d:.0f} elems")
+sys.exit(0 if bfs < bfs_d and pr <= pr_d else 1)
+EOF
+then
+    echo "CI FAIL: physical-exchange payload gate —" \
+         "compacted did not beat the dense slab on BFS" >&2
+    exit 1
+fi
+suite_timer_end "physical-exchange payload gate + BENCH_shardmap.json"
+
 echo "CI OK: no regressions vs baseline ($(wc -l < "$CURRENT") known failures)"

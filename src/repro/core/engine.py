@@ -203,6 +203,25 @@ class EngineConfig:
     ``kernels/csr_spmv.py``); uncompressed stores always decode on the
     host (their payload is a plain memcpy, nothing to decode)."""
 
+    physical_sparse_exchange: bool | None = None
+    """SHARD_MAP only: realize the adaptive wire physically (DESIGN.md
+    §12).  Each iteration derives a per-peer capacity bound from the same
+    ``phases.routing_counts`` structure that prices the wire (a ``pmax``'d
+    max over per-(p, q) live counts, rounded to a pow2 bucket so
+    recompilation stays bounded) and arbitrates — with the same cost
+    comparison ``exchange.choose_wire_format`` uses — between a compacted
+    ``all_to_all`` (``capacity`` (value, source-index) pairs per peer;
+    the multi-query panel adds per-query presence flags over ONE shared
+    index stream) and the legacy dense slab.  A ``pmax``'d overflow check
+    falls back to the dense path in-graph if the live counts ever exceed
+    the capacity bucket, so results are bit-identical to the dense
+    exchange either way; the chosen path's payload-element volume is
+    reported as the ``net_payload_elems`` / ``measured_net_payload_elems``
+    counter pair and cross-checked under ``verify_io``.  ``None`` (auto)
+    enables it exactly when a mesh is passed; ``True`` without a mesh is
+    an error (the other executors have no in-mesh collective to
+    realize)."""
+
     num_queries: int = 1
     """Q for the multi-query serving surface (``process_edges_multi`` /
     ``process_vertices_multi``, DESIGN.md §11): vertex state carries a
@@ -223,6 +242,14 @@ COUNTER_KEYS = (
     "edge_read_bytes", "edge_read_bytes_raw",
     "vertex_read_bytes", "vertex_write_bytes",
     "msg_disk_bytes", "seek_cost",
+    # SHARD_MAP physical wire (DESIGN.md §12; zero on the executors whose
+    # exchange is not an in-mesh collective): payload ELEMENTS the chosen
+    # collective moves (model), its measured twin derived from the shipped
+    # array shapes, the dense-slab reference volume of the same
+    # iterations, and how many iterations each physical path carried.
+    "net_payload_elems", "net_payload_elems_dense",
+    "measured_net_payload_elems",
+    "exchange_compacted_iters", "exchange_dense_iters",
 )
 
 # Measured twins of the modeled I/O counters, reported by the OOC/dist_ooc
@@ -254,6 +281,13 @@ DIST_MEASURED_KEYS = (
 
 DIST_MEASURED_PAIRS = MEASURED_PAIRS + (
     ("measured_net_bytes", "net_bytes"),
+)
+
+# The SHARD_MAP executor's wire audit (DESIGN.md §12): the physical
+# collective's payload-element volume must equal the model that arbitrated
+# it, checked after every distributed ProcessEdges when verify_io is on.
+SHARDED_MEASURED_PAIRS = (
+    ("measured_net_payload_elems", "net_payload_elems"),
 )
 
 
@@ -356,6 +390,19 @@ class Engine:
                                   and not default_interpret())
         else:
             self.device_decode = bool(config.device_decode)
+        # Resolve the physical_sparse_exchange knob (docstring on
+        # EngineConfig): auto means "on exactly when there is a mesh for
+        # the collective to run over".
+        if config.physical_sparse_exchange and not self._distributed:
+            raise ValueError(
+                "physical_sparse_exchange=True requires the SHARD_MAP "
+                "executor (pass mesh=...): the other executors have no "
+                "in-mesh collective to realize")
+        if config.physical_sparse_exchange is None:
+            self.physical_sparse_exchange = self._distributed
+        else:
+            self.physical_sparse_exchange = bool(
+                config.physical_sparse_exchange)
         if self._ooc or self._dist_ooc:
             name = config.executor
             if self._distributed:
@@ -558,13 +605,15 @@ class Engine:
             dict(send_s=0.0, recv_s=0.0, pv_s=0.0)
             for _ in range(self.config.num_workers)]
 
-    def _check_measured(self, counters: dict) -> None:
+    def _check_measured(self, counters: dict, pairs=None) -> None:
         """Cross-check measured storage (and, for dist_ooc, network)
         traffic against the analytic model (the fully-out-of-core claim,
-        enforced every call)."""
+        enforced every call).  ``pairs`` overrides the executor's default
+        pair set — the SHARD_MAP paths pass ``SHARDED_MEASURED_PAIRS`` to
+        audit the physical collective's payload-element volume."""
         if not self.config.verify_io:
             return
-        for mk, ak in self._measured_pairs:
+        for mk, ak in (self._measured_pairs if pairs is None else pairs):
             if abs(float(counters[mk]) - float(counters[ak])) > 0.5:
                 raise RuntimeError(
                     f"{self.config.executor} measured/model I/O mismatch: "
@@ -820,7 +869,9 @@ class Engine:
             if cache_key is not None:
                 self._pe_cache[cache_key] = fn
         bt = self._block_garrs if backend == "block_csr" else None
-        return fn(state, active, self._garrs, bt, vals)
+        out = fn(state, active, self._garrs, bt, vals)
+        self._check_measured(out[3], pairs=SHARDED_MEASURED_PAIRS)
+        return out
 
     def _ooc_process_edges(self, state, signal_fn, slot_fn, monoid,
                            apply_fn, active, backend):
@@ -925,7 +976,9 @@ class Engine:
                 active is not None)
             if cache_key is not None:
                 self._pe_cache[cache_key] = fn
-        return fn(state, active, self._garrs)
+        out = fn(state, active, self._garrs)
+        self._check_measured(out[3], pairs=SHARDED_MEASURED_PAIRS)
+        return out
 
     def _mq_ooc_process_edges(self, state, signal_fn, slot_fn, monoid,
                               apply_fn, active, backend):

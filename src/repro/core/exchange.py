@@ -156,6 +156,29 @@ def choose_wire_format(count: int, v_max: int, msg_bytes: int,
     return best
 
 
+def choose_physical_exchange(capacity: int, v_max: int, msg_bytes: int,
+                             nq: int = 1) -> bool:
+    """Arbitrate the SHARD_MAP physical wire (DESIGN.md §12): True means
+    ship the compacted collective this iteration, False the dense slab.
+
+    This is the SAME cost comparison :func:`choose_wire_format` runs for
+    the serialized wire, applied to the collective's per-peer volume: a
+    compacted exchange is a pairs batch of ``capacity`` entries, the
+    dense exchange is a slab, so the solo decision is literally
+    ``choose_wire_format(capacity, ...) == FMT_PAIRS`` (the compressed
+    encodings don't apply — the collective ships raw arrays, not byte
+    streams).  The multi-query panel applies the identical primitives per
+    value column: the shared index stream is paid once
+    (:func:`pair_batch_bytes` minus its value bytes) and each of the Q
+    columns adds ``capacity`` values + presence flags against its own
+    dense slab."""
+    if nq <= 1:
+        return choose_wire_format(capacity, v_max, msg_bytes) == FMT_PAIRS
+    comp = (capacity * float(_IDX_BYTES)
+            + nq * capacity * float(msg_bytes + 1))
+    return comp < nq * slab_batch_bytes(v_max, msg_bytes)
+
+
 # ---------------------------------------------------------------------------
 # Physical encode / decode
 # ---------------------------------------------------------------------------

@@ -61,6 +61,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import codec
 from repro.core import exchange as exchange_mod
 from repro.core import phases
+from repro.core import sparse_collectives
 from repro.core.chunkstore import (
     REP_CSR, REP_DCSR, REP_DCSR_DELTA, ChunkPrefetcher, HBMChunkSource,
     ScheduleMark,
@@ -365,6 +366,72 @@ def make_local_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
 # SHARD_MAP executor (partition axis = mesh axis, all_to_all exchange)
 # ---------------------------------------------------------------------------
 
+def _dense_exchange(msg_row, sendmask, axis):
+    """The legacy physical wire: one dense [P, V] slab per peer (values +
+    int8 presence).  Returns (recv_msg [P, V], recv_mask [P, V],
+    measured payload elements this shard shipped to its P-1 peers)."""
+    p_cnt, v = sendmask.shape
+    send_msg = jnp.where(sendmask, msg_row[None, :], 0)          # [P, V]
+    recv_msg = jax.lax.all_to_all(send_msg, axis, 0, 0, tiled=True)
+    recv_mask = jax.lax.all_to_all(
+        sendmask.astype(jnp.int8), axis, 0, 0, tiled=True) > 0
+    measured = jnp.float32((p_cnt - 1) * (send_msg[0].size
+                                          + sendmask[0].size))
+    return recv_msg, recv_mask, measured
+
+
+def _compacted_exchange(msg_row, sendmask, capacity, axis):
+    """The compacted physical wire (DESIGN.md §12): ≤ ``capacity``
+    (value, source-index) pairs per peer, re-densified on the receive
+    side so phases 3-4 see the exact dense-slab layout."""
+    p_cnt, v = sendmask.shape
+    recv, recv_idx, _ = sparse_collectives.masked_compacted_all_to_all(
+        msg_row, sendmask, capacity, axis)
+    recv_msg, recv_mask = sparse_collectives.compacted_scatter_back(
+        recv, recv_idx, v)
+    measured = jnp.float32((p_cnt - 1) * (recv[0].size
+                                          + recv_idx[0].size))
+    return recv_msg, recv_mask, measured
+
+
+def make_sharded_probe(engine, has_active, garrs_keys, nq=1):
+    """Capacity probe for the physical sparse exchange: the ``pmax``'d
+    max per-(p, q) live count of this iteration's send decision (for
+    multi-query, of the UNION send mask — the panel's capacity bound).
+
+    The compacted collective's ``capacity`` is a static shape, so it must
+    be known before the step traces; this tiny shard_map pass re-runs
+    ONLY the phase-2 filter (no signal values, no combine) and returns
+    the bound the host buckets to a pow2 capacity.  Deterministic — the
+    jitted step recomputes the identical sendmask, so the bound is exact
+    and the in-step overflow fallback can never fire from probe skew."""
+    cfg = engine.config
+    mesh, axis = engine.mesh, engine.axis
+
+    def pstep(active, garrs):
+        vertex_valid = garrs["vertex_valid"]                     # [1, V]
+        union_sm = None
+        for j in range(nq):
+            if active is None:
+                amask = vertex_valid
+            elif nq == 1:
+                amask = active & vertex_valid
+            else:
+                amask = active[..., j] & vertex_valid
+            m_p = jnp.sum(amask, dtype=jnp.float32)
+            sm = phases.filter_sendmask(
+                amask[0], garrs["need"][0], garrs["need_counts"][0],
+                m_p, cfg)
+            union_sm = sm if union_sm is None else (union_sm | sm)
+        cmax = jnp.max(phases.routing_counts(union_sm))
+        return jax.lax.pmax(cmax, axis)
+
+    in_specs = (P(axis) if has_active else None,
+                {k: P(axis) for k in garrs_keys})
+    return jax.jit(shard_map_compat(pstep, mesh=mesh, in_specs=in_specs,
+                                    out_specs=P()))
+
+
 def make_sharded_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
                     mode_meta, has_active):
     cfg = engine.config
@@ -378,13 +445,14 @@ def make_sharded_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
               if backend == "block_csr" else None)
     interpret = default_interpret()
     counter_keys = engine.counter_keys
+    physical = engine.physical_sparse_exchange
     dp = functools.partial(
         _dest_phases, slot_fn=slot_fn, monoid=monoid, spec=spec, cfg=cfg,
         backend=backend, part_sizes=part_sizes, gamma=gamma,
         mode_meta=mode_meta, rb_map=rb_map, bt_static=bt_static,
         interpret=interpret)
 
-    def step(state, active, garrs, bt, vals):
+    def step(state, active, garrs, bt, vals, wire_capacity=None):
         counters = _zero_counters(counter_keys)
         vertex_valid = garrs["vertex_valid"]               # [1, V]
         amask = vertex_valid if active is None else (active & vertex_valid)
@@ -414,10 +482,39 @@ def make_sharded_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
                                    gap_bytes=gapb, uniform=unib))
         counters["net_bytes_nofilter"] = ((p_cnt - 1) * m_p
                                           * (cfg.msg_bytes + 4))
-        send_msg = jnp.where(sendmask, msg[0][None, :], 0)   # [P, V]
-        recv_msg = jax.lax.all_to_all(send_msg, axis, 0, 0, tiled=True)
-        recv_mask = jax.lax.all_to_all(
-            sendmask.astype(jnp.int8), axis, 0, 0, tiled=True) > 0
+        # Physical wire (DESIGN.md §12): dense slab, or the compacted
+        # collective the host arbitrated for this iteration's capacity
+        # bucket — with an in-graph overflow fallback to dense (the
+        # pmax'd predicate is identical on every shard, so the branch is
+        # uniform and the collectives stay in lockstep).  Either way the
+        # combine sees the exact dense [P, V] layout, so results are
+        # bit-identical to the legacy exchange.
+        is0 = (my == 0).astype(jnp.float32)
+        dense_elems = jnp.float32(
+            phases.net_payload_elems_model(p_cnt, spec.v_max))
+        counters["net_payload_elems_dense"] = dense_elems
+        if wire_capacity is None:
+            recv_msg, recv_mask, measured = _dense_exchange(
+                msg[0], sendmask, axis)
+            counters["net_payload_elems"] = dense_elems
+            counters["measured_net_payload_elems"] = measured
+            counters["exchange_dense_iters"] = is0
+        else:
+            overflow = jax.lax.pmax(jnp.max(counts), axis) > wire_capacity
+            recv_msg, recv_mask, measured = jax.lax.cond(
+                overflow,
+                lambda _: _dense_exchange(msg[0], sendmask, axis),
+                lambda _: _compacted_exchange(msg[0], sendmask,
+                                              wire_capacity, axis),
+                None)
+            comp_elems = jnp.float32(phases.net_payload_elems_model(
+                p_cnt, spec.v_max, capacity=wire_capacity))
+            ovf_f = overflow.astype(jnp.float32)
+            counters["net_payload_elems"] = jnp.where(
+                overflow, dense_elems, comp_elems)
+            counters["measured_net_payload_elems"] = measured
+            counters["exchange_compacted_iters"] = (1.0 - ovf_f) * is0
+            counters["exchange_dense_iters"] = ovf_f * is0
 
         # Phases 3 + 4 on this shard's destination view (in-HBM ChunkSource)
         d = {k: v[0] for k, v in HBMChunkSource.dest_arrays(garrs).items()}
@@ -443,10 +540,22 @@ def make_sharded_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
         return new_state, new_active, total, counters
 
     jitted = {}
+    probe = []
 
     def run_sharded(state, active, garrs, bt, vals):
+        wire_capacity = None
+        if physical:
+            if not probe:
+                probe.append(make_sharded_probe(engine, has_active,
+                                                tuple(garrs)))
+            cap = sparse_collectives.capacity_bucket(
+                float(probe[0](active, garrs)))
+            if exchange_mod.choose_physical_exchange(cap, spec.v_max,
+                                                     cfg.msg_bytes):
+                wire_capacity = cap
         skey = (tuple(sorted(state)), bt is None,
-                None if vals is None else tuple(sorted(vals)))
+                None if vals is None else tuple(sorted(vals)),
+                wire_capacity)
         fn = jitted.get(skey)
         if fn is None:
             in_specs = ({k: P(axis) for k in state},
@@ -456,9 +565,9 @@ def make_sharded_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
                         None if vals is None else {k: P(axis) for k in vals})
             out_specs = ({k: P(axis) for k in state}, P(axis), P(),
                          {k: P() for k in counter_keys})
-            fn = jax.jit(shard_map_compat(step, mesh=mesh,
-                                          in_specs=in_specs,
-                                          out_specs=out_specs))
+            fn = jax.jit(shard_map_compat(
+                functools.partial(step, wire_capacity=wire_capacity),
+                mesh=mesh, in_specs=in_specs, out_specs=out_specs))
             jitted[skey] = fn
         return fn(state, active, garrs, bt, vals)
     return run_sharded

@@ -185,6 +185,29 @@ def mq_net_bytes_model(counts, union_count, cross, v_max, msg_bytes,
     return net, raw
 
 
+def net_payload_elems_model(p_cnt: int, v_max: int, capacity=None,
+                            nq: int = 1) -> float:
+    """Physical payload elements ONE shard ships across the interconnect
+    in a SHARD_MAP exchange (DESIGN.md §12) — array elements, not bytes,
+    because the collective moves typed arrays rather than byte streams.
+    Summed over shards (the executors ``psum`` it) this is the global
+    wire volume the ``measured_net_payload_elems`` counter must equal.
+
+    Dense slab (``capacity=None``): each of the p_cnt - 1 peers gets a
+    v_max value column plus a v_max presence column, per query.
+    Compacted: each peer gets ``capacity`` values per query, ONE shared
+    ``capacity`` source-index stream, and (panels only, nq > 1)
+    ``capacity`` presence flags per query — solo compacted needs no
+    presence column because ``recv_src_index == -1`` IS the padding
+    signal.  The same formula prices the model counter and sizes the
+    physical arrays, which is what puts this pair under the verify_io
+    audit."""
+    if capacity is None:
+        return float((p_cnt - 1) * 2 * v_max * nq)
+    per_slot = 2 if nq == 1 else 2 * nq + 1
+    return float((p_cnt - 1) * capacity * per_slot)
+
+
 # ---------------------------------------------------------------------------
 # Phase 3: intra-node dispatch over the dispatching graph (paper §4.2)
 # ---------------------------------------------------------------------------

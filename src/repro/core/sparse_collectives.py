@@ -182,25 +182,62 @@ def filtered_all_to_all(payload: jnp.ndarray, send_mask: jnp.ndarray,
     return recv, rmask
 
 
+def _axis_size(axis: str) -> int:
+    """Mesh-axis length inside shard_map.  ``jax.lax.axis_size`` does not
+    exist on every jax this repo supports (absent in 0.4.x); ``psum(1)``
+    is the portable spelling and folds to a constant at trace time."""
+    size = getattr(jax.lax, "axis_size", None)
+    if size is not None:
+        return size(axis)
+    return jax.lax.psum(1, axis)
+
+
+def capacity_bucket(count: int, floor: int = 8) -> int:
+    """Round a live-count bound up to a power-of-two capacity bucket.
+
+    The compacted collectives take ``capacity`` as a static shape, so a
+    raw per-iteration maximum would recompile the exchange for every new
+    frontier size.  Bucketing to pow2 (same idiom as the wire decoder's
+    scratch buckets in :mod:`repro.core.exchange`) bounds the number of
+    compiled variants at ``log2(v_max)`` per algorithm while never
+    undershooting the true bound — so the overflow fallback below is a
+    hardening backstop, not a steady-state path."""
+    n = max(int(count), 1)
+    if n <= floor:
+        return floor
+    return 1 << (n - 1).bit_length()
+
+
 def compacted_all_to_all(payload: jnp.ndarray, dest: jnp.ndarray,
                          capacity: int, axis: str):
     """DCSR-analogue exchange: compact live entries per destination before
     sending, bounded by ``capacity`` per peer (the |L_ij| bound).
 
     payload: [V, D]; dest: [V] int32 destination shard (or -1 = inactive).
-    Returns (recv [P, capacity, D], recv_src_index [P, capacity] int32 local
-    index on the sender, -1 = padding).  Wire bytes drop from P*V*D to
-    P*capacity*D — this is what makes filtering show up in the collective
-    roofline term rather than only in counters.
+    Returns (recv [P, capacity, D], recv_src_index [P, capacity] int32,
+    overflow bool scalar).  Wire bytes drop from P*V*D to P*capacity*D —
+    this is what makes filtering show up in the collective roofline term
+    rather than only in counters.
+
+    Padding contract: slots a peer did not fill carry ``recv_src_index ==
+    -1`` and **zero** payload rows; consumers must treat ``recv_src_index
+    >= 0`` as the only validity signal (never read payload rows at
+    padding slots as data — a live entry may legitimately carry value 0).
+    ``overflow`` is the ``pmax``'d live-count check: True (identically on
+    every shard) iff ANY (source, destination) pair had more than
+    ``capacity`` live entries, in which case entries past ``capacity``
+    were dropped and the caller must fall back to a dense exchange
+    (:func:`filtered_all_to_all`) rather than use the truncated result.
     """
-    p = jax.lax.axis_size(axis)
+    p = _axis_size(axis)
     v, d = payload.shape
+    dest0 = jnp.maximum(dest, 0)
     # stable position of each entry within its destination's send buffer
     onehot = jax.nn.one_hot(dest, p, dtype=jnp.int32)            # [V, P]
     pos = jnp.cumsum(onehot, axis=0) - 1                         # [V, P]
-    pos = jnp.take_along_axis(pos, jnp.clip(dest, 0)[:, None], 1)[:, 0]
+    pos = jnp.take_along_axis(pos, dest0[:, None], 1)[:, 0]
     ok = (dest >= 0) & (pos < capacity)
-    slot = jnp.where(ok, jnp.clip(dest, 0) * capacity + pos, p * capacity)
+    slot = jnp.where(ok, dest0 * capacity + pos, p * capacity)
     buf = jnp.zeros((p * capacity, d), payload.dtype)
     buf = buf.at[slot].add(jnp.where(ok[:, None], payload, 0), mode="drop")
     idx = jnp.full((p * capacity,), -1, jnp.int32)
@@ -208,9 +245,145 @@ def compacted_all_to_all(payload: jnp.ndarray, dest: jnp.ndarray,
                            mode="drop")
     buf = buf.reshape(p, capacity, d)
     idx = idx.reshape(p, capacity)
+    counts = jnp.sum(onehot, axis=0)                             # [P]
+    overflow = jax.lax.pmax(jnp.max(counts), axis) > capacity
     recv = jax.lax.all_to_all(buf, axis, 0, 0, tiled=False)
     recv_idx = jax.lax.all_to_all(idx, axis, 0, 0, tiled=False)
-    return recv, recv_idx
+    return recv, recv_idx, overflow
+
+
+def masked_compacted_all_to_all(payload: jnp.ndarray,
+                                send_mask: jnp.ndarray,
+                                capacity: int, axis: str):
+    """Mask-form compacted exchange: the graph engine's phase-2 wire.
+
+    Unlike :func:`compacted_all_to_all`'s single destination per entry,
+    a DFO message travels to EVERY destination whose need-list contains
+    it, so the send decision is a [P, V] mask (the
+    :func:`repro.core.phases.filter_sendmask` output).  Each destination
+    row is compacted independently: row p ships its ≤ ``capacity`` live
+    entries as (value, source-local index) pairs.
+
+    payload: [V] local message values; send_mask: [P, V] bool.
+    Returns (recv [P, capacity], recv_src_index [P, capacity] int32,
+    overflow bool scalar) with the same padding contract and ``pmax``'d
+    overflow semantics as :func:`compacted_all_to_all`: padding slots are
+    ``recv_src_index == -1`` with zero payload, and a True ``overflow``
+    means the result is truncated and the caller must fall back to
+    :func:`filtered_all_to_all`.
+    """
+    p, v = send_mask.shape
+    sm = send_mask.astype(jnp.int32)
+    pos = jnp.cumsum(sm, axis=1) - 1                             # [P, V]
+    ok = send_mask & (pos < capacity)
+    rows = jnp.arange(p, dtype=jnp.int32)[:, None]
+    slot = jnp.where(ok, rows * capacity + pos, p * capacity)
+    buf = jnp.zeros((p * capacity,), payload.dtype)
+    buf = buf.at[slot.ravel()].add(
+        jnp.where(ok, payload[None, :], 0).ravel(), mode="drop")
+    src_idx = jnp.broadcast_to(jnp.arange(v, dtype=jnp.int32)[None, :],
+                               (p, v))
+    idx = jnp.full((p * capacity,), -1, jnp.int32)
+    idx = idx.at[slot.ravel()].max(
+        jnp.where(ok, src_idx, -1).ravel(), mode="drop")
+    overflow = jax.lax.pmax(jnp.max(jnp.sum(sm, axis=1)), axis) > capacity
+    recv = jax.lax.all_to_all(buf.reshape(p, capacity), axis, 0, 0,
+                              tiled=False)
+    recv_idx = jax.lax.all_to_all(idx.reshape(p, capacity), axis, 0, 0,
+                                  tiled=False)
+    return recv, recv_idx, overflow
+
+
+def masked_compacted_all_to_all_mq(values: jnp.ndarray,
+                                   send_maskp: jnp.ndarray,
+                                   capacity: int, axis: str):
+    """Tiled multi-query panel variant of
+    :func:`masked_compacted_all_to_all` (DESIGN.md §11 wire, §12 physical).
+
+    values: [V, Q] per-query message values; send_maskp: [P, V, Q] bool
+    per-(destination, vertex, query) send decisions.  Entries are
+    compacted by the UNION (any-query) mask — the panel ships ONE shared
+    source-index stream per peer plus Q value columns and Q presence
+    flags, the physical twin of the ``FMT_MQPANEL`` shared-index pricing.
+    Returns (recv_vals [P, capacity, Q], recv_maskp [P, capacity, Q] bool,
+    recv_src_index [P, capacity] int32, overflow bool scalar); the
+    padding/overflow contract matches :func:`masked_compacted_all_to_all`
+    (capacity bounds the per-peer UNION count).
+    """
+    p, v, q = send_maskp.shape
+    union = jnp.any(send_maskp, axis=-1)                         # [P, V]
+    pos = jnp.cumsum(union.astype(jnp.int32), axis=1) - 1
+    ok = union & (pos < capacity)
+    rows = jnp.arange(p, dtype=jnp.int32)[:, None]
+    slot = jnp.where(ok, rows * capacity + pos, p * capacity)
+    vals_src = jnp.where(send_maskp, values[None, :, :], 0)      # [P, V, Q]
+    bufv = jnp.zeros((p * capacity, q), values.dtype)
+    bufv = bufv.at[slot.ravel()].add(
+        jnp.where(ok[:, :, None], vals_src, 0).reshape(p * v, q),
+        mode="drop")
+    bufm = jnp.zeros((p * capacity, q), jnp.int8)
+    bufm = bufm.at[slot.ravel()].max(
+        jnp.where(ok[:, :, None], send_maskp, False)
+        .astype(jnp.int8).reshape(p * v, q), mode="drop")
+    src_idx = jnp.broadcast_to(jnp.arange(v, dtype=jnp.int32)[None, :],
+                               (p, v))
+    idx = jnp.full((p * capacity,), -1, jnp.int32)
+    idx = idx.at[slot.ravel()].max(
+        jnp.where(ok, src_idx, -1).ravel(), mode="drop")
+    ucounts = jnp.sum(union.astype(jnp.int32), axis=1)
+    overflow = jax.lax.pmax(jnp.max(ucounts), axis) > capacity
+    recv_vals = jax.lax.all_to_all(bufv.reshape(p, capacity, q), axis,
+                                   0, 0, tiled=False)
+    recv_mask = jax.lax.all_to_all(bufm.reshape(p, capacity, q), axis,
+                                   0, 0, tiled=False) > 0
+    recv_idx = jax.lax.all_to_all(idx.reshape(p, capacity), axis, 0, 0,
+                                  tiled=False)
+    return recv_vals, recv_mask, recv_idx, overflow
+
+
+def compacted_scatter_back(recv: jnp.ndarray, recv_idx: jnp.ndarray,
+                           v_max: int):
+    """Re-densify a compacted receive into the [P, v_max] slab layout.
+
+    Inverse of the send-side compaction: each live (value, source index)
+    pair lands at its source-local position; padding slots
+    (``recv_src_index == -1``) contribute nothing.  Safe as a pure
+    scatter because source indices within one peer row are unique — each
+    target cell receives at most one add, so values are copied (not
+    summed) and the result is bit-identical to the dense
+    :func:`filtered_all_to_all` slab.  The downstream monoid combine is
+    order-independent (DESIGN.md §3), so feeding it this reconstruction
+    changes nothing."""
+    p, _cap = recv_idx.shape
+    valid = recv_idx >= 0
+    tgt = jnp.where(valid, recv_idx, v_max)                      # drop row
+    rows = jnp.arange(p, dtype=jnp.int32)[:, None]
+    msg = jnp.zeros((p, v_max + 1), recv.dtype)
+    msg = msg.at[rows, tgt].add(jnp.where(valid, recv, 0), mode="drop")
+    mask = jnp.zeros((p, v_max + 1), jnp.int32)
+    mask = mask.at[rows, tgt].max(valid.astype(jnp.int32), mode="drop")
+    return msg[:, :v_max], mask[:, :v_max] > 0
+
+
+def compacted_scatter_back_mq(recv_vals: jnp.ndarray,
+                              recv_maskp: jnp.ndarray,
+                              recv_idx: jnp.ndarray, v_max: int):
+    """Panel twin of :func:`compacted_scatter_back`: re-densify a
+    [P, capacity, Q] compacted panel into the [P, v_max, Q] slab the
+    multi-query combine consumes, bit-identical to the dense panel
+    exchange."""
+    p, _cap, q = recv_vals.shape
+    valid = recv_idx >= 0
+    tgt = jnp.where(valid, recv_idx, v_max)
+    rows = jnp.arange(p, dtype=jnp.int32)[:, None]
+    vals = jnp.zeros((p, v_max + 1, q), recv_vals.dtype)
+    vals = vals.at[rows, tgt].add(
+        jnp.where(valid[:, :, None], recv_vals, 0), mode="drop")
+    maskp = jnp.zeros((p, v_max + 1, q), jnp.int32)
+    maskp = maskp.at[rows, tgt].max(
+        jnp.where(valid[:, :, None], recv_maskp, False).astype(jnp.int32),
+        mode="drop")
+    return vals[:, :v_max], maskp[:, :v_max] > 0
 
 
 # ---------------------------------------------------------------------------

@@ -114,3 +114,108 @@ print("FILTERED_A2A_OK")
                        text=True, env=env, cwd=os.path.dirname(
                            os.path.dirname(os.path.abspath(__file__))))
     assert "FILTERED_A2A_OK" in r.stdout, r.stderr[-2000:]
+
+
+COMPACTED_PROPERTY_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from hypothesis import given, settings, strategies as st
+from repro.core import sparse_collectives as sc
+from repro.core.executor import shard_map_compat
+
+mesh = jax.make_mesh((8,), ("part",))
+PCNT = 8
+SETTINGS = settings(max_examples=8, deadline=None)
+
+
+def shmap(fn, *args):
+    wrapped = jax.jit(shard_map_compat(
+        fn, mesh=mesh, in_specs=tuple(P("part") for _ in args),
+        out_specs=P("part")))
+    return wrapped(*args)
+
+
+@SETTINGS
+@given(st.integers(4, 48), st.sampled_from([0.0, 0.1, 0.5, 1.0]),
+       st.integers(0, 2**16))
+def prop_masked_roundtrip(v, density, seed):
+    # random [P, P, V] masks incl. the all-inactive frontier; capacity
+    # bucketed from the true per-peer max -> overflow never trips and
+    # compaction + scatter-back equals filtered_all_to_all bit-for-bit.
+    rng = np.random.default_rng(seed)
+    sm = rng.random((PCNT, PCNT, v)) < density
+    vals = rng.normal(size=(PCNT, v)).astype(np.float32)
+    cap = sc.capacity_bucket(int(sm.sum(axis=2).max()))
+
+    def both(x, m):
+        rd, md = sc.filtered_all_to_all(x[0], m[0], "part")
+        rc, ri, ov = sc.masked_compacted_all_to_all(x[0], m[0], cap, "part")
+        rs, ms = sc.compacted_scatter_back(rc, ri, v)
+        return rd, md, rs, ms, ov[None]
+
+    rd, md, rs, ms, ov = shmap(both, vals, sm)
+    assert not bool(np.asarray(ov).any())
+    np.testing.assert_array_equal(np.asarray(rd), np.asarray(rs))
+    np.testing.assert_array_equal(np.asarray(md), np.asarray(ms))
+
+
+@SETTINGS
+@given(st.integers(4, 48), st.booleans(), st.integers(0, 2**16))
+def prop_dest_map_delivery(v, all_inactive, seed):
+    # random dest maps (incl. all-inactive): with capacity AT the exact
+    # per-peer max every live entry is delivered exactly once to its
+    # destination with its payload and overflow stays False; one below
+    # the max the pmax'd overflow flag trips on every shard.
+    rng = np.random.default_rng(seed)
+    dest = (np.full((PCNT, v), -1, np.int32) if all_inactive
+            else rng.integers(-1, PCNT, size=(PCNT, v)).astype(np.int32))
+    payload = rng.normal(size=(PCNT, v, 2)).astype(np.float32)
+    maxc = max(int(max((dest[s] == p).sum() for s in range(PCNT)
+                       for p in range(PCNT))), 1)
+
+    recv, ridx, ovf = shmap(
+        lambda x, d: (lambda o: o[:-1] + (o[-1][None],))(
+            sc.compacted_all_to_all(x[0], d[0], maxc, "part")),
+        payload, dest)
+    assert not bool(np.asarray(ovf).any())
+    recv = np.asarray(recv).reshape(PCNT, PCNT, maxc, 2)
+    ridx = np.asarray(ridx).reshape(PCNT, PCNT, maxc)
+    assert np.all(recv[ridx < 0] == 0)            # padding contract
+    for dst in range(PCNT):
+        for src in range(PCNT):
+            want = np.flatnonzero(dest[src] == dst)
+            got = ridx[dst, src][ridx[dst, src] >= 0]
+            assert sorted(got.tolist()) == sorted(want.tolist())
+            for vi in want:
+                slot = np.flatnonzero(ridx[dst, src] == vi)[0]
+                np.testing.assert_array_equal(recv[dst, src, slot],
+                                              payload[src, vi])
+    if maxc > 1:
+        _, _, ovf_low = shmap(
+            lambda x, d: (lambda o: o[:-1] + (o[-1][None],))(
+                sc.compacted_all_to_all(x[0], d[0], maxc - 1, "part")),
+            payload, dest)
+        if any((dest[s] == p).sum() == maxc for s in range(PCNT)
+               for p in range(PCNT)):
+            assert bool(np.asarray(ovf_low).all())
+
+
+prop_masked_roundtrip()
+prop_dest_map_delivery()
+print("COMPACTED_PROPERTIES_OK")
+"""
+
+
+def test_compacted_roundtrip_properties_in_subprocess():
+    """Hypothesis round-trip equivalence for the compacted collectives,
+    run on 8 forced host devices in a child process (DESIGN.md §12)."""
+    import subprocess, sys, os
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", COMPACTED_PROPERTY_CODE],
+                       capture_output=True, text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))), timeout=1800)
+    assert "COMPACTED_PROPERTIES_OK" in r.stdout, (r.stdout[-1000:],
+                                                   r.stderr[-3000:])
