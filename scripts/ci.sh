@@ -266,4 +266,38 @@ then
 fi
 suite_timer_end "physical-exchange payload gate + BENCH_shardmap.json"
 
+# The process-transport gate (DESIGN.md §13): wire-format framing
+# round-trips + truncation error paths, and the loopback parity runs that
+# prove a real multi-process dist_ooc run over localhost sockets is
+# bit-identical to the in-thread Exchange (counters, worker totals, and
+# the measured==model byte audit included).  Standalone for the
+# baseline-can't-hide-it reason above.
+suite_timer_start
+if ! PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
+    tests/test_transport.py; then
+    echo "CI FAIL: process-transport suite (tests/test_transport.py)" >&2
+    exit 1
+fi
+suite_timer_end "process-transport suite"
+
+# The crash-recovery gate (DESIGN.md §13): the fault-injection matrix —
+# kill a worker process at chosen ProcessEdges calls/phases on all four
+# algorithms, drop and delay cross-rank batches — asserting every
+# recovered run is bit-identical to the failure-free reference.
+# REPRO_FAULT_FULL=1 expands the kill matrix to every ProcessEdges call
+# index; the default representative subset runs on every CI invocation.
+suite_timer_start
+if ! PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
+    tests/test_fault_injection.py; then
+    echo "CI FAIL: crash-recovery fault-injection suite" \
+         "(tests/test_fault_injection.py)" >&2
+    exit 1
+fi
+if ! python -c "import hypothesis" 2>/dev/null; then
+    echo "CI WARNING: hypothesis not installed —" \
+         "tests/test_fault_injection.py ran the pinned-seed random-" \
+         "schedule sweep instead of the hypothesis property" >&2
+fi
+suite_timer_end "crash-recovery fault-injection suite"
+
 echo "CI OK: no regressions vs baseline ($(wc -l < "$CURRENT") known failures)"

@@ -738,6 +738,23 @@ class ShardedChunkStore:
         for s in self.shards:
             s.reset_io_counters()
 
+    def reopen_shard(self, w: int) -> ChunkStore:
+        """Re-open worker ``w``'s shard from disk — fresh manifest
+        validation and new read-only memmaps — and swap it into the shard
+        list.  This is the recovery adoption path (DESIGN.md §13): chunk
+        shards are immutable files under one shared root, so when a rank
+        adopts a dead rank's logical worker it re-opens the shard rather
+        than copying anything; the re-open re-runs the manifest integrity
+        checks, guarding against a crash mid-anything (builds are atomic,
+        so this should always pass)."""
+        if not 0 <= w < self.num_workers:
+            raise ChunkStoreError(
+                f"reopen_shard: worker {w} out of range "
+                f"[0, {self.num_workers})")
+        fresh = ChunkStore.open(os.path.join(self.root, f"w{w}"))
+        self.shards[w] = fresh
+        return fresh
+
 
 # ---------------------------------------------------------------------------
 # VertexSpill: vertex arrays on disk, batch-granular access
@@ -776,7 +793,7 @@ class VertexSpill:
         self.v_pad = num_batches * batch_size
         self.num_queries = num_queries
         os.makedirs(root, exist_ok=True)
-        meta_path = os.path.join(root, "spill_meta.json")
+        meta_path = self._meta_path = os.path.join(root, "spill_meta.json")
         if os.path.exists(meta_path):
             with open(meta_path) as f:
                 meta = json.load(f)
@@ -798,7 +815,10 @@ class VertexSpill:
         return os.path.join(self.root, f"vertex_{name}.bin")
 
     def load(self, state: dict[str, np.ndarray]) -> None:
-        """Full (unmeasured) sync of caller state into the spill files."""
+        """Full (unmeasured) sync of caller state into the spill files.
+        Records the array names and dtypes in ``spill_meta.json`` so a
+        recovering process can :meth:`attach` the files without knowing
+        the engine's state schema out of band."""
         self._mm = {}
         for name, arr in state.items():
             arr = np.asarray(arr)
@@ -808,6 +828,37 @@ class VertexSpill:
             mm[:, :self.v_max] = arr
             mm[:, self.v_max:] = np.zeros((), arr.dtype)
             self._mm[name] = mm
+        atomic_write_json(self._meta_path, {
+            "num_queries": self.num_queries,
+            "arrays": {name: str(mm.dtype)
+                       for name, mm in self._mm.items()}})
+
+    def attach(self) -> None:
+        """Re-open existing spill files in place — the recovery path.
+
+        An adopting rank memmaps a dead worker's on-disk arrays exactly
+        as the dead process last wrote them (mode ``r+``: writable, but
+        nothing is written or zeroed here), with names and dtypes from
+        the ``arrays`` record :meth:`load` left in ``spill_meta.json``.
+        Unmeasured, like :meth:`load`: adoption is control-plane motion
+        of ownership, not modeled data-plane I/O (DESIGN.md §13)."""
+        with open(self._meta_path) as f:
+            meta = json.load(f)
+        arrays = meta.get("arrays")
+        if not arrays:
+            raise ChunkStoreError(
+                f"vertex spill at {self.root} records no arrays to attach "
+                f"(it was never load()ed)")
+        mm = {}
+        for name, dt in arrays.items():
+            path = self._path(name)
+            if not os.path.exists(path):
+                raise ChunkStoreError(
+                    f"vertex spill at {self.root}: recorded array "
+                    f"{name!r} has no file {path}")
+            mm[name] = np.memmap(path, dtype=np.dtype(dt), mode="r+",
+                                 shape=(self.p_cnt, self.v_pad))
+        self._mm = mm
 
     def names(self) -> list[str]:
         return list(self._mm)
@@ -895,20 +946,29 @@ class VertexSpill:
     def bitmap_nbytes(self) -> int:
         return bitmap_nbytes(self.p_cnt, self.v_max)
 
-    def write_bitmap(self, mask: np.ndarray, name: str = "active") -> None:
+    def write_bitmap(self, mask: np.ndarray, name: str = "active",
+                     measured: bool = True) -> None:
+        """``measured=False`` is the recovery/rollback path: restoring a
+        checkpointed bitmap is control-plane motion, not modeled I/O —
+        the replayed op then re-issues the exact measured requests the
+        failure-free run would have."""
         packed = np.packbits(np.asarray(mask, bool), axis=1)
         with open(os.path.join(self.root, f"{name}.bits"), "wb") as f:
             f.write(packed.tobytes())
-        self.bytes_written += packed.nbytes
+        if measured:
+            self.bytes_written += packed.nbytes
 
-    def read_bitmap(self, name: str = "active") -> np.ndarray | None:
+    def read_bitmap(self, name: str = "active",
+                    measured: bool = True) -> np.ndarray | None:
         path = os.path.join(self.root, f"{name}.bits")
         row = ceil_div(self.v_max, 8)
         if not os.path.exists(path):
-            self.bytes_read += self.p_cnt * row   # a fresh file reads zeros
+            if measured:
+                self.bytes_read += self.p_cnt * row  # fresh file reads zeros
             return None
         packed = np.fromfile(path, np.uint8).reshape(self.p_cnt, row)
-        self.bytes_read += packed.nbytes
+        if measured:
+            self.bytes_read += packed.nbytes
         return np.unpackbits(packed, axis=1)[:, :self.v_max].astype(bool)
 
     def reset_io_counters(self) -> None:

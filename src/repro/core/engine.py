@@ -338,12 +338,18 @@ class Engine:
     def __init__(self, graph: DistGraph, fmts: ChunkFormats,
                  config: EngineConfig = EngineConfig(),
                  mesh: Mesh | None = None, axis: str = "part",
-                 store: ChunkStore | None = None):
+                 store: ChunkStore | None = None,
+                 proc_ctx=None):
         self.graph = graph
         self.fmts = fmts
         self.config = config
         self.mesh = mesh
         self.axis = axis
+        self.proc_ctx = proc_ctx
+        if proc_ctx is not None and config.executor != "dist_ooc":
+            raise ValueError(
+                "proc_ctx (multi-process transport, DESIGN.md §13) applies "
+                f"only to executor='dist_ooc', got {config.executor!r}")
         spec = graph.spec
         bounds = np.asarray(spec.boundaries)
         gid = np.zeros((spec.num_partitions, spec.v_max), np.int32)
@@ -487,6 +493,25 @@ class Engine:
                 num_queries=config.num_queries)
                 for s, parts in zip(store.shards, self.worker_parts)]
             self.reset_worker_totals()
+            if proc_ctx is not None:
+                # Process-mode dist_ooc: this engine replica executes only
+                # the logical workers proc_ctx assigns to this rank; the
+                # transport carries cross-rank batches, and recoverable()
+                # wraps every op with a per-op blockstore checkpoint so a
+                # peer's crash rolls the op back bit-identically
+                # (DESIGN.md §13).
+                if proc_ctx.num_workers != config.num_workers:
+                    raise ValueError(
+                        f"proc_ctx has num_workers={proc_ctx.num_workers} "
+                        f"but EngineConfig.num_workers={config.num_workers}")
+                if config.num_queries != 1:
+                    raise ValueError(
+                        "process-mode dist_ooc supports num_queries=1 only "
+                        "(the recovery checkpoint covers the single-query "
+                        "spill layout)")
+                self._ckpt_stores = {}
+                self._proc_wt_snap = None
+                proc_ctx.register_engine(self)
             # Long-lived phase pool (parallel_workers): one thread per
             # worker, reused by every ProcessEdges / ProcessVertices phase
             # barrier; idle threads exit when the engine is collected.
@@ -544,7 +569,12 @@ class Engine:
         arrs = {k: np.asarray(v) for k, v in state.items()}
         valid = np.asarray(self.graph.vertex_valid)
         if self._dist_ooc:
-            for w, parts in enumerate(self.worker_parts):
+            # Process mode: this rank materializes only its owned workers'
+            # spills (the others live on their owning ranks' disks).
+            workers = (self.proc_ctx.my_workers() if self.proc_ctx is not None
+                       else range(len(self.worker_parts)))
+            for w in workers:
+                parts = self.worker_parts[w]
                 lo, hi = parts[0], parts[-1] + 1
                 self.spills[w].load({k: v[lo:hi] for k, v in arrs.items()})
                 self.spills[w].write_bitmap(valid[lo:hi])
@@ -587,8 +617,106 @@ class Engine:
         iterations only identity-check the returned state, so the
         per-key concatenation is deferred to first access — like the OOC
         executor's zero-copy views, the full vertex state is never
-        materialized unless a caller actually reads it."""
+        materialized unless a caller actually reads it.
+
+        Process mode returns a padded plain dict instead: only this rank's
+        owned rows are filled (the rest are zeros, never read — drivers
+        identity-pass the state back in and the final values are assembled
+        by gathering owned slices across ranks)."""
+        if self.proc_ctx is not None:
+            spec = self.graph.spec
+            mine = self.proc_ctx.my_workers()
+            out: dict = {}
+            first = self.spills[mine[0]].state_views()
+            for name, arr0 in first.items():
+                out[name] = np.zeros((spec.num_partitions, spec.v_max),
+                                     arr0.dtype)
+            for w in mine:
+                parts = self.worker_parts[w]
+                lo, hi = parts[0], parts[-1] + 1
+                for name, arr in self.spills[w].state_views().items():
+                    out[name][lo:hi] = arr
+            return out
         return _BlockState([sp.state_views() for sp in self.spills])
+
+    # -- process-mode recovery hooks (DESIGN.md §13) -------------------------
+    def _proc_ckpt_store(self, w: int):
+        """Per-worker BlockStore under the worker's shard root (shared
+        disk), so an adopting rank reads the checkpoints the dead rank
+        wrote.  Keyed by the run id: concurrent runs over one store root
+        never mix manifests."""
+        store = self._ckpt_stores.get(w)
+        if store is None:
+            from repro.ckpt.blockstore import BlockStore
+            root = os.path.join(self.store.shards[w].root,
+                                f"ckpt-{self.proc_ctx.run_id}")
+            store = self._ckpt_stores[w] = BlockStore(root, keep=2)
+        return store
+
+    def _proc_ckpt_save(self, op: int) -> None:
+        """Checkpoint this rank's owned spills at the start of op ``op``
+        (called by ``ProcContext.recoverable`` *before* the ready
+        barrier, so every injected kill point — all post-barrier — leaves
+        ckpt(op) on shared disk for the adopter).  Content-addressed
+        blocks make the unchanged arrays free (paper §3.2).  Also
+        snapshots ``worker_totals`` in memory: a failed attempt's partial
+        per-worker accumulation must not leak into the replay."""
+        ctx = self.proc_ctx
+        self._proc_wt_snap = [dict(d) for d in self.worker_totals]
+        for w in ctx.my_workers():
+            spill = self.spills[w]
+            tree = {"s:" + name: np.array(arr)
+                    for name, arr in spill.state_views().items()}
+            bm = spill.read_bitmap(measured=False)
+            if bm is not None:
+                tree["active"] = bm
+            self._proc_ckpt_store(w).save(tree, step=op)
+
+    def _proc_rollback(self, op: int) -> None:
+        """Restore every owned spill (and ``worker_totals``) to the
+        pre-op checkpoint so the op can replay bit-identically on the
+        re-planned ownership.  Restores are unmeasured: the replay
+        re-issues the exact measured I/O the failure-free run would
+        have."""
+        ctx = self.proc_ctx
+        if self._proc_wt_snap is not None:
+            self.worker_totals = [dict(d) for d in self._proc_wt_snap]
+        for w in ctx.my_workers():
+            spill = self.spills[w]
+            store = self._proc_ckpt_store(w)
+            if op in store.steps():
+                tree = store.restore(op)
+                spill.load({k[len("s:"):]: v for k, v in tree.items()
+                            if k.startswith("s:")})
+                if "active" in tree:
+                    spill.write_bitmap(tree["active"].astype(bool),
+                                       measured=False)
+                else:
+                    bits = os.path.join(spill.root, "active.bits")
+                    if os.path.exists(bits):
+                        os.remove(bits)
+            else:
+                # Defensive: an adopted worker whose owner died before
+                # saving ckpt(op) — impossible for the injected kill
+                # points (all post-barrier) — attaches the on-disk state
+                # as the dead rank last left it.
+                spill.attach()
+
+    def _proc_adopt_workers(self, adopted, in_op: bool) -> None:
+        """Take over the listed logical workers after recovery re-planned
+        them onto this rank: re-open their chunk shards (immutable files,
+        fresh manifest validation) and rebuild the per-worker disk
+        sources.  For the engine whose op is being recovered, the spill
+        itself is restored by the subsequent ``_proc_rollback``; for any
+        other registered engine (wcc runs two over one context) the dead
+        rank's spill files are consistent as of that engine's last
+        committed op, so attaching them in place is exact."""
+        for w in adopted:
+            self.store.reopen_shard(w)
+            self.dist_sources[w] = DiskChunkSource(
+                self.store.shards[w], self.graph, self.fmts)
+            if not in_op:
+                self.spills[w].attach()
 
     def reset_worker_totals(self) -> None:
         """Per-worker measured traffic accumulated across calls (the
@@ -798,6 +926,37 @@ class Engine:
             self.worker_totals[w]["disk_bytes"] += dr + dw
             return cw, t, time.perf_counter() - t0
 
+        ctx = self.proc_ctx
+        if ctx is not None:
+            # Process mode: run only this rank's owned workers, gather the
+            # per-worker results by logical worker index, and reduce in
+            # worker order — the same reduction order as thread mode, so
+            # the counters stay bit-identical.  The whole op runs under
+            # recoverable(): a peer crash rolls back to the pre-op spill
+            # checkpoint and replays on the re-planned ownership.
+            def body():
+                cs = {k: 0.0 for k in self.counter_keys}
+                mine_w = ctx.my_workers()
+                out = _executor.run_worker_pool(
+                    [functools.partial(pv_task, w) for w in mine_w],
+                    self.config.parallel_workers, pool=self.worker_pool)
+                mine = {w: (cw, t, dt, dict(self.worker_totals[w]))
+                        for w, (cw, t, dt) in zip(mine_w, out)}
+                gathered = ctx.gather_by_worker(mine)
+                reduce_worker_counters(cs, [g[0] for g in gathered])
+                tot = 0.0
+                for w, (_, t, dt, wt) in enumerate(gathered):
+                    tot += t
+                    self.worker_times[w]["pv_s"] += dt
+                    self.worker_totals[w] = dict(wt)
+                self._check_measured(cs)
+                return tot, cs
+
+            total, counters = ctx.recoverable(self, body)
+            new_state = self._dist_state_views()
+            self._ooc_last_state = new_state
+            return new_state, total, counters
+
         out = _executor.run_worker_pool(
             [functools.partial(pv_task, w)
              for w in range(self.config.num_workers)],
@@ -900,7 +1059,17 @@ class Engine:
             if cache_key is not None:
                 self._pe_cache[cache_key] = fn
         self._sync_ooc_state(state)
-        new_state, new_active, total, counters = fn(active)
+        ctx = self.proc_ctx
+        if ctx is not None:
+            # One ProcessEdges call = one fault-plan index = one
+            # recoverable op (checkpoint, run, commit-or-rollback).
+            ctx.pe_seq += 1
+            if ctx.injector is not None:
+                ctx.injector.plan.validate_for_monoid(monoid.name)
+            new_state, new_active, total, counters = ctx.recoverable(
+                self, lambda: fn(active))
+        else:
+            new_state, new_active, total, counters = fn(active)
         self._check_measured(counters)
         self._ooc_last_state = new_state
         return new_state, new_active, total, counters

@@ -407,6 +407,23 @@ class Exchange:
         self.uval_batches = 0
         self.mq_batches = 0
         self.bytes_by_sender = np.zeros(num_workers, np.float64)
+        # Per-(src worker, dst worker) posted-batch tallies.  The diagonal
+        # counts by-reference local hand-offs; every off-diagonal entry is
+        # a physically serialized wire batch (one frame on a process
+        # transport) — which is what lets the fault-injection tests assert
+        # exactly how many frames each (src, dst) pair posted, dropped and
+        # redelivered.  A legacy multi-query post (one inbox entry carrying
+        # Q solo batches) counts once.
+        self.posted = np.zeros((num_workers, num_workers), np.int64)
+
+    def _put_entry(self, src_worker: int, dst_worker: int, q: int, p: int,
+                   entry: tuple) -> None:
+        """Delivery hook: route one posted entry into (dst_worker, q)'s
+        inbox.  The process transport (:mod:`repro.core.transport`)
+        overrides this to frame cross-worker entries onto a socket; local
+        (same-worker) entries always land by reference."""
+        with self._lock:
+            self._inbox[dst_worker].setdefault(q, []).append((p, entry))
 
     def post(self, src_worker: int, dst_worker: int, p: int, q: int,
              mask: np.ndarray, values: np.ndarray,
@@ -415,15 +432,15 @@ class Exchange:
         (the routing counts) — avoids re-reducing the mask per batch."""
         if src_worker == dst_worker:
             with self._lock:
-                box = self._inbox[dst_worker].setdefault(q, [])
-                box.append((p, ("local", mask, values)))
+                self.posted[src_worker, dst_worker] += 1
+            self._put_entry(src_worker, dst_worker, q, p,
+                            ("local", mask, values))
             return
         if count is None:
             count = int(mask.sum())
         fmt, payload = encode_batch(mask, values, count,
                                     compression=self.compression)
         with self._lock:
-            box = self._inbox[dst_worker].setdefault(q, [])
             self.bytes_sent += len(payload)
             self.bytes_by_sender[src_worker] += len(payload)
             if fmt == FMT_SLAB:
@@ -434,7 +451,9 @@ class Exchange:
                 self.uval_batches += 1
             else:
                 self.pair_batches += 1
-            box.append((p, ("wire", fmt, count, payload)))
+            self.posted[src_worker, dst_worker] += 1
+        self._put_entry(src_worker, dst_worker, q, p,
+                        ("wire", fmt, count, payload))
 
     def post_mq(self, src_worker: int, dst_worker: int, p: int, q: int,
                 masks: np.ndarray, values: np.ndarray,
@@ -448,8 +467,9 @@ class Exchange:
         ``bytes_sent`` equals the model by construction."""
         if src_worker == dst_worker:
             with self._lock:
-                box = self._inbox[dst_worker].setdefault(q, [])
-                box.append((p, ("local_mq", masks, values)))
+                self.posted[src_worker, dst_worker] += 1
+            self._put_entry(src_worker, dst_worker, q, p,
+                            ("local_mq", masks, values))
             return
         items = []
         legacy_sum = 0
@@ -467,15 +487,17 @@ class Exchange:
                 masks, values, np.asarray(masks, bool).any(axis=0), counts)
             if len(payload) < legacy_sum:
                 panel = (cols, u, payload)
-        with self._lock:
-            box = self._inbox[dst_worker].setdefault(q, [])
-            if panel is not None:
-                cols, u, payload = panel
+        if panel is not None:
+            cols, u, payload = panel
+            with self._lock:
                 self.bytes_sent += len(payload)
                 self.bytes_by_sender[src_worker] += len(payload)
                 self.mq_batches += 1
-                box.append((p, ("wire_mq_panel", cols, u, payload)))
-                return
+                self.posted[src_worker, dst_worker] += 1
+            self._put_entry(src_worker, dst_worker, q, p,
+                            ("wire_mq_panel", cols, u, payload))
+            return
+        with self._lock:
             self.bytes_sent += legacy_sum
             self.bytes_by_sender[src_worker] += legacy_sum
             for _, fmt, _, _ in items:
@@ -487,7 +509,9 @@ class Exchange:
                     self.uval_batches += 1
                 else:
                     self.pair_batches += 1
-            box.append((p, ("wire_mq_legacy", items)))
+            self.posted[src_worker, dst_worker] += 1
+        self._put_entry(src_worker, dst_worker, q, p,
+                        ("wire_mq_legacy", items))
 
     def take_dest_mq(self, dst_worker: int, q: int, p_cnt: int,
                      num_queries: int, device_decode: bool = False
@@ -541,6 +565,24 @@ class Exchange:
                 recv_mask[p], recv_msg[p] = decode_batch(
                     fmt, payload, count, self.v_max, device=device_decode)
         return recv_mask, recv_msg
+
+    def counter_snapshot(self) -> dict:
+        """All measured-wire counters as plain values, for cross-rank
+        reduction: the process-mode executor allgathers each rank's
+        snapshot and sums them in rank order, reproducing the single
+        shared-Exchange totals of thread mode exactly (integer tallies,
+        and float64 sums of integer byte counts, are order-exact)."""
+        with self._lock:
+            return {
+                "bytes_sent": self.bytes_sent,
+                "pair_batches": self.pair_batches,
+                "slab_batches": self.slab_batches,
+                "vpair_batches": self.vpair_batches,
+                "uval_batches": self.uval_batches,
+                "mq_batches": self.mq_batches,
+                "bytes_by_sender": self.bytes_by_sender.copy(),
+                "posted": self.posted.copy(),
+            }
 
 
 class DecodeAhead:

@@ -1070,17 +1070,64 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
                _max_tiles_per_batch_row(g, tile, pb), bs, interpret)
 
     parallel = cfg.parallel_workers
+    # Process-mode transport (DESIGN.md §13): when the engine carries a
+    # ProcContext, cross-rank message batches travel over sockets through a
+    # ProcExchange and the phase barriers become allgathers keyed by
+    # logical worker — reduced in the same worker/rank order every run, so
+    # process mode is bit-identical to thread mode.
+    ctx = getattr(engine, "proc_ctx", None)
+    if ctx is not None:
+        from repro.core import transport as transport_mod
+        merge_op = {"min": np.minimum, "max": np.maximum,
+                    "add": np.add}[monoid.name]
+
+    def _gather_by_worker(payload_mine, extra):
+        """Allgather ``({worker: value}, extra)`` and return
+        (worker-ordered [W] values, rank-ordered extras)."""
+        gathered = ctx.allgather((payload_mine, extra))
+        by_w, extras = {}, []
+        for got in gathered:
+            if got is None:
+                continue
+            mine_r, extra_r = got
+            for w, o in mine_r.items():
+                if w in by_w:
+                    raise transport_mod.TransportError(
+                        f"logical worker {w} reported by two ranks")
+                by_w[w] = o
+            extras.append(extra_r)
+        missing = [w for w in range(n_workers) if w not in by_w]
+        if missing:
+            # an owner that died before this collective started never
+            # raises inside allgather (its slot is already None) — the
+            # missing worker IS the death signal, so trigger recovery
+            with ctx.mesh.cv:
+                dead = ({ctx.assign[w] for w in missing}
+                        & set(ctx.mesh.dead))
+            if dead:
+                raise transport_mod.WorkerDied(dead)
+            raise transport_mod.TransportError(
+                f"no live rank reported workers {missing}")
+        return [by_w[w] for w in range(n_workers)], extras
 
     def step(active):
         counters = {k: 0.0 for k in engine.counter_keys}
+        inj = ctx.injector if ctx is not None else None
+        if inj is not None:
+            inj.maybe_kill(ctx, "start")
+        local_workers = (list(ctx.my_workers()) if ctx is not None
+                         else list(range(n_workers)))
         amask = (vertex_valid if active is None
                  else np.asarray(active, bool) & vertex_valid)
-        arrays_bytes = spills[0].arrays_bytes()
+        arrays_bytes = spills[local_workers[0]].arrays_bytes()
         spill_io0 = [(sp.bytes_read, sp.bytes_written) for sp in spills]
         store_io0 = [(src.store.chunks_read, src.store.bytes_read)
                      for src in sources]
-        ex = exchange_mod.Exchange(n_workers, v_max,
-                                   compression=cfg.compression)
+        ex = (transport_mod.ProcExchange(
+                  n_workers, v_max, cfg.compression, ctx, merge_op)
+              if ctx is not None else
+              exchange_mod.Exchange(n_workers, v_max,
+                                    compression=cfg.compression))
         # Shared compute token for the parallel pools (utils.token_ctx):
         # CPU bursts across the W worker pipelines take turns holding it,
         # avoiding the GIL convoy of interleaved small numpy calls; queue
@@ -1133,14 +1180,25 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
                 time.perf_counter() - t0
 
         send_out = run_worker_pool(
-            [functools.partial(send_task, w) for w in range(n_workers)],
+            [functools.partial(send_task, w) for w in local_workers],
             parallel, pool=engine.worker_pool)
+        if ctx is not None:
+            # Send barrier: every rank contributes its workers' routing
+            # columns and its exchange counter snapshot.  TCP FIFO per
+            # link means a sender's data frames precede its allgather
+            # contribution — once the gather completes, every expected
+            # frame has arrived, been dropped (ledger resend below), or
+            # is held (deferred past the straggler deadline).
+            send_rows, ex_snaps = _gather_by_worker(
+                dict(zip(local_workers, send_out)), ex.counter_snapshot())
+            send_items = list(enumerate(send_rows))
+        else:
+            send_items = list(zip(local_workers, send_out))
         counts = np.zeros((p_cnt, p_cnt), np.float64)       # [q, p] routing
         gapb = np.zeros((p_cnt, p_cnt), np.float64)
         unib = np.zeros((p_cnt, p_cnt), bool)
         gen_batches_total = 0.0
-        for w, (counts_w, gapb_w, unib_w, gen_b_sum, dt) in \
-                enumerate(send_out):
+        for w, (counts_w, gapb_w, unib_w, gen_b_sum, dt) in send_items:
             lo, hi = worker_parts[w][0], worker_parts[w][-1] + 1
             counts[:, lo:hi] = counts_w
             gapb[:, lo:hi] = gapb_w
@@ -1163,11 +1221,33 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
             uniform=unib if cfg.compression else None, xp=np)
         counters["net_bytes"] = float(net)
         counters["net_bytes_raw"] = float(net_raw)
-        counters["measured_net_bytes"] = ex.bytes_sent
-        counters["net_pair_batches"] = float(ex.pair_batches)
-        counters["net_slab_batches"] = float(ex.slab_batches)
-        counters["net_vpair_batches"] = float(ex.vpair_batches)
-        counters["net_uval_batches"] = float(ex.uval_batches)
+        if ctx is not None:
+            # Wire counters are global: sum the per-rank snapshots in rank
+            # order (integer byte/batch tallies — the sums are exact, so
+            # process mode reproduces thread mode's single-process
+            # accumulation bit for bit).
+            for ck, nk in (("bytes_sent", "measured_net_bytes"),
+                           ("pair_batches", "net_pair_batches"),
+                           ("slab_batches", "net_slab_batches"),
+                           ("vpair_batches", "net_vpair_batches"),
+                           ("uval_batches", "net_uval_batches")):
+                counters[nk] = float(sum(s[ck] for s in ex_snaps))
+            posted_total = np.zeros((n_workers, n_workers), np.int64)
+            for s in ex_snaps:
+                posted_total += np.asarray(s["posted"], np.int64)
+            # Receive barrier: block until every cross-rank frame destined
+            # to this rank's workers arrived, was redelivered from the
+            # sender's ledger (injected drops), or was acknowledged as
+            # held (injected delays, merged next op).
+            if inj is not None:
+                inj.maybe_kill(ctx, "recv")
+            ctx.resolve_arrivals(posted_total)
+        else:
+            counters["measured_net_bytes"] = ex.bytes_sent
+            counters["net_pair_batches"] = float(ex.pair_batches)
+            counters["net_slab_batches"] = float(ex.slab_batches)
+            counters["net_vpair_batches"] = float(ex.vpair_batches)
+            counters["net_uval_batches"] = float(ex.uval_batches)
 
         # Phases 3 + 4 + apply per worker, against its own shard.  The
         # send pool has fully joined, so every message batch is posted
@@ -1271,19 +1351,50 @@ def make_dist_ooc_pe(engine, signal_fn, slot_fn, monoid, apply_fn, backend,
             return cw, total_w, float(upd_b.sum()), time.perf_counter() - t0
 
         recv_out = run_worker_pool(
-            [functools.partial(recv_task, w) for w in range(n_workers)],
+            [functools.partial(recv_task, w) for w in local_workers],
             parallel, pool=engine.worker_pool)
+        if ctx is not None:
+            if inj is not None:
+                inj.maybe_kill(ctx, "apply")
+            # Final collective: per-worker results (counters, totals, the
+            # new-active rows, and the authoritative worker_totals
+            # snapshots) gathered by logical worker; per-rank deferred
+            # counts ride along so a round with held (delayed) frames
+            # cannot read as converged.
+            mine = {w: (cw, total_w, upd_b_sum, dt,
+                        new_active[worker_parts[w][0]:
+                                   worker_parts[w][-1] + 1].copy(),
+                        dict(engine.worker_totals[w]))
+                    for w, (cw, total_w, upd_b_sum, dt)
+                    in zip(local_workers, recv_out)}
+            recv_rows, deferred = _gather_by_worker(
+                mine, ctx.pending_deferred())
+            recv_items = []
+            for w, (cw, total_w, upd_b_sum, dt, na_w, wt) in \
+                    enumerate(recv_rows):
+                lo, hi = worker_parts[w][0], worker_parts[w][-1] + 1
+                new_active[lo:hi] = np.asarray(na_w, bool)
+                engine.worker_totals[w] = dict(wt)
+                recv_items.append((w, (cw, total_w, upd_b_sum, dt)))
+            pending = int(sum(int(d) for d in deferred))
+        else:
+            recv_items = list(zip(local_workers, recv_out))
+            pending = 0
         # Deterministic reduction: every float above accumulated in
         # worker-private state; summing in worker index order after the
         # join makes parallel runs bit-identical to sequential ones.
         phases.reduce_worker_counters(
-            counters, [cw for cw, _, _, _ in recv_out])
+            counters, [cw for _, (cw, _, _, _) in recv_items])
         total = 0.0
         upd_batches_total = 0.0
-        for w, (_, total_w, upd_b_sum, dt) in enumerate(recv_out):
+        for w, (_, total_w, upd_b_sum, dt) in recv_items:
             total += total_w
             upd_batches_total += upd_b_sum
             engine.worker_times[w]["recv_s"] += dt
+        # Held (delayed) frames apply next op through the slot monoid; the
+        # promise keeps fixpoint drivers (they stop on total == 0) alive
+        # until the deferred contributions actually land.
+        total += float(pending)
 
         # Modeled vertex I/O: identical formulas to the other executors
         # (per-worker bitmaps sum to the full [P, V] bitmap bytes).

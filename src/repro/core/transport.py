@@ -1,0 +1,997 @@
+"""Socket transport for multi-process dist_ooc (DESIGN.md §13).
+
+Promotes the W "workers" of the dist_ooc executor from threads in one
+process to W (or fewer) separate OS processes, each owning a subset of the
+**logical workers** — the fixed-W roles that key the wire pricing, the
+spill layout and the chunk shards.  Decoupling logical workers from
+physical ranks is what makes recovery counter-preserving: a dead rank's
+workers are adopted by survivors (``runtime.elastic.plan_worker_recovery``)
+and every byte model still prices the same W-worker topology, so the
+recovered run's counters are bit-identical to a failure-free one.
+
+Three layers:
+
+* **Framing** — pure functions (:func:`pack_frame` / :func:`read_frame` /
+  :func:`entry_to_frame` / :func:`frame_to_entry`) that map the Exchange's
+  posted entries onto length-prefixed socket frames, one frame per posted
+  batch, for every wire format the Exchange speaks (pairs / slab / vpairs /
+  uval / mq panel).  The *payload* crossing the socket is byte-identical to
+  what :func:`repro.core.exchange.encode_batch` priced, so
+  ``measured_net_bytes == net_bytes`` survives the transport swap by
+  construction; the fixed header is O(1) framing metadata, unpriced exactly
+  like the thread Exchange's out-of-band ``(p, q, fmt, count)`` scalars.
+
+* **Mesh** — :class:`ProcMesh`: one persistent TCP connection per rank
+  pair (port-file rendezvous under a shared directory), a receiver thread
+  per peer demultiplexing DATA frames into per-(op, dst worker, dest
+  partition) inboxes and CONTROL frames into a tagged slot table.  Peer
+  death is an EOF: the receiver marks the rank dead and every blocked
+  collective wakes and raises :class:`WorkerDied`.
+
+* **Context** — :class:`ProcContext`: epoch/sequence-tagged collectives
+  (allgather / barrier), the sender ledger + receiver completeness check
+  that turn dropped frames into deterministic resends and delayed frames
+  into next-round deferred deliveries (merged through the slot monoid by
+  :func:`repro.runtime.straggler.merge_deferred_entry`), and the recovery
+  state machine: FAIL consensus -> deterministic ownership re-plan ->
+  checkpoint rollback -> replay (:meth:`ProcContext.recoverable`).
+
+Why replay is safe: every op (one ProcessEdges or ProcessVertices call) is
+wrapped in checkpoint-then-barrier-then-body.  A worker's spill state is
+checkpointed *before* the ready barrier, and the injected failure points
+all precede the dead rank's contribution to the op's final collective — so
+no survivor can have committed the op when any rank is still replaying it,
+and rollback + replay re-executes the op from identical state on an
+identical worker topology.  TCP's per-link FIFO means a sender's data
+frames always precede its allgather contribution, so once the send-phase
+gather completes, every expected frame either arrived, was dropped (sender
+ledger answers the resend request), or is held by the straggler delay
+(counted, delivered next op, merged via the monoid).
+"""
+from __future__ import annotations
+
+import io
+import os
+import pickle
+import socket
+import struct
+import threading
+import time
+
+import numpy as np
+
+from repro.core import exchange as exchange_mod
+
+# --------------------------------------------------------------------------
+# Errors
+# --------------------------------------------------------------------------
+
+
+class TransportError(RuntimeError):
+    """Framing / socket / protocol failure (truncated frame, timeout,
+    inconsistent resend accounting)."""
+
+
+class WorkerDied(TransportError):
+    """A rank this collective needs is dead (EOF) or has initiated
+    recovery (FAIL frame).  Caught by :meth:`ProcContext.recoverable`."""
+
+    def __init__(self, ranks):
+        self.ranks = frozenset(int(r) for r in ranks)
+        super().__init__(f"worker rank(s) {sorted(self.ranks)} died")
+
+
+# --------------------------------------------------------------------------
+# Framing (pure; unit-testable without sockets)
+# --------------------------------------------------------------------------
+
+# kind u8 | epoch u32 | op u32 | src_w i32 | dst_w i32 | p i32 | q i32 |
+# fmt i32 | count u32 | aux i32 | payload-length u32
+_HEADER = struct.Struct("!BIIiiiiiIiI")
+HEADER_BYTES = _HEADER.size
+
+K_HELLO = 0     # src_w = sender rank (connection identification)
+K_DATA = 1      # one posted Exchange batch; fmt/count/aux describe it
+K_CTRL = 2      # fmt = control code below; q = sequence; payload pickled
+K_FAIL = 3      # payload = pickled sorted list of dead ranks
+
+C_GATHER = 0        # allgather / barrier contribution
+C_RESEND_REQ = 1    # receiver -> sender: frames missing for an op
+C_RESEND_ACK = 2    # sender -> receiver: {resent, held} accounting
+
+
+class Frame:
+    __slots__ = ("kind", "epoch", "op", "src_w", "dst_w", "p", "q",
+                 "fmt", "count", "aux", "payload")
+
+    def __init__(self, kind, epoch=0, op=0, src_w=0, dst_w=0, p=0, q=0,
+                 fmt=0, count=0, aux=0, payload=b""):
+        self.kind = kind
+        self.epoch = epoch
+        self.op = op
+        self.src_w = src_w
+        self.dst_w = dst_w
+        self.p = p
+        self.q = q
+        self.fmt = fmt
+        self.count = count
+        self.aux = aux
+        self.payload = payload
+
+
+def pack_frame(kind, *, epoch=0, op=0, src_w=0, dst_w=0, p=0, q=0,
+               fmt=0, count=0, aux=0, payload=b"") -> bytes:
+    return _HEADER.pack(kind, epoch, op, src_w, dst_w, p, q, fmt,
+                        count, aux, len(payload)) + payload
+
+
+def read_exact(read, n: int) -> bytes:
+    """Read exactly ``n`` bytes from ``read`` (a ``file.read``-like
+    callable that may return short).  Raises :class:`TransportError` on a
+    partial read — a peer that closed mid-frame — and returns ``b""``
+    only for a clean EOF at ``n == 0`` boundaries (callers ask for the
+    full amount)."""
+    if n == 0:
+        return b""
+    parts = []
+    got = 0
+    while got < n:
+        chunk = read(n - got)
+        if not chunk:
+            raise TransportError(
+                f"truncated frame: expected {n} bytes, got {got} before "
+                f"EOF")
+        parts.append(chunk)
+        got += len(chunk)
+    return b"".join(parts)
+
+
+def read_frame(read) -> Frame | None:
+    """Read one frame; ``None`` on a clean EOF at a frame boundary,
+    :class:`TransportError` on a partial header or short payload."""
+    first = read(1)
+    if not first:
+        return None
+    head = first + read_exact(read, HEADER_BYTES - 1)
+    (kind, epoch, op, src_w, dst_w, p, q, fmt, count, aux,
+     paylen) = _HEADER.unpack(head)
+    payload = read_exact(read, paylen) if paylen else b""
+    return Frame(kind, epoch, op, src_w, dst_w, p, q, fmt, count, aux,
+                 payload)
+
+
+_COL = struct.Struct("!iiB")    # mq panel column metadata (j, count, uni)
+
+
+def entry_to_frame(entry, *, epoch, op, src_w, dst_w, p, q) -> bytes:
+    """Serialize one cross-worker Exchange inbox entry as a DATA frame.
+    The Exchange already encoded (and priced) the payload; this adds only
+    the fixed header — plus, for multi-query panels, the per-column
+    framing metadata (O(Q) scalars, unpriced like the thread Exchange's
+    out-of-band ``cols`` list)."""
+    tag = entry[0]
+    if tag == "wire":
+        _, fmt, count, payload = entry
+        return pack_frame(K_DATA, epoch=epoch, op=op, src_w=src_w,
+                          dst_w=dst_w, p=p, q=q, fmt=fmt, count=count,
+                          payload=payload)
+    if tag == "wire_mq_panel":
+        _, cols, u, payload = entry
+        meta = b"".join(_COL.pack(j, c, int(uni)) for j, c, uni in cols)
+        return pack_frame(K_DATA, epoch=epoch, op=op, src_w=src_w,
+                          dst_w=dst_w, p=p, q=q,
+                          fmt=exchange_mod.FMT_MQPANEL, count=u,
+                          aux=len(cols), payload=meta + payload)
+    raise TransportError(
+        f"entry kind {tag!r} cannot cross the process transport")
+
+
+def frame_to_entry(frame: Frame):
+    """Inverse of :func:`entry_to_frame` -> the Exchange inbox entry."""
+    if frame.fmt == exchange_mod.FMT_MQPANEL:
+        nb = frame.aux * _COL.size
+        cols = [(j, c, bool(uni)) for j, c, uni in
+                (_COL.unpack(frame.payload[i:i + _COL.size])
+                 for i in range(0, nb, _COL.size))]
+        return ("wire_mq_panel", cols, frame.count, frame.payload[nb:])
+    return ("wire", frame.fmt, frame.count, frame.payload)
+
+
+def frame_roundtrip(entry, **kw):
+    """Test helper: entry -> framed bytes -> parsed frame -> entry."""
+    raw = entry_to_frame(entry, **kw)
+    frame = read_frame(io.BytesIO(raw).read)
+    return frame, frame_to_entry(frame)
+
+
+# --------------------------------------------------------------------------
+# Mesh: persistent pairwise sockets + receiver threads
+# --------------------------------------------------------------------------
+
+
+class _Peer:
+    def __init__(self, rank: int, sock: socket.socket, rfile=None):
+        self.rank = rank
+        self.sock = sock
+        # One buffered reader per socket for its whole life: a reader may
+        # buffer past the frame it was asked for, so re-wrapping the
+        # socket would silently drop bytes.
+        self.rfile = rfile if rfile is not None else sock.makefile("rb")
+        self.send_lock = threading.Lock()
+        self.alive = True
+
+    def send(self, data: bytes) -> None:
+        with self.send_lock:
+            self.sock.sendall(data)
+
+    def close(self) -> None:
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+class ProcMesh:
+    """All-pairs TCP mesh with port-file rendezvous.
+
+    Rank r listens on an ephemeral loopback port published as
+    ``rank{r}.port`` under the shared rendezvous directory, dials every
+    rank s < r (identifying itself with a HELLO frame) and accepts from
+    every rank s > r.  One receiver thread per peer demultiplexes frames;
+    EOF marks the peer dead and wakes every waiter."""
+
+    def __init__(self, rank: int, world: int, rendezvous_dir: str,
+                 connect_timeout: float = 60.0):
+        self.rank = rank
+        self.world = world
+        self.cv = threading.Condition()
+        self.peers: dict[int, _Peer] = {}
+        self.dead: set[int] = set()
+        # ctrl[(epoch, code, seq, sender rank)] -> unpickled object
+        self._ctrl: dict[tuple, object] = {}
+        # fails[rank] -> (epoch, frozenset of dead ranks): latest report.
+        # Epoch-tagged so reports from a COMPLETED recovery never abort
+        # post-recovery collectives.
+        self.fails: dict[int, tuple] = {}
+        # data[op][(dst_w, q)] -> list of (p, entry, epoch, src_w)
+        self._data: dict[int, dict] = {}
+        # arrived[(op, epoch, src_w, dst_w)] -> list of (p, q)
+        self._arrived: dict[tuple, list] = {}
+        self.resend_handler = None          # set by ProcContext
+        self._threads: list[threading.Thread] = []
+        if world > 1:
+            self._rendezvous(rendezvous_dir, connect_timeout)
+            for peer in self.peers.values():
+                t = threading.Thread(target=self._recv_loop, args=(peer,),
+                                     daemon=True)
+                t.start()
+                self._threads.append(t)
+
+    # -- connection setup ---------------------------------------------------
+
+    def _rendezvous(self, rdir: str, timeout: float) -> None:
+        deadline = time.monotonic() + timeout
+        listener = socket.create_server(("127.0.0.1", 0))
+        port = listener.getsockname()[1]
+        tmp = os.path.join(rdir, f".rank{self.rank}.port.tmp")
+        with open(tmp, "w") as f:
+            f.write(str(port))
+        os.replace(tmp, os.path.join(rdir, f"rank{self.rank}.port"))
+
+        accepted: dict[int, _Peer] = {}
+        accept_err: list[BaseException] = []
+
+        def accept_loop():
+            try:
+                need = self.world - 1 - self.rank
+                listener.settimeout(1.0)
+                while len(accepted) < need:
+                    if time.monotonic() > deadline:
+                        raise TransportError(
+                            f"rank {self.rank}: rendezvous accept timed "
+                            f"out with {len(accepted)}/{need} peers")
+                    try:
+                        sock, _ = listener.accept()
+                    except socket.timeout:
+                        continue
+                    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY,
+                                    1)
+                    rfile = sock.makefile("rb")
+                    hello = read_frame(rfile.read)
+                    if hello is None or hello.kind != K_HELLO:
+                        raise TransportError(
+                            f"rank {self.rank}: bad rendezvous hello")
+                    accepted[hello.src_w] = _Peer(hello.src_w, sock,
+                                                  rfile=rfile)
+            except BaseException as exc:   # surface in main thread
+                accept_err.append(exc)
+
+        acceptor = threading.Thread(target=accept_loop, daemon=True)
+        acceptor.start()
+        for s in range(self.rank):
+            path = os.path.join(rdir, f"rank{s}.port")
+            while not os.path.exists(path):
+                if time.monotonic() > deadline:
+                    raise TransportError(
+                        f"rank {self.rank}: timed out waiting for rank "
+                        f"{s}'s rendezvous port file")
+                time.sleep(0.01)
+            with open(path) as f:
+                peer_port = int(f.read().strip())
+            sock = socket.create_connection(("127.0.0.1", peer_port),
+                                            timeout=timeout)
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            sock.sendall(pack_frame(K_HELLO, src_w=self.rank))
+            self.peers[s] = _Peer(s, sock)
+        acceptor.join(timeout)
+        if accept_err:
+            raise accept_err[0]
+        if acceptor.is_alive():
+            raise TransportError(
+                f"rank {self.rank}: rendezvous accept did not finish")
+        self.peers.update(accepted)
+        listener.close()
+
+    # -- receive path -------------------------------------------------------
+
+    def _recv_loop(self, peer: _Peer) -> None:
+        while True:
+            try:
+                frame = read_frame(peer.rfile.read)
+            except (TransportError, OSError, ValueError):
+                frame = None
+            if frame is None:
+                self._mark_dead(peer.rank)
+                return
+            self._dispatch(peer, frame)
+
+    def _mark_dead(self, rank: int) -> None:
+        with self.cv:
+            self.dead.add(rank)
+            peer = self.peers.get(rank)
+            if peer is not None:
+                peer.alive = False
+            self.cv.notify_all()
+
+    def _dispatch(self, peer: _Peer, frame: Frame) -> None:
+        if frame.kind == K_DATA:
+            entry = frame_to_entry(frame)
+            with self.cv:
+                box = self._data.setdefault(frame.op, {})
+                box.setdefault((frame.dst_w, frame.q), []).append(
+                    (frame.p, entry, frame.epoch, frame.src_w))
+                self._arrived.setdefault(
+                    (frame.op, frame.epoch, frame.src_w, frame.dst_w),
+                    []).append((frame.p, frame.q))
+                self.cv.notify_all()
+        elif frame.kind == K_CTRL:
+            if frame.fmt == C_RESEND_REQ:
+                handler = self.resend_handler
+                if handler is not None:
+                    handler(frame)          # replies on the peer's socket
+                return
+            obj = pickle.loads(frame.payload)
+            with self.cv:
+                self._ctrl[(frame.epoch, frame.fmt, frame.q,
+                            frame.src_w)] = obj
+                self.cv.notify_all()
+        elif frame.kind == K_FAIL:
+            reported = frozenset(pickle.loads(frame.payload))
+            with self.cv:
+                self.fails[frame.src_w] = (frame.epoch, reported)
+                self.cv.notify_all()
+
+    # -- send path ----------------------------------------------------------
+
+    def send_to_rank(self, rank: int, data: bytes,
+                     ignore_dead: bool = False) -> None:
+        peer = self.peers[rank]
+        try:
+            peer.send(data)
+        except OSError:
+            self._mark_dead(rank)
+            if not ignore_dead:
+                raise WorkerDied({rank})
+
+    # -- waiting ------------------------------------------------------------
+
+    def wait_ctrl(self, epoch: int, code: int, seq: int, ranks,
+                  timeout: float, fail_is_fatal: bool = True) -> dict:
+        """Block until a control slot (epoch, code, seq, r) is filled for
+        every r in ``ranks``.  Raises :class:`WorkerDied` if a still-
+        missing rank is dead, or — when ``fail_is_fatal`` — when any rank
+        broadcasts a FAIL for this epoch or later (a peer initiating
+        recovery must pull every survivor out of its collective)."""
+        deadline = time.monotonic() + timeout
+        with self.cv:
+            while True:
+                missing = [r for r in ranks
+                           if (epoch, code, seq, r) not in self._ctrl]
+                if not missing:
+                    return {r: self._ctrl.pop((epoch, code, seq, r))
+                            for r in ranks}
+                dead = [r for r in missing if r in self.dead]
+                if dead:
+                    raise WorkerDied(dead)
+                if fail_is_fatal:
+                    for rr, (rep_epoch, reported) in list(
+                            self.fails.items()):
+                        if rep_epoch >= epoch and reported:
+                            # a peer initiated recovery this epoch: every
+                            # survivor must leave its collective and join
+                            self.dead |= reported
+                            raise WorkerDied(reported)
+                if time.monotonic() > deadline:
+                    raise TransportError(
+                        f"rank {self.rank}: timed out waiting for ctrl "
+                        f"(epoch={epoch}, code={code}, seq={seq}) from "
+                        f"{missing}")
+                self.cv.wait(0.2)
+
+    # -- data inbox ---------------------------------------------------------
+
+    def count_arrived(self, op: int, epoch: int, src_w: int,
+                      dst_w: int) -> int:
+        with self.cv:
+            return len(self._arrived.get((op, epoch, src_w, dst_w), ()))
+
+    def arrived_keys(self, op: int, epoch: int, src_w: int,
+                     dst_w: int) -> list:
+        with self.cv:
+            return list(self._arrived.get((op, epoch, src_w, dst_w), ()))
+
+    def drain_data(self, op: int, epoch: int, dst_w: int, q: int):
+        """Pop and split this destination's socket arrivals: ``cur`` —
+        current-op entries of the current epoch (stale replay leftovers
+        are dropped) — and ``late`` — any entries filed under earlier
+        ops, i.e. straggler-deferred deliveries, sorted by (op, p) for a
+        deterministic merge order."""
+        cur, late = [], []
+        with self.cv:
+            for o in sorted(self._data):
+                if o > op:
+                    continue
+                entries = self._data[o].pop((dst_w, q), None)
+                if not entries:
+                    continue
+                for (p, entry, ep, src_w) in entries:
+                    if o == op:
+                        if ep == epoch:
+                            cur.append((p, entry))
+                    else:
+                        late.append((o, p, entry, ep, src_w))
+        late.sort(key=lambda t: (t[0], t[1]))
+        return cur, late
+
+    def restore_late(self, items) -> None:
+        """Re-file consumed deferred entries (rollback path: a replayed op
+        must see the same late deliveries its failed attempt consumed)."""
+        with self.cv:
+            for (o, p, entry, ep, src_w, dst_w, q) in items:
+                self._data.setdefault(o, {}).setdefault(
+                    (dst_w, q), []).append((p, entry, ep, src_w))
+            self.cv.notify_all()
+
+    def purge_op(self, op: int, min_epoch: int) -> None:
+        """Drop the replayed op's stale-epoch data and arrival tallies."""
+        with self.cv:
+            box = self._data.get(op)
+            if box:
+                for key in list(box):
+                    box[key] = [e for e in box[key] if e[2] >= min_epoch]
+                    if not box[key]:
+                        del box[key]
+            for key in [k for k in self._arrived
+                        if k[0] == op and k[1] < min_epoch]:
+                del self._arrived[key]
+
+    def purge_older(self, op: int) -> None:
+        """Drop fully-consumed inbox state for committed ops < op."""
+        with self.cv:
+            for o in [o for o in self._data if o < op]:
+                del self._data[o]
+            for key in [k for k in self._arrived if k[0] < op]:
+                del self._arrived[key]
+
+    def broadcast_fail(self, epoch: int, dead: frozenset) -> None:
+        payload = pickle.dumps(sorted(dead))
+        frame = pack_frame(K_FAIL, epoch=epoch, src_w=self.rank,
+                           payload=payload)
+        for r, peer in self.peers.items():
+            if r in dead:
+                continue
+            self.send_to_rank(r, frame, ignore_dead=True)
+
+    def purge_ctrl(self, min_epoch: int) -> None:
+        """Drop control slots from aborted pre-recovery epochs."""
+        with self.cv:
+            for key in [k for k in self._ctrl if k[0] < min_epoch]:
+                del self._ctrl[key]
+
+    def close(self) -> None:
+        for peer in self.peers.values():
+            peer.close()
+
+
+# --------------------------------------------------------------------------
+# ProcContext: collectives, fault protocol, recovery state machine
+# --------------------------------------------------------------------------
+
+
+class ProcContext:
+    """Per-process handle for one multi-process dist_ooc run.
+
+    Owns the logical-worker -> rank assignment, the epoch (bumped on each
+    recovery), the per-op sender ledger (resend source of truth), the
+    straggler hold queue, and the recovery loop the engine wraps every op
+    in (:meth:`recoverable`)."""
+
+    def __init__(self, rank: int, world: int, num_workers: int,
+                 rendezvous_dir: str, run_id: str = "run",
+                 injector=None, io_timeout: float = 180.0):
+        if world > num_workers:
+            raise TransportError(
+                f"world size {world} exceeds num_workers {num_workers}: "
+                f"every rank must own at least one logical worker")
+        self.rank = rank
+        self.world = world
+        self.num_workers = num_workers
+        self.run_id = run_id
+        self.injector = injector
+        self.io_timeout = io_timeout
+        self.epoch = 0
+        self.op_seq = 0          # recoverable-op counter (PE + PV calls)
+        self.pe_seq = 0          # ProcessEdges call counter (fault keying)
+        self._seq = 0            # collective sequence within the epoch
+        self._p2p_seq = 0        # point-to-point (resend) sequence
+        # initial ownership: round-robin, deterministic on every rank
+        self.assign = [w % world for w in range(num_workers)]
+        self.initial_assign = list(self.assign)
+        self.mesh = ProcMesh(rank, world, rendezvous_dir)
+        self.mesh.resend_handler = self._on_resend_req
+        self._engines: list = []
+        self._lock = threading.Lock()
+        # ledger[op][(src_w, dst_w)][(p, q)] -> dict(state=..., fields)
+        self._ledger: dict[int, dict] = {}
+        # held[op] -> list of ledger records awaiting next-op flush
+        self._held: dict[int, list] = {}
+        # deferred frames promised for op (from resend acks), per src_w
+        self._op_deferred: dict[int, int] = {}
+        # late entries consumed by op's takes (restored on rollback)
+        self._consumed_late: dict[int, list] = {}
+        w = num_workers
+        self.stats = {
+            "wire_frames": np.zeros((w, w), np.int64),
+            "dropped": np.zeros((w, w), np.int64),
+            "redelivered": np.zeros((w, w), np.int64),
+            "held": np.zeros((w, w), np.int64),
+            "late_delivered": np.zeros((w, w), np.int64),
+            "recoveries": 0,
+        }
+
+    # -- topology -----------------------------------------------------------
+
+    def my_workers(self) -> list:
+        return [w for w in range(self.num_workers)
+                if self.assign[w] == self.rank]
+
+    def live_peers(self) -> list:
+        with self.mesh.cv:
+            return [r for r in range(self.world)
+                    if r != self.rank and r not in self.mesh.dead]
+
+    # -- collectives --------------------------------------------------------
+
+    def allgather(self, obj) -> list:
+        """Epoch/seq-tagged allgather over live ranks; dead ranks' slots
+        are None.  Raises :class:`WorkerDied` if a needed rank dies or
+        any peer initiates recovery."""
+        seq = self._seq
+        self._seq += 1
+        peers = self.live_peers()
+        frame = pack_frame(K_CTRL, epoch=self.epoch, op=self.op_seq,
+                           src_w=self.rank, q=seq, fmt=C_GATHER,
+                           payload=pickle.dumps(obj, protocol=4))
+        broken = []
+        for r in peers:
+            try:
+                self.mesh.send_to_rank(r, frame)
+            except WorkerDied:
+                broken.append(r)
+        if broken:
+            raise WorkerDied(broken)
+        got = self.mesh.wait_ctrl(self.epoch, C_GATHER, seq, peers,
+                                  self.io_timeout)
+        out = [None] * self.world
+        for r, v in got.items():
+            out[r] = v
+        out[self.rank] = obj
+        return out
+
+    def barrier(self) -> None:
+        self.allgather(None)
+
+    def gather_by_worker(self, mine: dict) -> list:
+        """Allgather per-rank ``{worker: payload}`` dicts and assemble
+        the [W] list — every logical worker's slot must be filled by
+        exactly its owning rank, whatever the current assignment."""
+        slots = self.allgather(mine)
+        out = [None] * self.num_workers
+        seen = [False] * self.num_workers
+        for d in slots:
+            if not d:
+                continue
+            for w, v in d.items():
+                if seen[w]:
+                    raise TransportError(
+                        f"worker {w} reported by two ranks")
+                out[w] = v
+                seen[w] = True
+        missing = [w for w in range(self.num_workers) if not seen[w]]
+        if missing:
+            # a rank that died before the collective started contributes
+            # a silent None slot — surface its workers' absence as the
+            # death itself so recoverable() re-plans ownership
+            with self.mesh.cv:
+                dead = ({self.assign[w] for w in missing}
+                        & set(self.mesh.dead))
+            if dead:
+                raise WorkerDied(dead)
+            raise TransportError(
+                f"gather_by_worker: no owner reported workers {missing}")
+        return out
+
+    # -- data plane (called by ProcExchange) --------------------------------
+
+    def send_data(self, src_w: int, dst_w: int, q: int, p: int,
+                  entry) -> None:
+        """Route one cross-rank posted batch: consult the fault injector
+        (drop / hold / kill-after-k-frames), record it in the op ledger,
+        and frame it onto the destination rank's socket.  Send failures
+        to a dying peer are swallowed — the receiver-side completeness
+        check plus the resend protocol (or recovery) own correctness."""
+        op = self.op_seq
+        rec = {"state": "sent", "src_w": src_w, "dst_w": dst_w,
+               "p": p, "q": q, "entry": entry, "op": op}
+        inj = self.injector
+        if inj is not None:
+            if inj.should_drop(self.pe_seq, src_w, dst_w):
+                rec["state"] = "dropped"
+            elif inj.should_hold(self.pe_seq, src_w):
+                rec["state"] = "held"
+        with self._lock:
+            self._ledger.setdefault(op, {}).setdefault(
+                (src_w, dst_w), {})[(p, q)] = rec
+            if rec["state"] == "held":
+                self._held.setdefault(op, []).append(rec)
+            key = {"dropped": "dropped", "held": "held",
+                   "sent": "wire_frames"}[rec["state"]]
+            self.stats[key][src_w, dst_w] += 1
+        if rec["state"] != "sent":
+            return
+        self._send_record(rec)
+        if inj is not None:
+            inj.on_frame_sent(self, self.pe_seq, src_w)
+
+    def _send_record(self, rec) -> None:
+        data = entry_to_frame(rec["entry"], epoch=self.epoch,
+                              op=rec["op"], src_w=rec["src_w"],
+                              dst_w=rec["dst_w"], p=rec["p"], q=rec["q"])
+        try:
+            self.mesh.send_to_rank(self.assign[rec["dst_w"]], data,
+                                   ignore_dead=True)
+        except WorkerDied:
+            pass
+
+    def flush_held(self, op: int) -> None:
+        """Deliver straggler-held frames from every committed op < ``op``
+        — the deterministic 'past the deadline' point: the next op's
+        send phase is structurally after the delayed op completed
+        everywhere.  Frames are re-headed with the current epoch so a
+        post-recovery receiver files them as valid late data."""
+        with self._lock:
+            todo = [rec for o, recs in self._held.items() if o < op
+                    for rec in recs if rec["state"] == "held"]
+            for rec in todo:
+                rec["state"] = "flushed"
+                self.stats["late_delivered"][rec["src_w"],
+                                             rec["dst_w"]] += 1
+        for rec in sorted(todo, key=lambda r: (r["op"], r["p"], r["q"])):
+            self._send_record(rec)
+
+    def resolve_arrivals(self, posted: np.ndarray) -> None:
+        """Receiver-side completeness check, run after the send-phase
+        allgather: ``posted`` is the summed per-(src worker, dst worker)
+        posted-batch matrix, so for every cross-rank pair targeting one
+        of my workers the expected frame count is known exactly.  TCP
+        FIFO guarantees a sender's frames precede its allgather
+        contribution, so any shortfall here is a dropped or held frame:
+        ask the sender's ledger, drain the resends, and record the held
+        count as this op's deferred-delivery promise."""
+        op = self.op_seq
+        for dst_w in self.my_workers():
+            for src_w in range(self.num_workers):
+                src_rank = self.assign[src_w]
+                if src_rank == self.rank:
+                    continue
+                expect = int(posted[src_w, dst_w])
+                if not expect:
+                    continue
+                have = self.mesh.count_arrived(op, self.epoch, src_w,
+                                               dst_w)
+                if have == expect:
+                    continue
+                got = self.mesh.arrived_keys(op, self.epoch, src_w, dst_w)
+                ack = self._resend_request(src_rank, op, src_w, dst_w,
+                                           got)
+                deadline = time.monotonic() + self.io_timeout
+                while (self.mesh.count_arrived(op, self.epoch, src_w,
+                                               dst_w)
+                       < have + ack["resent"]):
+                    with self.mesh.cv:
+                        if src_rank in self.mesh.dead:
+                            raise WorkerDied({src_rank})
+                        for _rr, (rep_ep, rep) in list(
+                                self.mesh.fails.items()):
+                            if rep_ep >= self.epoch and rep:
+                                self.mesh.dead |= rep
+                                raise WorkerDied(rep)
+                    if time.monotonic() > deadline:
+                        raise TransportError(
+                            f"resent frames from worker {src_w} never "
+                            f"arrived")
+                    time.sleep(0.002)
+                with self._lock:
+                    self.stats["redelivered"][src_w, dst_w] += (
+                        ack["resent"])
+                if have + ack["resent"] + ack["held"] != expect:
+                    raise TransportError(
+                        f"frame accounting for ({src_w}->{dst_w}) op "
+                        f"{op}: posted {expect}, arrived {have}, resent "
+                        f"{ack['resent']}, held {ack['held']}")
+                self._op_deferred[op] = (self._op_deferred.get(op, 0)
+                                         + ack["held"])
+
+    def _resend_request(self, src_rank: int, op: int, src_w: int,
+                        dst_w: int, got: list) -> dict:
+        self._p2p_seq += 1
+        seq = self._p2p_seq
+        req = {"op": op, "src_w": src_w, "dst_w": dst_w, "got": got}
+        frame = pack_frame(K_CTRL, epoch=self.epoch, op=op,
+                           src_w=self.rank, q=seq, fmt=C_RESEND_REQ,
+                           payload=pickle.dumps(req, protocol=4))
+        self.mesh.send_to_rank(src_rank, frame)
+        got_ack = self.mesh.wait_ctrl(self.epoch, C_RESEND_ACK, seq,
+                                      [src_rank], self.io_timeout)
+        return got_ack[src_rank]
+
+    def _on_resend_req(self, frame: Frame) -> None:
+        """Answer a peer's completeness shortfall from the op ledger
+        (runs on the mesh receiver thread).  Dropped (and, defensively,
+        sent-but-lost) frames are redelivered before the ack on the same
+        FIFO link; held frames are only counted — they stay queued for
+        the deferred flush."""
+        req = pickle.loads(frame.payload)
+        with self._lock:
+            records = dict(self._ledger.get(req["op"], {}).get(
+                (req["src_w"], req["dst_w"]), {}))
+        got = set(map(tuple, req["got"]))
+        resent = held = 0
+        for key in sorted(set(records) - got):
+            rec = records[key]
+            if rec["state"] == "held":
+                held += 1
+                continue
+            rec["state"] = "redelivered"
+            self._send_record(rec)
+            resent += 1
+        ack = pack_frame(K_CTRL, epoch=frame.epoch, op=req["op"],
+                         src_w=self.rank, q=frame.q, fmt=C_RESEND_ACK,
+                         payload=pickle.dumps(
+                             {"resent": resent, "held": held},
+                             protocol=4))
+        self.mesh.send_to_rank(frame.src_w, ack, ignore_dead=True)
+
+    def take_socket_entries(self, dst_w: int, q: int):
+        """Current-op socket arrivals plus deferred late deliveries for
+        one destination partition (consumed late entries are journaled so
+        a rollback can re-file them)."""
+        cur, late = self.mesh.drain_data(self.op_seq, self.epoch, dst_w,
+                                         q)
+        if late:
+            with self._lock:
+                self._consumed_late.setdefault(self.op_seq, []).extend(
+                    (o, p, entry, ep, src_w, dst_w, q)
+                    for (o, p, entry, ep, src_w) in late)
+        return cur, late
+
+    def pending_deferred(self) -> int:
+        """Frames promised-but-held for the current op on MY receive side
+        (from resend acks).  The executor adds this to the step's update
+        total so a driver cannot observe a premature fixpoint while
+        deferred messages are still in flight."""
+        return int(self._op_deferred.get(self.op_seq, 0))
+
+    # -- recovery -----------------------------------------------------------
+
+    def register_engine(self, engine) -> None:
+        self._engines.append(engine)
+
+    def recoverable(self, engine, body):
+        """Run one op (ProcessEdges / ProcessVertices body) with
+        checkpoint-rollback-replay recovery.  The sequence per attempt:
+        flush straggler-held frames from prior ops, checkpoint my owned
+        spills at this op id, ready-barrier, run the body.  On
+        :class:`WorkerDied`: FAIL consensus, deterministic ownership
+        re-plan, shard/spill adoption, rollback to the op checkpoint,
+        epoch bump, replay."""
+        self.op_seq += 1
+        op = self.op_seq
+        for _attempt in range(self.world + 1):
+            self.flush_held(op)
+            engine._proc_ckpt_save(op)
+            try:
+                self.barrier()
+                out = body()
+                self._commit_op(op)
+                return out
+            except WorkerDied:
+                self._recover(engine, op)
+        raise TransportError(
+            f"op {op}: recovery did not converge after "
+            f"{self.world + 1} attempts")
+
+    def _commit_op(self, op: int) -> None:
+        with self._lock:
+            for o in [o for o in self._ledger if o <= op]:
+                del self._ledger[o]
+            for o in [o for o in self._held
+                      if o < op and all(r["state"] != "held"
+                                        for r in self._held[o])]:
+                del self._held[o]
+            for o in [o for o in self._consumed_late if o <= op]:
+                del self._consumed_late[o]
+            self._op_deferred.pop(op, None)
+        self.mesh.purge_older(op)
+
+    def _recover(self, engine, op: int) -> None:
+        agreed = self._consensus()
+        live = [r for r in range(self.world) if r not in agreed]
+        if self.rank not in live:
+            raise TransportError("recovery: local rank marked dead")
+        from repro.runtime.elastic import plan_worker_recovery
+        new_assign = plan_worker_recovery(live, self.num_workers,
+                                          self.assign)
+        adopted = [w for w in range(self.num_workers)
+                   if new_assign[w] == self.rank
+                   and self.assign[w] != self.rank]
+        self.assign = list(new_assign)
+        for eng in self._engines:
+            eng._proc_adopt_workers(adopted, in_op=(eng is engine))
+        engine._proc_rollback(op)
+        # replayed-attempt hygiene: stale in-flight data, ledger entries
+        # and held frames of the failed attempt must not leak into the
+        # replay (late entries its takes consumed are re-filed first)
+        with self._lock:
+            relate = self._consumed_late.pop(op, [])
+            self._ledger.pop(op, None)
+            self._held.pop(op, None)
+            self._op_deferred.pop(op, None)
+        if relate:
+            self.mesh.restore_late(relate)
+        self.epoch += 1
+        self.mesh.purge_op(op, self.epoch)
+        self.mesh.purge_ctrl(self.epoch)
+        self._seq = 0
+        self.stats["recoveries"] += 1
+
+    def _consensus(self) -> frozenset:
+        """Agree on the dead set: broadcast my view, wait until every
+        live rank's latest FAIL report equals the union.  Dead sets only
+        grow, so this terminates; every survivor leaves with the same
+        set and therefore computes the same recovery plan."""
+        deadline = time.monotonic() + self.io_timeout
+        while True:
+            with self.mesh.cv:
+                my = frozenset(self.mesh.dead)
+            self.mesh.broadcast_fail(self.epoch, my)
+            with self.mesh.cv:
+                while True:
+                    if time.monotonic() > deadline:
+                        raise TransportError(
+                            "failure consensus timed out")
+                    cur = frozenset(self.mesh.dead)
+                    if cur != my:
+                        break               # new death: rebroadcast
+                    live = [r for r in range(self.world)
+                            if r != self.rank and r not in cur]
+                    # only reports from THIS epoch's recovery count;
+                    # stale reports from a completed recovery are noise
+                    reports = {}
+                    for r in live:
+                        got = self.mesh.fails.get(r)
+                        reports[r] = (got[1] if got is not None
+                                      and got[0] >= self.epoch else None)
+                    if any(v is None for v in reports.values()):
+                        self.mesh.cv.wait(0.2)
+                        continue
+                    union = set(my)
+                    for v in reports.values():
+                        union |= v
+                    if union == set(my):
+                        if all(v == union for v in reports.values()):
+                            return frozenset(union)
+                        self.mesh.cv.wait(0.2)  # peers catching up
+                        continue
+                    self.mesh.dead |= union     # adopt reported deaths
+                    break
+
+    def finalize(self) -> None:
+        """Graceful end of run: drain any still-held frames, final
+        barrier among live ranks, close sockets."""
+        try:
+            self.flush_held(self.op_seq + 1)
+            self.barrier()
+        except (TransportError, OSError):
+            pass
+        self.mesh.close()
+
+
+# --------------------------------------------------------------------------
+# ProcExchange: the Exchange contract over the mesh
+# --------------------------------------------------------------------------
+
+
+class ProcExchange(exchange_mod.Exchange):
+    """Exchange whose cross-rank batches travel the socket mesh.
+
+    Posting is unchanged from the thread Exchange — same encoder, same
+    measured counters, same ``posted`` matrix — but :meth:`_put_entry`
+    frames encoded entries for other ranks onto sockets instead of the
+    shared inbox (same-rank cross-worker batches stay local, already
+    encoded and priced, exactly as the thread Exchange holds them).
+    :meth:`take_dest` additionally drains the mesh inbox: current-op
+    arrivals fill their rows one-to-one, and straggler-deferred late
+    arrivals merge through the slot monoid
+    (:func:`repro.runtime.straggler.merge_deferred_entry`)."""
+
+    def __init__(self, num_workers: int, v_max: int, compression: bool,
+                 ctx: ProcContext, merge_op=None):
+        super().__init__(num_workers, v_max, compression)
+        self.ctx = ctx
+        self.merge_op = merge_op
+
+    def _put_entry(self, src_worker: int, dst_worker: int, q: int,
+                   p: int, entry: tuple) -> None:
+        ctx = self.ctx
+        if ctx.assign[dst_worker] == ctx.rank:
+            super()._put_entry(src_worker, dst_worker, q, p, entry)
+            return
+        ctx.send_data(src_worker, dst_worker, q, p, entry)
+
+    def take_dest(self, dst_worker: int, q: int, p_cnt: int,
+                  device_decode: bool = False):
+        cur, late = self.ctx.take_socket_entries(dst_worker, q)
+        for p, entry in cur:
+            super()._put_entry(-1, dst_worker, q, p, entry)
+        recv_mask, recv_msg = super().take_dest(
+            dst_worker, q, p_cnt, device_decode=device_decode)
+        if late:
+            from repro.runtime.straggler import merge_deferred_entry
+            if self.merge_op is None:
+                raise TransportError(
+                    "deferred delivery needs a slot-monoid merge op")
+            for (_o, p, entry, _ep, _src_w) in late:
+                if entry[0] != "wire":
+                    raise TransportError(
+                        "deferred delivery supports solo batches only")
+                m2, v2 = exchange_mod.decode_batch(
+                    entry[1], entry[3], entry[2], self.v_max,
+                    device=device_decode)
+                recv_mask[p], recv_msg[p] = merge_deferred_entry(
+                    self.merge_op, recv_mask[p], recv_msg[p], m2, v2)
+        return recv_mask, recv_msg

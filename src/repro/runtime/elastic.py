@@ -56,6 +56,37 @@ def plan_elastic_mesh(available: int, *, model: int = 16,
     return MeshPlan(shape, names, used, available - used, tuple(notes))
 
 
+def plan_worker_recovery(live_ranks: Sequence[int], num_workers: int,
+                         prev: Sequence[int]) -> list:
+    """Deterministic logical-worker -> physical-rank re-plan after a
+    failure (the dist_ooc recovery twin of :func:`plan_elastic_mesh`).
+
+    ``prev[w]`` is the rank that owned logical worker ``w`` before the
+    failure; ``live_ranks`` is the agreed post-consensus live set.
+    Workers whose rank survived keep their assignment; each orphaned
+    worker (ascending w) is adopted by the live rank owning the fewest
+    workers, ties to the lowest rank.  Every survivor computes this from
+    the agreed live set alone — no coordinator — and all derive the
+    identical plan, which is what lets them agree on who re-opens the
+    dead rank's chunk shards and spills (DESIGN.md §13).  Logical worker
+    count never changes: W keys the wire pricing and the spill layout,
+    so recovery moves ownership, not shape."""
+    live = sorted({int(r) for r in live_ranks})
+    if not live:
+        raise ValueError("no live ranks to plan recovery onto")
+    assign = [int(prev[w]) for w in range(num_workers)]
+    loads = {r: 0 for r in live}
+    for r in assign:
+        if r in loads:
+            loads[r] += 1
+    for w in range(num_workers):
+        if assign[w] not in loads:
+            r = min(live, key=lambda x: (loads[x], x))
+            assign[w] = r
+            loads[r] += 1
+    return assign
+
+
 def make_mesh_from_plan(plan: MeshPlan, devices: Optional[Sequence] = None):
     devs = list(devices if devices is not None else jax.devices())
     sel = np.asarray(devs[:plan.used_devices]).reshape(plan.shape)

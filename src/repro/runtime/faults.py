@@ -1,0 +1,173 @@
+"""Deterministic fault injection for process-mode dist_ooc (DESIGN.md §13).
+
+A :class:`FaultPlan` is a JSON-serializable schedule of failures keyed by
+ProcessEdges call index (``pe`` — the engine's ``proc_ctx.pe_seq``, 1-based:
+iteration *t* of a driver is its *t*-th ProcessEdges call).  Three kinds:
+
+* ``kill(worker, pe, phase)`` — the rank that *initially* owns logical
+  worker ``w`` exits hard (``os._exit(FAULT_EXIT)``) at a defined point of
+  that op: ``start`` (before its send tasks), ``send`` (after
+  ``after_frames`` socket frames), ``recv`` (before its receive tasks) or
+  ``apply`` (after its apply loop, before the final collective).  All four
+  points precede the dead rank's contribution to the op's final collective,
+  which is what makes rollback-and-replay sufficient (no survivor can have
+  committed the op).  The initial-owner guard is what makes replay safe:
+  the adopting survivor re-executes the same injection point without
+  re-firing it.
+
+* ``drop(src, dst, pe, frame)`` — the ``frame``-th cross-rank frame posted
+  from worker ``src`` to worker ``dst`` in that op is silently not sent.
+  The receiver's completeness check (posted-matrix vs arrived counts)
+  detects the shortfall and the sender's ledger redelivers — byte counters
+  are charged once, at post time, so the run stays bit-identical.
+
+* ``delay(worker, pe)`` — every cross-rank frame worker ``w`` posts in
+  that op is held past the straggler deadline and delivered at the next
+  op's send phase, where the receiver merges it through the slot monoid
+  (``straggler.merge_deferred_entry``).  Only monoid-legal for idempotent
+  slots (MIN/MAX); :meth:`FaultPlan.validate_for_monoid` rejects ADD.
+
+The injector is consulted only on the socket data path and at the kill
+points the executor exposes — a run with an empty plan is byte-for-byte
+the plain process-mode run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+
+FAULT_EXIT = 42         # exit code of an injected kill (asserted by tests)
+
+KILL_PHASES = ("start", "send", "recv", "apply")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultAction:
+    kind: str               # "kill" | "drop" | "delay"
+    pe: int                 # ProcessEdges call index (1-based)
+    worker: int = -1        # kill/delay: acting logical worker
+    phase: str = "start"    # kill: one of KILL_PHASES
+    after_frames: int = 0   # kill@send: die after this many frames
+    src: int = -1           # drop: source worker
+    dst: int = -1           # drop: destination worker
+    frame: int = 0          # drop: per-(src,dst) frame index in the op
+
+
+class FaultPlan:
+    """An immutable, validated, JSON-round-trippable fault schedule."""
+
+    def __init__(self, actions=()):
+        self.actions = tuple(actions)
+        for a in self.actions:
+            if a.kind not in ("kill", "drop", "delay"):
+                raise ValueError(f"unknown fault kind {a.kind!r}")
+            if a.pe < 1:
+                raise ValueError(
+                    f"fault pe index must be >= 1 (1-based ProcessEdges "
+                    f"call), got {a.pe}")
+            if a.kind == "kill" and a.phase not in KILL_PHASES:
+                raise ValueError(
+                    f"kill phase must be one of {KILL_PHASES}, got "
+                    f"{a.phase!r}")
+            if a.kind in ("kill", "delay") and a.worker < 0:
+                raise ValueError(f"{a.kind} fault needs a worker")
+            if a.kind == "drop" and (a.src < 0 or a.dst < 0):
+                raise ValueError("drop fault needs src and dst workers")
+
+    # -- constructors -------------------------------------------------------
+
+    @staticmethod
+    def kill(worker: int, pe: int, phase: str = "start",
+             after_frames: int = 0) -> "FaultAction":
+        return FaultAction("kill", pe, worker=worker, phase=phase,
+                           after_frames=after_frames)
+
+    @staticmethod
+    def drop(src: int, dst: int, pe: int, frame: int = 0) -> "FaultAction":
+        return FaultAction("drop", pe, src=src, dst=dst, frame=frame)
+
+    @staticmethod
+    def delay(worker: int, pe: int) -> "FaultAction":
+        return FaultAction("delay", pe, worker=worker)
+
+    # -- validation ---------------------------------------------------------
+
+    def has_delay(self) -> bool:
+        return any(a.kind == "delay" for a in self.actions)
+
+    def validate_for_monoid(self, monoid_name: str) -> None:
+        """Deferred (delayed) delivery re-applies a message after other
+        messages already combined — legal only for idempotent monoids.
+        ADD would double-count the deferred contribution's interaction
+        with the destination's intermediate writes."""
+        if self.has_delay() and monoid_name not in ("min", "max"):
+            raise ValueError(
+                f"delay faults defer message delivery across rounds, "
+                f"which is only fixpoint-legal for idempotent monoid "
+                f"slots (min/max), not {monoid_name!r}")
+
+    # -- serialization ------------------------------------------------------
+
+    def to_json(self) -> str:
+        return json.dumps([dataclasses.asdict(a) for a in self.actions])
+
+    @classmethod
+    def from_json(cls, text: str) -> "FaultPlan":
+        return cls([FaultAction(**d) for d in json.loads(text)])
+
+
+class FaultInjector:
+    """Per-process realization of a :class:`FaultPlan`.
+
+    Hook points (all no-ops under an empty plan):
+
+    * :meth:`maybe_kill` — executor phase boundaries (start/recv/apply);
+    * :meth:`on_frame_sent` — after each socket frame (kill@send);
+    * :meth:`should_drop` / :meth:`should_hold` — consulted by
+      ``ProcContext.send_data`` per cross-rank frame.
+
+    Kills fire only on the worker's *initial* owner rank (the replaying
+    adopter must not re-die), exit via ``os._exit(FAULT_EXIT)`` — no
+    cleanup, no flush: the hardest failure the transport can see short of
+    a machine loss."""
+
+    def __init__(self, plan: FaultPlan, rank: int):
+        self.plan = plan
+        self.rank = rank
+        self._lock = threading.Lock()
+        self._sent: dict = {}       # (pe, src_w) -> frames sent
+        self._posted: dict = {}     # (pe, src_w, dst_w) -> frames posted
+
+    def _my_kill(self, ctx, pe: int, phase: str):
+        for a in self.plan.actions:
+            if (a.kind == "kill" and a.pe == pe and a.phase == phase
+                    and ctx.initial_assign[a.worker] == self.rank
+                    and ctx.assign[a.worker] == self.rank):
+                return a
+        return None
+
+    def maybe_kill(self, ctx, phase: str) -> None:
+        if self._my_kill(ctx, ctx.pe_seq, phase) is not None:
+            os._exit(FAULT_EXIT)
+
+    def on_frame_sent(self, ctx, pe: int, src_w: int) -> None:
+        with self._lock:
+            n = self._sent[(pe, src_w)] = self._sent.get((pe, src_w),
+                                                         0) + 1
+        a = self._my_kill(ctx, pe, "send")
+        if a is not None and a.worker == src_w and n > a.after_frames:
+            os._exit(FAULT_EXIT)
+
+    def should_drop(self, pe: int, src_w: int, dst_w: int) -> bool:
+        with self._lock:
+            idx = self._posted.get((pe, src_w, dst_w), 0)
+            self._posted[(pe, src_w, dst_w)] = idx + 1
+        return any(a.kind == "drop" and a.pe == pe and a.src == src_w
+                   and a.dst == dst_w and a.frame == idx
+                   for a in self.plan.actions)
+
+    def should_hold(self, pe: int, src_w: int) -> bool:
+        return any(a.kind == "delay" and a.pe == pe and a.worker == src_w
+                   for a in self.plan.actions)

@@ -44,6 +44,31 @@ def deferred_merge(recv_msg, recv_mask, arrived_peers):
     return now_msg, now_mask, deferred_msg, deferred_mask
 
 
+def merge_deferred_entry(monoid_op, mask_now, vals_now, mask_late,
+                         vals_late):
+    """Combine two receive rows for the same (source partition, dest
+    batch): the current round's arrivals with a peer's late (deferred)
+    delivery — the host-numpy twin of :func:`deferred_merge`, used by the
+    process transport's exchange when a straggler's frames from round t
+    are injected into round t+1 (DESIGN.md §13).
+
+    mask_*: bool [v_max]; vals_*: f32 [v_max] (unset rows may hold
+    garbage, never read).  Positions present in both merge through
+    ``monoid_op`` (np.minimum / np.maximum — associative, commutative,
+    idempotent, so late re-delivery cannot change the fixpoint);
+    positions present in one pass through untouched.  Returns
+    (mask, vals) with vals zeroed outside the mask."""
+    both = mask_now & mask_late
+    mask = mask_now | mask_late
+    vals = np.where(mask_now, vals_now, 0.0).astype(np.float32)
+    vals = np.where(mask_late & ~mask_now, vals_late, vals)
+    if both.any():
+        vals = np.where(both, monoid_op(
+            np.asarray(vals_now, np.float32),
+            np.asarray(vals_late, np.float32)), vals)
+    return mask, vals.astype(np.float32, copy=False)
+
+
 def simulate_round(latencies: np.ndarray, policy: DeferralPolicy):
     """Given per-peer message latencies for one round, decide the deadline
     and which peers are deferred.  Returns (deadline, arrived_mask,

@@ -1,0 +1,129 @@
+"""Shared helpers for process-mode dist_ooc tests (DESIGN.md §13).
+
+Builds one small weighted RMAT problem plus its sharded chunk stores
+(forward and reversed, for wcc), runs an in-process thread-mode dist_ooc
+baseline shaped exactly like a procworker ``result_r{rank}.npz``, and
+launches real multi-process runs via :func:`repro.runtime.procworker.launch`.
+Both tests/test_transport.py (loopback parity gate) and
+tests/test_fault_injection.py (kill/drop/delay matrix) import this —
+bit-identity of the two result shapes is the whole point.
+"""
+import itertools
+import os
+
+import numpy as np
+
+from repro.core import (
+    ChunkStore, Engine, EngineConfig, build_dist_graph, build_formats,
+    make_spec,
+)
+from repro.core import algorithms as alg
+from repro.data.graphs import rmat_graph
+from repro.runtime.procworker import launch, load_result
+
+GRAPH = dict(scale=7, edge_factor=16, seed=5, weighted=True)
+SPEC = dict(num_partitions=4, batch_size=16)
+SOURCE = 3
+
+ALG_SPECS = {
+    "pagerank": {"name": "pagerank", "args": {"num_iters": 3}},
+    "bfs": {"name": "bfs", "args": {"source": SOURCE}},
+    "sssp": {"name": "sssp", "args": {"source": SOURCE}},
+    "wcc": {"name": "wcc", "args": {}},
+}
+
+# Result fields that must be bit-equal between a failure-free run, a
+# recovered run, and the thread-mode baseline.
+RESULT_KEYS = ("values", "iterations", "rets", "counter_names",
+               "counter_vals", "wt_disk", "wt_net", "wt_edges")
+
+_uid = itertools.count()
+
+
+def build_problem(root: str, workers=(2, 4)) -> dict:
+    g = rmat_graph(GRAPH["scale"], GRAPH["edge_factor"],
+                   seed=GRAPH["seed"], weighted=GRAPH["weighted"])
+    spec = make_spec(g, **SPEC)
+    dg = build_dist_graph(g, spec)
+    fm = build_formats(dg)
+    dg_r = build_dist_graph(g.reversed(), spec)
+    fm_r = build_formats(dg_r)
+    stores = {w: ChunkStore.build_sharded(
+        dg, fm, os.path.join(root, f"W{w}"), w) for w in workers}
+    stores_r = {w: ChunkStore.build_sharded(
+        dg_r, fm_r, os.path.join(root, f"Wr{w}"), w) for w in workers}
+    return dict(g=g, spec=spec, dg=dg, fm=fm, dg_r=dg_r, fm_r=fm_r,
+                stores=stores, stores_r=stores_r)
+
+
+def run_threads(prob: dict, w: int, algname: str) -> dict:
+    """Thread-mode dist_ooc reference run, shaped like a procworker
+    result npz (sequential reference: the parallel determinism gate in
+    test_dist_ooc.py already proves thread pools don't change bits)."""
+    cfg = EngineConfig(executor="dist_ooc", num_workers=w)
+    eng = Engine(prob["dg"], prob["fm"], cfg, store=prob["stores"][w])
+    if algname == "wcc":
+        eng_r = Engine(prob["dg_r"], prob["fm_r"], cfg,
+                       store=prob["stores_r"][w])
+        values, stats = alg.wcc(eng, eng_r)
+    elif algname == "pagerank":
+        values, stats = alg.pagerank(
+            eng, ALG_SPECS["pagerank"]["args"]["num_iters"])
+    elif algname == "bfs":
+        values, stats = alg.bfs(eng, SOURCE)
+    elif algname == "sssp":
+        values, stats = alg.sssp(eng, SOURCE)
+    else:
+        raise ValueError(algname)
+    names = sorted(stats.counters)
+    wt = eng.worker_totals
+    return dict(
+        values=np.asarray(values),
+        iterations=np.int64(stats.iterations),
+        rets=np.asarray(stats.per_iter_return, np.float64),
+        counter_names=np.asarray(names),
+        counter_vals=np.asarray([stats.counters[k] for k in names],
+                                np.float64),
+        wt_disk=np.asarray([t["disk_bytes"] for t in wt], np.float64),
+        wt_net=np.asarray([t["net_bytes"] for t in wt], np.float64),
+        wt_edges=np.asarray([t["edges_touched"] for t in wt], np.float64),
+    )
+
+
+def proc_spec(prob: dict, w: int, algname: str, run_dir: str, *,
+              world=None, plan=None, io_timeout: float = 120.0) -> dict:
+    spec = {
+        # unique per launch so per-op recovery checkpoints from earlier
+        # runs against the same shard roots can never be restored
+        "run_id": f"r{next(_uid)}-{os.getpid()}",
+        "world": w if world is None else world,
+        "num_workers": w,
+        "rendezvous": os.path.join(run_dir, "rdv"),
+        "result_dir": os.path.join(run_dir, "out"),
+        "graph": GRAPH,
+        "spec": SPEC,
+        "store_root": prob["stores"][w].root,
+        "algorithm": ALG_SPECS[algname],
+        "fault_plan": plan.to_json() if plan is not None else None,
+        "io_timeout": io_timeout,
+    }
+    if algname == "wcc":
+        spec["store_root_rev"] = prob["stores_r"][w].root
+    return spec
+
+
+def run_procs(prob: dict, w: int, algname: str, run_dir: str, *,
+              world=None, plan=None, timeout: float = 240.0):
+    """Launch a real multi-process run; returns (spec, exit codes,
+    {rank: result dict} for ranks that exited cleanly)."""
+    spec = proc_spec(prob, w, algname, run_dir, world=world, plan=plan)
+    codes = launch(spec, timeout=timeout)
+    results = {r: load_result(spec["result_dir"], r)
+               for r, c in enumerate(codes) if c == 0}
+    return spec, codes, results
+
+
+def assert_result_equal(got: dict, want: dict, keys=RESULT_KEYS) -> None:
+    for k in keys:
+        np.testing.assert_array_equal(
+            np.asarray(got[k]), np.asarray(want[k]), err_msg=k)

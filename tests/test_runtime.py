@@ -2,10 +2,10 @@
 import numpy as np
 import pytest
 
-from repro.runtime.elastic import plan_elastic_mesh
+from repro.runtime.elastic import plan_elastic_mesh, plan_worker_recovery
 from repro.runtime.straggler import (
-    DeferralPolicy, plan_backup_shards, simulate_round,
-    simulate_training_with_stragglers,
+    DeferralPolicy, deferred_merge, merge_deferred_entry,
+    plan_backup_shards, simulate_round, simulate_training_with_stragglers,
 )
 
 
@@ -105,6 +105,121 @@ def test_simulate_round_min_peers_floor():
 def test_backup_shards_pick_slowest():
     times = np.array([1.0, 9.0, 2.0, 8.0])
     assert set(plan_backup_shards(times, 2)) == {1, 3}
+
+
+def test_deferred_merge_splits_by_peer():
+    rng = np.random.default_rng(0)
+    recv_mask = rng.random((4, 8)) < 0.5
+    recv_msg = rng.random((4, 8)).astype(np.float32)
+    arrived = np.array([True, False, True, False])
+    now_msg, now_mask, def_msg, def_mask = deferred_merge(
+        recv_msg, recv_mask, arrived)
+    # clean row split: arrived rows now, the rest deferred, no overlap
+    np.testing.assert_array_equal(np.asarray(now_mask)[~arrived], False)
+    np.testing.assert_array_equal(np.asarray(def_mask)[arrived], False)
+    np.testing.assert_array_equal(
+        np.asarray(now_mask) | np.asarray(def_mask), recv_mask)
+    assert not np.any(np.asarray(now_mask) & np.asarray(def_mask))
+    # values zeroed outside each half's mask
+    np.testing.assert_array_equal(
+        np.asarray(now_msg)[~np.asarray(now_mask)], 0)
+    np.testing.assert_array_equal(
+        np.asarray(def_msg)[~np.asarray(def_mask)], 0)
+
+
+@pytest.mark.parametrize("op", [np.minimum, np.maximum])
+def test_deferred_merge_monoid_fixpoint(op):
+    """min/max over (now, later-deferred) equals min/max over everything
+    at once — the algebraic fact that makes deferral sound."""
+    rng = np.random.default_rng(1)
+    recv_mask = rng.random((4, 8)) < 0.6
+    recv_msg = rng.random((4, 8)).astype(np.float32)
+    arrived = np.array([True, True, False, False])
+    now_msg, now_mask, def_msg, def_mask = deferred_merge(
+        recv_msg, recv_mask, arrived)
+    ident = np.float32(np.inf) if op is np.minimum else np.float32(-np.inf)
+    all_at_once = op.reduce(np.where(recv_mask, recv_msg, ident), axis=0)
+    two_rounds = op(
+        op.reduce(np.where(np.asarray(now_mask), np.asarray(now_msg),
+                           ident), axis=0),
+        op.reduce(np.where(np.asarray(def_mask), np.asarray(def_msg),
+                           ident), axis=0))
+    np.testing.assert_array_equal(all_at_once, two_rounds)
+
+
+@pytest.mark.parametrize("op", [np.minimum, np.maximum])
+def test_merge_deferred_entry_monoid(op):
+    mask_now = np.array([True, True, False, False])
+    vals_now = np.array([2.0, 5.0, 99.0, 99.0], np.float32)  # 99 = garbage
+    mask_late = np.array([True, False, True, False])
+    vals_late = np.array([3.0, 88.0, 7.0, 88.0], np.float32)
+    mask, vals = merge_deferred_entry(op, mask_now, vals_now, mask_late,
+                                      vals_late)
+    np.testing.assert_array_equal(mask, [True, True, True, False])
+    both = float(op(np.float32(2.0), np.float32(3.0)))
+    # both-present merges through the monoid, one-sided passes through,
+    # garbage outside either mask never leaks
+    np.testing.assert_array_equal(vals, [both, 5.0, 7.0, 0.0])
+    assert vals.dtype == np.float32
+    # idempotent re-delivery of the same late entry changes nothing
+    mask2, vals2 = merge_deferred_entry(op, mask, vals, mask_late,
+                                        vals_late)
+    np.testing.assert_array_equal(mask2, mask)
+    np.testing.assert_array_equal(vals2, vals)
+
+
+def test_merge_deferred_entry_one_sided():
+    empty = np.zeros(4, bool)
+    garbage = np.full(4, 13.0, np.float32)
+    mask_late = np.array([False, True, False, True])
+    vals_late = np.array([0.0, 4.0, 0.0, 6.0], np.float32)
+    mask, vals = merge_deferred_entry(np.minimum, empty, garbage,
+                                      mask_late, vals_late)
+    np.testing.assert_array_equal(mask, mask_late)
+    np.testing.assert_array_equal(vals, [0.0, 4.0, 0.0, 6.0])
+    mask, vals = merge_deferred_entry(np.minimum, mask_late, vals_late,
+                                      empty, garbage)
+    np.testing.assert_array_equal(mask, mask_late)
+    np.testing.assert_array_equal(vals, [0.0, 4.0, 0.0, 6.0])
+
+
+def test_simulate_round_all_on_time():
+    lat = np.full(6, 2.0)
+    deadline, arrived, m_def, m_all = simulate_round(lat,
+                                                     DeferralPolicy())
+    assert arrived.all() and m_def >= m_all * 0.5
+
+
+def test_elastic_plan_pod_collapse():
+    # 40 devices cannot fill 4 pods x model=16: pod axis collapses to 1
+    p = plan_elastic_mesh(40, model=16, pods=4)
+    assert p.shape == (1, 2, 16)
+    assert any("collapsed" in n for n in p.notes)
+
+
+def test_plan_worker_recovery_adopts_orphans():
+    # rank 1 of {0, 1, 2} died; its workers go to the least-loaded
+    # survivors, ascending w, ties to the lowest rank
+    prev = [0, 1, 2, 0, 1, 2]
+    got = plan_worker_recovery([0, 2], 6, prev)
+    assert got == [0, 0, 2, 0, 2, 2]
+    # survivors keep every assignment they already had
+    for w in range(6):
+        if prev[w] != 1:
+            assert got[w] == prev[w]
+
+
+def test_plan_worker_recovery_balances_and_tiebreaks():
+    # all four workers orphaned: spread over survivors, lowest rank first
+    assert plan_worker_recovery([3, 1], 4, [0, 0, 0, 0]) == [1, 3, 1, 3]
+    # deterministic: same agreed inputs, same plan, every survivor
+    assert (plan_worker_recovery([3, 1], 4, [0, 0, 0, 0])
+            == plan_worker_recovery([1, 3], 4, [0, 0, 0, 0]))
+
+
+def test_plan_worker_recovery_empty_live_set():
+    with pytest.raises(ValueError, match="live"):
+        plan_worker_recovery([], 2, [0, 1])
 
 
 def test_straggler_simulation_shows_speedup():

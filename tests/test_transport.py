@@ -1,0 +1,173 @@
+"""Socket transport for process-mode dist_ooc (DESIGN.md §13).
+
+Three layers:
+
+* **Framing** — every Exchange wire entry (pairs / slab / vpairs / uval /
+  multi-query panel) survives entry -> frame bytes -> parsed frame ->
+  entry bit-for-bit, header fields intact, and the decoded batch matches
+  the original mask/values.
+* **Error paths** — a clean EOF at a frame boundary is ``None``; a peer
+  vanishing mid-header or mid-payload is a :class:`TransportError`, never
+  a garbage frame; thread-local ``("local", ...)`` entries can never cross
+  the wire.
+* **Loopback parity gate** — a real two-process run over sockets on
+  localhost is *bit-identical* to the in-thread dist_ooc Exchange: vertex
+  values, per-iteration returns, every counter (including the
+  ``measured == modeled`` network-byte audit, which ``verify_io`` enforces
+  inside every call), and per-worker totals.
+"""
+import io
+
+import numpy as np
+import pytest
+
+import prochelp
+from repro.core import transport as tp
+from repro.core.exchange import (
+    FMT_MQPANEL, FMT_PAIRS, FMT_SLAB, FMT_UVAL, FMT_VPAIRS, decode_batch,
+    encode_batch, mq_decode_panel, mq_encode_panel,
+)
+
+V_MAX = 256
+
+
+def _batch(density, seed, uniform=False):
+    rng = np.random.default_rng(seed)
+    mask = rng.random(V_MAX) < density
+    values = (rng.random(V_MAX) + 0.25).astype(np.float32)
+    if uniform:
+        values = np.where(mask, np.float32(7.25), 0).astype(np.float32)
+    return mask, values
+
+
+# ---------------------------------------------------------------------------
+# Framing round-trips, all wire formats
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("expect_fmt,density,compression,uniform", [
+    (FMT_PAIRS, 0.05, False, False),
+    (FMT_SLAB, 0.90, False, False),
+    (FMT_VPAIRS, 0.05, True, False),
+    (FMT_UVAL, 0.10, True, True),
+])
+def test_frame_roundtrip_single_query(expect_fmt, density, compression,
+                                      uniform):
+    mask, values = _batch(density, seed=expect_fmt, uniform=uniform)
+    fmt, payload = encode_batch(mask, values, compression=compression)
+    assert fmt == expect_fmt
+    entry = ("wire", fmt, int(mask.sum()), payload)
+    frame, back = tp.frame_roundtrip(entry, epoch=3, op=7, src_w=1,
+                                     dst_w=2, p=5, q=0)
+    assert back == entry
+    assert (frame.kind, frame.epoch, frame.op, frame.src_w, frame.dst_w,
+            frame.p, frame.q) == (tp.K_DATA, 3, 7, 1, 2, 5, 0)
+    m2, v2 = decode_batch(back[1], back[3], back[2], V_MAX)
+    np.testing.assert_array_equal(np.asarray(m2, bool), mask)
+    np.testing.assert_array_equal(np.where(mask, np.asarray(v2), 0),
+                                  np.where(mask, values, 0))
+
+
+def test_frame_roundtrip_mq_panel():
+    q_cnt = 3
+    rng = np.random.default_rng(11)
+    masks = rng.random((q_cnt, V_MAX)) < 0.2
+    masks[1, :] = False                      # empty column is skipped
+    values = (rng.random((q_cnt, V_MAX)).astype(np.float32)
+              * masks.astype(np.float32))
+    values[2] = np.where(masks[2], np.float32(2.5), 0)  # uniform column
+    union = masks.any(axis=0)
+    counts = [int(m.sum()) for m in masks]
+    cols, payload = mq_encode_panel(masks, values, union, counts)
+    entry = ("wire_mq_panel", cols, int(union.sum()), payload)
+    frame, back = tp.frame_roundtrip(entry, epoch=1, op=2, src_w=0,
+                                     dst_w=1, p=3, q=0)
+    assert frame.fmt == FMT_MQPANEL
+    assert frame.aux == len(cols)
+    tag, cols2, u2, payload2 = back
+    assert (tag, u2, payload2) == ("wire_mq_panel", int(union.sum()),
+                                   payload)
+    assert [tuple(c) for c in cols2] \
+        == [(j, c, bool(u)) for j, c, u in cols]
+    m2, v2 = mq_decode_panel(cols2, payload2, u2, V_MAX, q_cnt)
+    np.testing.assert_array_equal(m2, masks)
+    np.testing.assert_array_equal(v2, values)
+
+
+# ---------------------------------------------------------------------------
+# Error paths: truncation, clean EOF, non-wire entries
+# ---------------------------------------------------------------------------
+
+def test_read_exact_partial_read_raises():
+    with pytest.raises(tp.TransportError, match="truncated"):
+        tp.read_exact(io.BytesIO(b"abc").read, 5)
+    assert tp.read_exact(io.BytesIO(b"abcde").read, 5) == b"abcde"
+    assert tp.read_exact(io.BytesIO(b"").read, 0) == b""
+
+
+def test_read_exact_reassembles_short_reads():
+    chunks = [b"ab", b"cd", b"e"]
+
+    def read(_n):
+        return chunks.pop(0) if chunks else b""
+
+    assert tp.read_exact(read, 5) == b"abcde"
+
+
+def test_read_frame_eof_and_truncation():
+    raw = tp.pack_frame(tp.K_DATA, epoch=1, op=2, src_w=0, dst_w=1,
+                        payload=b"xyzw")
+    assert tp.read_frame(io.BytesIO(b"").read) is None   # clean EOF
+    with pytest.raises(tp.TransportError):               # partial header
+        tp.read_frame(io.BytesIO(raw[:tp.HEADER_BYTES - 3]).read)
+    with pytest.raises(tp.TransportError):               # short payload
+        tp.read_frame(io.BytesIO(raw[:-2]).read)
+    frame = tp.read_frame(io.BytesIO(raw).read)
+    assert (frame.kind, frame.epoch, frame.op, frame.payload) \
+        == (tp.K_DATA, 1, 2, b"xyzw")
+
+
+def test_two_frames_back_to_back():
+    raw = (tp.pack_frame(tp.K_DATA, op=1, payload=b"aa")
+           + tp.pack_frame(tp.K_CTRL, op=2, payload=b""))
+    read = io.BytesIO(raw).read
+    assert tp.read_frame(read).payload == b"aa"
+    assert tp.read_frame(read).kind == tp.K_CTRL
+    assert tp.read_frame(read) is None
+
+
+def test_local_entries_cannot_cross_the_wire():
+    mask, values = _batch(0.1, seed=0)
+    with pytest.raises(tp.TransportError, match="local"):
+        tp.entry_to_frame(("local", mask, values), epoch=0, op=0,
+                          src_w=0, dst_w=1, p=0, q=0)
+
+
+# ---------------------------------------------------------------------------
+# Loopback parity gate: sockets == threads, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def prob(tmp_path_factory):
+    return prochelp.build_problem(
+        str(tmp_path_factory.mktemp("proc_store")), workers=(2,))
+
+
+@pytest.mark.parametrize("algname", ["pagerank", "bfs"])
+def test_loopback_process_parity(prob, tmp_path, algname):
+    base = prochelp.run_threads(prob, 2, algname)
+    _, codes, results = prochelp.run_procs(
+        prob, 2, algname, str(tmp_path / algname))
+    assert codes == [0, 0]
+    for r in (0, 1):
+        prochelp.assert_result_equal(results[r], base)
+        assert int(results[r]["recoveries"]) == 0
+        assert int(results[r]["epoch"]) == 0
+        np.testing.assert_array_equal(results[r]["dropped"], 0)
+        np.testing.assert_array_equal(results[r]["late_delivered"], 0)
+    # cross-rank batches really crossed sockets: the sender-side tallies
+    # are per rank, and with W = world = 2 rank r only ever sends from
+    # its own worker r to the other
+    assert results[0]["wire_frames"][0, 1] > 0
+    assert results[1]["wire_frames"][1, 0] > 0
+    assert results[0]["wire_frames"][1].sum() == 0
+    assert results[1]["wire_frames"][0].sum() == 0
