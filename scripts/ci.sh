@@ -300,4 +300,72 @@ if ! python -c "import hypothesis" 2>/dev/null; then
 fi
 suite_timer_end "crash-recovery fault-injection suite"
 
+# The storage-integrity gate (DESIGN.md §14): every persisted artifact —
+# chunk sections, vertex-spill batches, checkpoint blocks, serialized
+# edge lists — carries a CRC that is verified on read; a single flipped
+# byte raises a typed IntegrityError naming the damaged file, and
+# scripts/fsck.py finds it offline.
+suite_timer_start
+if ! PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
+    tests/test_integrity.py; then
+    echo "CI FAIL: storage-integrity suite (tests/test_integrity.py)" >&2
+    exit 1
+fi
+suite_timer_end "storage-integrity suite"
+
+# The durable-restart gate (DESIGN.md §14): kill EVERY rank mid-run,
+# relaunch with resume=True, and require the finished job to be
+# bit-identical to a failure-free run — values, counters, and the
+# measured==model byte audit included.  Also gates the run-log CRC and
+# run-id guards (a tampered or foreign run log is a typed fatal, never a
+# silently-wrong resume).
+suite_timer_start
+if ! PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -q \
+    tests/test_restart.py; then
+    echo "CI FAIL: durable-restart suite (tests/test_restart.py)" >&2
+    exit 1
+fi
+suite_timer_end "durable-restart suite"
+
+# Crash-restart smoke (REPRO_FAULT_FULL=1 only): one extra end-to-end
+# run on a freshly built store — kill all ranks at a randomly drawn
+# ProcessEdges call on a randomly drawn algorithm, resume, and require
+# bit-identity.  Randomized on purpose: over CI history this walks crash
+# points the fixed restart matrix does not pin.
+if [ "${REPRO_FAULT_FULL:-0}" = "1" ]; then
+    suite_timer_start
+    if ! PYTHONPATH=src:tests${PYTHONPATH:+:$PYTHONPATH} \
+        python - <<'EOF'
+import os, random, tempfile
+
+import prochelp
+from repro.runtime.faults import FAULT_EXIT, FaultPlan
+
+root = tempfile.mkdtemp(prefix="restart_smoke_")
+prob = prochelp.build_problem(os.path.join(root, "store"), workers=(2,))
+alg = random.choice(["pagerank", "bfs", "sssp", "wcc"])
+pe = random.randint(1, 3)   # always within the shortest run's op count
+print(f"crash-restart smoke: alg={alg}, kill all ranks at pe={pe}",
+      flush=True)
+base = prochelp.run_threads(prob, 2, alg)
+plan = FaultPlan([FaultPlan.kill(r, pe, "start") for r in range(2)])
+spec, codes, results = prochelp.run_procs(
+    prob, 2, alg, os.path.join(root, "run"), plan=plan)
+assert codes == [FAULT_EXIT] * 2, f"crash phase: {codes}"
+assert not results, "no rank may publish a result from the crashed run"
+codes, results = prochelp.resume_procs(spec)
+assert codes == [0, 0], f"resume phase: {codes}"
+for r in (0, 1):
+    prochelp.assert_result_equal(results[r], base)
+    assert int(results[r]["recoveries"]) == 0
+print("crash-restart smoke: resumed run is bit-identical")
+EOF
+    then
+        echo "CI FAIL: crash-restart smoke — resumed job not" \
+             "bit-identical (or resume failed)" >&2
+        exit 1
+    fi
+    suite_timer_end "crash-restart smoke (REPRO_FAULT_FULL)"
+fi
+
 echo "CI OK: no regressions vs baseline ($(wc -l < "$CURRENT") known failures)"

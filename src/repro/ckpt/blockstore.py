@@ -34,7 +34,7 @@ from typing import Any
 import jax
 import numpy as np
 
-from repro.utils import atomic_write_json
+from repro.utils import IntegrityError, atomic_write_json, json_crc
 
 DEFAULT_BLOCK_BYTES = 1 << 22       # 4 MiB
 
@@ -88,8 +88,18 @@ class BlockStore:
         return digest, True
 
     def _get_block(self, digest: str) -> bytes:
-        with open(self._block_path(digest), "rb") as f:
-            return f.read()
+        path = self._block_path(digest)
+        with open(path, "rb") as f:
+            data = f.read()
+        # Content-addressing doubles as the integrity check: the stored
+        # name IS the expected digest, so re-hashing on read detects any
+        # flipped byte before it can reach a restore.
+        got = hashlib.sha256(data).hexdigest()[:32]
+        if got != digest:
+            raise IntegrityError(
+                f"checkpoint block {path} failed its content hash "
+                f"(stored digest {digest}, read {got}) — disk corruption")
+        return data
 
     # -- checkpoint level ----------------------------------------------------
     def save(self, tree: Any, step: int) -> dict:
@@ -112,6 +122,8 @@ class BlockStore:
                 "shape": list(arr.shape), "dtype": str(arr.dtype),
                 "blocks": hashes,
             }
+        manifest["crc"] = json_crc({k: v for k, v in manifest.items()
+                                    if k != "crc"})
         mpath = os.path.join(self.root, "manifests", f"{step:012d}.json")
         atomic_write_json(mpath, manifest)   # atomic commit point
         self._gc()
@@ -123,10 +135,22 @@ class BlockStore:
         return sorted(int(n.split(".")[0]) for n in names
                       if n.endswith(".json"))
 
-    def restore(self, step: int) -> dict[str, np.ndarray]:
+    def _load_manifest(self, step: int) -> dict:
         mpath = os.path.join(self.root, "manifests", f"{step:012d}.json")
         with open(mpath) as f:
             manifest = json.load(f)
+        want = manifest.get("crc")
+        if want is not None:
+            got = json_crc({k: v for k, v in manifest.items()
+                            if k != "crc"})
+            if got != want:
+                raise IntegrityError(
+                    f"checkpoint manifest {mpath} failed its checksum "
+                    f"(stored crc {want}, computed {got})")
+        return manifest
+
+    def restore(self, step: int) -> dict[str, np.ndarray]:
+        manifest = self._load_manifest(step)
         out = {}
         for key, meta in manifest["arrays"].items():
             raw = b"".join(self._get_block(h) for h in meta["blocks"])
@@ -139,6 +163,34 @@ class BlockStore:
         if not steps:
             return None
         return steps[-1], self.restore(steps[-1])
+
+    # -- offline scrub --------------------------------------------------------
+    def verify(self) -> list[str]:
+        """Re-hash every block and re-check every manifest (the fsck
+        primitive).  Returns damage descriptions naming each bad file."""
+        damage = []
+        bdir = os.path.join(self.root, "blocks")
+        for name in sorted(os.listdir(bdir)):
+            if not name.endswith(".blk"):
+                continue
+            try:
+                self._get_block(name[:-4])
+            except IntegrityError as exc:
+                damage.append(str(exc))
+        for step in self.steps():
+            try:
+                manifest = self._load_manifest(step)
+            except (IntegrityError, json.JSONDecodeError) as exc:
+                damage.append(str(exc))
+                continue
+            for key, meta in manifest["arrays"].items():
+                for h in meta["blocks"]:
+                    if not os.path.exists(self._block_path(h)):
+                        damage.append(
+                            f"checkpoint manifest step {step} at "
+                            f"{self.root}: array {key!r} references "
+                            f"missing block {h}.blk")
+        return damage
 
     # -- reference-counted GC -------------------------------------------------
     def _gc(self) -> None:

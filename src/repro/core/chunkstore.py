@@ -57,7 +57,8 @@ import numpy as np
 from repro.core import codec
 from repro.core.formats import ChunkFormats
 from repro.core.partition import DistGraph
-from repro.utils import atomic_write_json, ceil_div, token_ctx
+from repro.utils import (IntegrityError, atomic_write_json, ceil_div, crc32,
+                         json_crc, token_ctx)
 
 EDGE_DT = np.dtype([("dst", "<i4"), ("data", "<f4")])   # 8 B per edge
 PAIR_DT = np.dtype([("src", "<i4"), ("idx", "<i4")])    # 8 B per DCSR entry
@@ -70,7 +71,23 @@ SHARD_MANIFEST_NAME = "shards.json"
 # unweighted graphs drop the uniform f32 data column entirely and record
 # ``values_elided`` in the manifest.  Older versions are rejected with an
 # error naming both versions — rebuild with ChunkStore.build.
-MANIFEST_VERSION = 3
+# v4: integrity tier (DESIGN.md §14) — per-chunk section CRC32s
+# (``chunk_crcs``, aligned row-for-row with ``chunks``) and a manifest
+# self-checksum (``manifest_crc``).  CRCs live in the manifest, never
+# inline in the edge files, so section offsets — and the exact equality
+# between stored section sizes and the analytic byte model — are
+# unchanged.
+MANIFEST_VERSION = 4
+
+# Section slots of a chunk's CRC row, in chunk_crcs order.
+CRC_PAIRS, CRC_DELTA, CRC_IDX, CRC_PAYLOAD = range(4)
+_CRC_SECTION_NAMES = ("dcsr-pairs", "pair-delta", "csr-idx", "payload")
+
+
+def manifest_self_crc(manifest: dict) -> int:
+    """CRC32 of a manifest dict, excluding its own ``manifest_crc`` field."""
+    return json_crc({k: v for k, v in manifest.items()
+                     if k != "manifest_crc"})
 
 # Per-chunk representation codes, as they appear in read schedules.  The
 # first two keep bool compatibility (False -> raw DCSR, True -> CSR).
@@ -103,6 +120,7 @@ class _ChunkLayout:
     has_csr: np.ndarray    # bool  [P, B]
     pair_nb: np.ndarray    # int64 [P, B] delta-varint pair section bytes
     dstv_nb: np.ndarray    # int64 [P, B] dst residue section bytes
+    crc: np.ndarray        # uint32 [P, B, 4] per-section CRC32s (v4)
 
 
 class ChunkStore:
@@ -158,15 +176,19 @@ class ChunkStore:
             has_csr = np.zeros((p_cnt, b_cnt), bool)
             pair_nb = np.zeros((p_cnt, b_cnt), np.int64)
             dstv_nb = np.zeros((p_cnt, b_cnt), np.int64)
-            for p, k, off, nz, ne, hc, pnb, vnb in manifest["chunks"][q]:
+            crc = np.zeros((p_cnt, b_cnt, 4), np.uint32)
+            crc_rows = manifest["chunk_crcs"][q]
+            for row, crow in zip(manifest["chunks"][q], crc_rows):
+                p, k, off, nz, ne, hc, pnb, vnb = row
                 offset[p, k] = off
                 nnz[p, k] = nz
                 edges[p, k] = ne
                 has_csr[p, k] = bool(hc)
                 pair_nb[p, k] = pnb
                 dstv_nb[p, k] = vnb
+                crc[p, k] = crow
             self._layout.append(_ChunkLayout(offset, nnz, edges, has_csr,
-                                             pair_nb, dstv_nb))
+                                             pair_nb, dstv_nb, crc))
         self._mm: dict[int, mmap.mmap] = {}
         self._device_decoder = None
         self._lock = threading.Lock()
@@ -219,8 +241,10 @@ class ChunkStore:
                                                    False))
 
         chunks_meta: dict[int, list] = {}
+        chunks_crc: dict[int, list] = {}
         for q in owned:
             meta_q = []
+            crc_q = []
             off = 0
             n_q = int(chunk_ptr[q, -1, -1])
             # --- whole-partition pass: runs + delta streams for all chunks
@@ -291,9 +315,12 @@ class ChunkStore:
                         f.write(pairs.tobytes())
                         nbytes = pairs.nbytes
                         pnb = vnb = 0
+                        crc_row = [crc32(pairs), 0, 0, 0]
                         if compression:
-                            f.write(pair_stream[
-                                pair_off[c]:pair_off[c + 1]].tobytes())
+                            pd = pair_stream[
+                                pair_off[c]:pair_off[c + 1]].tobytes()
+                            f.write(pd)
+                            crc_row[CRC_DELTA] = crc32(pd)
                             pnb = int(pnb_chunk[c])
                             nbytes += pnb
                         if has_csr[q, p, k]:
@@ -301,29 +328,38 @@ class ChunkStore:
                             np.add.at(idx, src_l[q, s:e] + 1, 1)
                             idx = np.cumsum(idx, dtype=np.int32)
                             f.write(idx.tobytes())
+                            crc_row[CRC_IDX] = crc32(idx)
                             nbytes += idx.nbytes
                         if compression:
                             # Columnar payload: dst residues (+ f32 data,
                             # unless elided).
-                            f.write(dst_stream[
-                                dst_off[c]:dst_off[c + 1]].tobytes())
+                            dv = dst_stream[
+                                dst_off[c]:dst_off[c + 1]].tobytes()
+                            f.write(dv)
+                            pay_crc = crc32(dv)
                             vnb = int(dnb_chunk[c])
                             nbytes += vnb
                             if not elide:
-                                f.write(np.ascontiguousarray(
-                                    data[q, s:e], "<f4").tobytes())
+                                db = np.ascontiguousarray(
+                                    data[q, s:e], "<f4").tobytes()
+                                f.write(db)
+                                pay_crc = crc32(db, pay_crc)
                                 nbytes += (e - s) * 4
+                            crc_row[CRC_PAYLOAD] = pay_crc
                         else:
                             payload = np.empty(e - s, EDGE_DT)
                             payload["dst"] = dst_l[q, s:e]
                             payload["data"] = data[q, s:e]
                             f.write(payload.tobytes())
+                            crc_row[CRC_PAYLOAD] = crc32(payload)
                             nbytes += payload.nbytes
                         meta_q.append([p, k, off, int(pairs.shape[0]),
                                        int(e - s), bool(has_csr[q, p, k]),
                                        int(pnb), int(vnb)])
+                        crc_q.append(crc_row)
                         off += nbytes
             chunks_meta[q] = meta_q
+            chunks_crc[q] = crc_q
 
         manifest = dict(
             version=MANIFEST_VERSION,
@@ -338,7 +374,9 @@ class ChunkStore:
             gamma=fmts.gamma,
             partitions=owned,
             chunks=[chunks_meta.get(q, []) for q in range(p_cnt)],
+            chunk_crcs=[chunks_crc.get(q, []) for q in range(p_cnt)],
         )
+        manifest["manifest_crc"] = manifest_self_crc(manifest)
         atomic_write_json(os.path.join(root, MANIFEST_NAME), manifest)
         return cls(root, manifest)
 
@@ -375,10 +413,10 @@ class ChunkStore:
             shards.append(cls.build(g, fmts, os.path.join(root, f"w{w}"),
                                     partitions=owned,
                                     compression=compression))
-        atomic_write_json(
-            os.path.join(root, SHARD_MANIFEST_NAME),
-            dict(version=MANIFEST_VERSION, num_workers=num_workers,
-                 num_partitions=p_cnt))
+        smani = dict(version=MANIFEST_VERSION, num_workers=num_workers,
+                     num_partitions=p_cnt)
+        smani["manifest_crc"] = manifest_self_crc(smani)
+        atomic_write_json(os.path.join(root, SHARD_MANIFEST_NAME), smani)
         return ShardedChunkStore(root, shards)
 
     @classmethod
@@ -400,12 +438,18 @@ class ChunkStore:
                 f"{manifest.get('version')!r}, expected {MANIFEST_VERSION} "
                 f"(the chunk layout changed; rebuild with ChunkStore.build)")
         missing = [k for k in ("num_partitions", "num_batches",
-                               "batch_size", "partition_sizes", "chunks")
+                               "batch_size", "partition_sizes", "chunks",
+                               "chunk_crcs", "manifest_crc")
                    if k not in manifest]
         if missing:
             raise ChunkStoreError(
                 f"chunk store manifest {path} is truncated or corrupt "
                 f"(missing keys: {missing})")
+        if manifest_self_crc(manifest) != manifest["manifest_crc"]:
+            raise IntegrityError(
+                f"chunk store manifest {path} failed its checksum "
+                f"(stored manifest_crc {manifest['manifest_crc']}, "
+                f"computed {manifest_self_crc(manifest)})")
         store = cls(root, manifest)
         for q in store.partitions:
             epath = os.path.join(root, f"edges_q{q}.bin")
@@ -495,21 +539,37 @@ class ChunkStore:
                 raise ValueError(
                     f"chunk ({q}, {p}, {k}) has no CSR representation")
             index = mm[off + pairs_nb + pd_nb:off + pairs_nb + pd_nb + idx_nb]
+            sec = CRC_IDX
         elif rep == REP_DCSR_DELTA:
             if not self.compression:
                 raise ValueError(
                     f"chunk store at {self.root} was built without "
                     "compression; no delta-varint pair section exists")
             index = mm[off + pairs_nb:off + pairs_nb + pd_nb]
+            sec = CRC_DELTA
         elif rep == REP_DCSR:
             index = mm[off:off + pairs_nb]
+            sec = CRC_PAIRS
         else:
             raise ValueError(f"unknown chunk representation {rep!r}")
+        self._verify_section(lay, q, p, k, sec, index)
+        self._verify_section(lay, q, p, k, CRC_PAYLOAD, payload)
         nbytes = len(index) + len(payload)
         with self._lock:
             self.chunks_read += 1
             self.bytes_read += nbytes
         return index, payload, nbytes
+
+    def _verify_section(self, lay: _ChunkLayout, q: int, p: int, k: int,
+                        sec: int, data: bytes) -> None:
+        want = int(lay.crc[p, k, sec])
+        got = crc32(data)
+        if got != want:
+            raise IntegrityError(
+                f"chunk store {os.path.join(self.root, f'edges_q{q}.bin')}: "
+                f"chunk (q={q}, p={p}, k={k}) section "
+                f"'{_CRC_SECTION_NAMES[sec]}' failed its checksum "
+                f"(stored {want}, read {got}) — disk corruption")
 
     def decode_chunk(self, q: int, p: int, k: int, rep: int,
                      index: bytes, payload: bytes):
@@ -584,6 +644,40 @@ class ChunkStore:
         with self._lock:
             self.chunks_read = 0
             self.bytes_read = 0
+
+    # -- offline scrub -------------------------------------------------------
+    def verify(self) -> list[str]:
+        """Check every section of every stored chunk against its manifest
+        CRC (the fsck primitive).  Returns a list of damage descriptions,
+        each naming the file, chunk, and section — empty when clean."""
+        damage = []
+        for q in self.partitions:
+            lay = self._layout_of(q)
+            mm = self._map(q)
+            path = os.path.join(self.root, f"edges_q{q}.bin")
+            for p in range(self.num_partitions):
+                for k in range(self.num_batches):
+                    off = int(lay.offset[p, k])
+                    if off < 0:
+                        continue
+                    pairs_nb, pd_nb, idx_nb, pay_nb = self._sections(
+                        lay, p, k)
+                    spans = [(CRC_PAIRS, off, pairs_nb),
+                             (CRC_DELTA, off + pairs_nb, pd_nb),
+                             (CRC_IDX, off + pairs_nb + pd_nb, idx_nb),
+                             (CRC_PAYLOAD, off + pairs_nb + pd_nb + idx_nb,
+                              pay_nb)]
+                    for sec, s_off, s_nb in spans:
+                        if s_nb == 0 and sec != CRC_PAYLOAD:
+                            continue
+                        got = crc32(mm[s_off:s_off + s_nb])
+                        want = int(lay.crc[p, k, sec])
+                        if got != want:
+                            damage.append(
+                                f"{path}: chunk (q={q}, p={p}, k={k}) "
+                                f"section '{_CRC_SECTION_NAMES[sec]}' "
+                                f"crc mismatch (stored {want}, read {got})")
+        return damage
 
 
 class DeviceChunkDecoder:
@@ -715,6 +809,8 @@ class ShardedChunkStore:
             raise ChunkStoreError(
                 f"shard manifest {path} is truncated or corrupt "
                 f"(missing keys: {missing})")
+        # version gate first: a foreign-version manifest legitimately
+        # predates (or postdates) the manifest_crc field
         if meta["version"] != MANIFEST_VERSION:
             raise ChunkStoreError(
                 f"shard manifest {path}: found version {meta['version']!r}, "
@@ -725,6 +821,15 @@ class ShardedChunkStore:
             raise ChunkStoreError(
                 f"shard manifest {path}: num_workers "
                 f"{meta['num_workers']!r} is not a positive integer")
+        if "manifest_crc" not in meta:
+            raise ChunkStoreError(
+                f"shard manifest {path} is truncated or corrupt "
+                f"(missing keys: ['manifest_crc'])")
+        if manifest_self_crc(meta) != meta["manifest_crc"]:
+            raise IntegrityError(
+                f"shard manifest {path} failed its checksum "
+                f"(stored manifest_crc {meta['manifest_crc']}, "
+                f"computed {manifest_self_crc(meta)})")
         shards = [ChunkStore.open(os.path.join(root, f"w{w}"))
                   for w in range(meta["num_workers"])]
         if shards[0].num_partitions != meta["num_partitions"]:
@@ -737,6 +842,13 @@ class ShardedChunkStore:
     def reset_io_counters(self) -> None:
         for s in self.shards:
             s.reset_io_counters()
+
+    def verify(self) -> list[str]:
+        """Scrub every shard; damage strings name shard files (fsck)."""
+        damage = []
+        for s in self.shards:
+            damage.extend(s.verify())
+        return damage
 
     def reopen_shard(self, w: int) -> ChunkStore:
         """Re-open worker ``w``'s shard from disk — fresh manifest
@@ -808,11 +920,44 @@ class VertexSpill:
         else:
             atomic_write_json(meta_path, {"num_queries": num_queries})
         self._mm: dict[str, np.memmap] = {}
+        # Per-(partition, batch) CRC32 sidecars, one uint32 [P, B] memmap
+        # per array (``vertex_{name}.crc``).  Sidecars are unmeasured
+        # control metadata: the byte counters price exactly the data
+        # batches, same as before the integrity tier.
+        self._crc: dict[str, np.memmap] = {}
         self.bytes_read = 0
         self.bytes_written = 0
 
     def _path(self, name: str) -> str:
         return os.path.join(self.root, f"vertex_{name}.bin")
+
+    def _crc_path(self, name: str) -> str:
+        return os.path.join(self.root, f"vertex_{name}.crc")
+
+    def _crc_update(self, name: str, runs: list) -> None:
+        """Recompute the sidecar CRCs of every batch covered by ``runs``."""
+        mm, cm, bs = self._mm[name], self._crc[name], self.batch_size
+        for p, lo, hi in runs:
+            for k in range(lo // bs, hi // bs):
+                cm[p, k] = crc32(mm[p, k * bs:(k + 1) * bs])
+
+    def _crc_verify(self, name: str, runs: list) -> None:
+        """Check every covered batch against its sidecar CRC before the
+        data is handed to the caller — a flipped byte on disk raises
+        :class:`IntegrityError` naming the file, array, and batch."""
+        mm, cm, bs = self._mm[name], self._crc[name], self.batch_size
+        for p, lo, hi in runs:
+            for k in range(lo // bs, hi // bs):
+                got = crc32(mm[p, k * bs:(k + 1) * bs])
+                if got != int(cm[p, k]):
+                    raise IntegrityError(
+                        f"vertex spill {self._path(name)}: array "
+                        f"{name!r} batch (p={p}, k={k}) failed its "
+                        f"checksum (stored {int(cm[p, k])}, read {got}) "
+                        f"— disk corruption")
+
+    def _all_runs(self) -> list:
+        return [(p, 0, self.v_pad) for p in range(self.p_cnt)]
 
     def load(self, state: dict[str, np.ndarray]) -> None:
         """Full (unmeasured) sync of caller state into the spill files.
@@ -820,6 +965,7 @@ class VertexSpill:
         recovering process can :meth:`attach` the files without knowing
         the engine's state schema out of band."""
         self._mm = {}
+        self._crc = {}
         for name, arr in state.items():
             arr = np.asarray(arr)
             assert arr.shape == (self.p_cnt, self.v_max), (name, arr.shape)
@@ -828,6 +974,10 @@ class VertexSpill:
             mm[:, :self.v_max] = arr
             mm[:, self.v_max:] = np.zeros((), arr.dtype)
             self._mm[name] = mm
+            self._crc[name] = np.memmap(self._crc_path(name),
+                                        dtype=np.uint32, mode="w+",
+                                        shape=(self.p_cnt, self.b_cnt))
+            self._crc_update(name, self._all_runs())
         atomic_write_json(self._meta_path, {
             "num_queries": self.num_queries,
             "arrays": {name: str(mm.dtype)
@@ -850,6 +1000,7 @@ class VertexSpill:
                 f"vertex spill at {self.root} records no arrays to attach "
                 f"(it was never load()ed)")
         mm = {}
+        cm = {}
         for name, dt in arrays.items():
             path = self._path(name)
             if not os.path.exists(path):
@@ -858,7 +1009,24 @@ class VertexSpill:
                     f"{name!r} has no file {path}")
             mm[name] = np.memmap(path, dtype=np.dtype(dt), mode="r+",
                                  shape=(self.p_cnt, self.v_pad))
+            cpath = self._crc_path(name)
+            if not os.path.exists(cpath):
+                raise ChunkStoreError(
+                    f"vertex spill at {self.root}: recorded array "
+                    f"{name!r} has no crc sidecar {cpath}")
+            cm[name] = np.memmap(cpath, dtype=np.uint32, mode="r+",
+                                 shape=(self.p_cnt, self.b_cnt))
         self._mm = mm
+        self._crc = cm
+
+    def on_disk(self) -> bool:
+        """True when a previous incarnation ``load()``ed arrays under this
+        root (the whole-job resume probe: is there anything to attach?)."""
+        if not os.path.exists(self._meta_path):
+            return False
+        with open(self._meta_path) as f:
+            meta = json.load(f)
+        return bool(meta.get("arrays"))
 
     def names(self) -> list[str]:
         return list(self._mm)
@@ -903,6 +1071,7 @@ class VertexSpill:
         runs = self._batch_runs(batch_mask)
         for name in (self._mm if keys is None else keys):
             mm = self._mm[name]
+            self._crc_verify(name, runs)
             arr = np.zeros((self.p_cnt, self.v_pad), mm.dtype)
             for p, lo, hi in runs:
                 arr[p, lo:hi] = mm[p, lo:hi]
@@ -925,6 +1094,7 @@ class VertexSpill:
                 arr = pad
             for p, lo, hi in runs:
                 mm[p, lo:hi] = arr[p, lo:hi]
+            self._crc_update(name, runs)
             self.bytes_written += (touched * self.batch_size
                                    * mm.dtype.itemsize)
 
@@ -955,6 +1125,8 @@ class VertexSpill:
         packed = np.packbits(np.asarray(mask, bool), axis=1)
         with open(os.path.join(self.root, f"{name}.bits"), "wb") as f:
             f.write(packed.tobytes())
+        with open(os.path.join(self.root, f"{name}.bits.crc"), "w") as f:
+            f.write(str(crc32(packed)))
         if measured:
             self.bytes_written += packed.nbytes
 
@@ -967,9 +1139,55 @@ class VertexSpill:
                 self.bytes_read += self.p_cnt * row  # fresh file reads zeros
             return None
         packed = np.fromfile(path, np.uint8).reshape(self.p_cnt, row)
+        self._verify_bitmap(name, path, packed)
         if measured:
             self.bytes_read += packed.nbytes
         return np.unpackbits(packed, axis=1)[:, :self.v_max].astype(bool)
+
+    def _verify_bitmap(self, name: str, path: str,
+                       packed: np.ndarray) -> None:
+        cpath = path + ".crc"
+        if not os.path.exists(cpath):
+            raise IntegrityError(
+                f"vertex spill bitmap {path} has no crc sidecar {cpath}")
+        with open(cpath) as f:
+            want = int(f.read())
+        got = crc32(packed)
+        if got != want:
+            raise IntegrityError(
+                f"vertex spill bitmap {path} ({name!r}) failed its "
+                f"checksum (stored {want}, read {got}) — disk corruption")
+
+    # -- offline scrub -------------------------------------------------------
+    def verify(self) -> list[str]:
+        """Check every batch of every attached array, and every bitmap
+        file, against its CRC sidecar (the fsck primitive).  Returns
+        damage descriptions naming file, array, and batch."""
+        damage = []
+        if not self._mm and os.path.exists(self._meta_path):
+            with open(self._meta_path) as f:
+                meta = json.load(f)
+            if meta.get("arrays"):
+                try:
+                    self.attach()
+                except ChunkStoreError as exc:
+                    return [str(exc)]
+        for name in self._mm:
+            try:
+                self._crc_verify(name, self._all_runs())
+            except IntegrityError as exc:
+                damage.append(str(exc))
+        for fname in sorted(os.listdir(self.root)):
+            if not fname.endswith(".bits"):
+                continue
+            path = os.path.join(self.root, fname)
+            row = ceil_div(self.v_max, 8)
+            packed = np.fromfile(path, np.uint8).reshape(self.p_cnt, row)
+            try:
+                self._verify_bitmap(fname[:-5], path, packed)
+            except IntegrityError as exc:
+                damage.append(str(exc))
+        return damage
 
     def reset_io_counters(self) -> None:
         self.bytes_read = 0

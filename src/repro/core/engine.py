@@ -67,7 +67,7 @@ from repro.core.partition import DistGraph
 from repro.core.phases import (
     batch_touched, bitmap_model_bytes, reduce_worker_counters,
 )
-from repro.utils import token_ctx
+from repro.utils import pack_bools, token_ctx, unpack_bools
 
 State = Dict[str, jnp.ndarray]      # name -> [P, V] stacked vertex arrays
 
@@ -702,6 +702,50 @@ class Engine:
                 # as the dead rank last left it.
                 spill.attach()
 
+    def _proc_resume_restore(self, resume_op: int) -> None:
+        """Whole-job resume: put this rank's owned spills in the exact
+        post-``resume_op`` state (called by ``ProcContext.prepare_resume``
+        before any op replays).
+
+        Per worker, in preference order: the checkpoint saved at the
+        start of op ``resume_op + 1`` (its pre-op content IS the
+        post-``resume_op`` state — this engine ran the op the crash
+        interrupted, so its spill files may hold that op's partial
+        mutations); defensively, the latest checkpoint of any other
+        never-committed op (> ``resume_op``); else the on-disk spill
+        files exactly as the crashed incarnation last committed them
+        (engines untouched since their last committed op).  A checkpoint
+        of a *committed* op is never restored — it would roll that op
+        back.  Engines whose spills were never materialized (crash before
+        their first op) have nothing to restore: the live replay's first
+        ``_sync_ooc_state`` loads the driver's initial state as usual."""
+        ctx = self.proc_ctx
+        for w in ctx.my_workers():
+            spill = self.spills[w]
+            store = self._proc_ckpt_store(w)
+            steps = store.steps()
+            target = None
+            if resume_op + 1 in steps:
+                target = resume_op + 1
+            elif steps and max(steps) > resume_op:
+                target = max(steps)
+            if target is not None:
+                tree = store.restore(target)
+                spill.load({k[len("s:"):]: v for k, v in tree.items()
+                            if k.startswith("s:")})
+                if "active" in tree:
+                    spill.write_bitmap(tree["active"].astype(bool),
+                                       measured=False)
+                else:
+                    bits = os.path.join(spill.root, "active.bits")
+                    if os.path.exists(bits):
+                        os.remove(bits)
+            elif spill.on_disk():
+                spill.attach()
+            else:
+                continue
+            spill.reset_io_counters()
+
     def _proc_adopt_workers(self, adopted, in_op: bool) -> None:
         """Take over the listed logical workers after recovery re-planned
         them onto this rank: re-open their chunk shards (immutable files,
@@ -900,6 +944,17 @@ class Engine:
         when ``parallel_workers`` is on; each accumulates into a private
         counter dict reduced in worker index order after the join, so
         parallel and sequential runs stay bit-identical."""
+        if self.proc_ctx is not None:
+            rec = self.proc_ctx.resume_take("pv")
+            if rec is not None:
+                # Whole-job resume fast-forward (see
+                # _proc_fast_forward_pe): reconstruct the committed op
+                # from its record, leave the restored spills untouched.
+                self.worker_totals = [dict(d) for d in rec["wt"]]
+                new_state = self._dist_state_views()
+                self._ooc_last_state = new_state
+                return (new_state, float(rec["total"]),
+                        {k: float(v) for k, v in rec["counters"].items()})
         self._sync_ooc_state(state)
         vertex_valid = np.asarray(self.graph.vertex_valid)
         amask = (vertex_valid if active is None
@@ -952,7 +1007,13 @@ class Engine:
                 self._check_measured(cs)
                 return tot, cs
 
-            total, counters = ctx.recoverable(self, body)
+            def record(out):
+                return {"kind": "pv", "total": float(out[0]),
+                        "counters": {k: float(v)
+                                     for k, v in out[1].items()},
+                        "wt": [dict(d) for d in self.worker_totals]}
+
+            total, counters = ctx.recoverable(self, body, record=record)
             new_state = self._dist_state_views()
             self._ooc_last_state = new_state
             return new_state, total, counters
@@ -1058,7 +1119,6 @@ class Engine:
                       mode_meta)
             if cache_key is not None:
                 self._pe_cache[cache_key] = fn
-        self._sync_ooc_state(state)
         ctx = self.proc_ctx
         if ctx is not None:
             # One ProcessEdges call = one fault-plan index = one
@@ -1066,13 +1126,46 @@ class Engine:
             ctx.pe_seq += 1
             if ctx.injector is not None:
                 ctx.injector.plan.validate_for_monoid(monoid.name)
+            rec = ctx.resume_take("pe")
+            if rec is not None:
+                return self._proc_fast_forward_pe(rec)
+            self._sync_ooc_state(state)
+
+            def record(out):
+                # The commit gathers synchronized the full [W]
+                # worker_totals and the full new_active on every rank,
+                # so this rank's record alone reconstructs the op.
+                return {"kind": "pe", "total": float(out[2]),
+                        "counters": {k: float(v)
+                                     for k, v in out[3].items()},
+                        "wt": [dict(d) for d in self.worker_totals],
+                        "post_active": pack_bools(out[1])}
+
             new_state, new_active, total, counters = ctx.recoverable(
-                self, lambda: fn(active))
+                self, lambda: fn(active), record=record)
         else:
+            self._sync_ooc_state(state)
             new_state, new_active, total, counters = fn(active)
         self._check_measured(counters)
         self._ooc_last_state = new_state
         return new_state, new_active, total, counters
+
+    def _proc_fast_forward_pe(self, rec: dict):
+        """Whole-job resume: reconstruct a committed ProcessEdges call
+        from its run-log record without executing it.  The spills were
+        restored to the post-resume-point state by
+        :meth:`_proc_resume_restore`, so the state views are exact; the
+        deliberately-skipped ``_sync_ooc_state`` must not run here — it
+        would clobber that restored state with the driver's initial
+        arrays."""
+        self.worker_totals = [dict(d) for d in rec["wt"]]
+        new_state = self._dist_state_views()
+        self._ooc_last_state = new_state
+        spec = self.graph.spec
+        new_active = unpack_bools(rec["post_active"],
+                                  (spec.num_partitions, spec.v_max))
+        counters = {k: float(v) for k, v in rec["counters"].items()}
+        return new_state, new_active, float(rec["total"]), counters
 
     # -- Multi-query serving surface (DESIGN.md §11) -------------------------
     def _check_mq_state(self, state, active) -> None:

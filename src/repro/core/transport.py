@@ -50,17 +50,21 @@ ledger answers the resend request), or is held by the straggler delay
 """
 from __future__ import annotations
 
+import base64
 import io
+import json
 import os
 import pickle
 import socket
 import struct
 import threading
 import time
+import zlib
 
 import numpy as np
 
 from repro.core import exchange as exchange_mod
+from repro.utils import IntegrityError, atomic_write_json, json_crc
 
 # --------------------------------------------------------------------------
 # Errors
@@ -81,19 +85,41 @@ class WorkerDied(TransportError):
         super().__init__(f"worker rank(s) {sorted(self.ranks)} died")
 
 
+class FrameIntegrityError(IntegrityError, TransportError):
+    """A received frame failed its header CRC.  Carries the (possibly
+    damaged) parsed header so the receiver can decide: a corrupt DATA
+    frame on an in-sync stream is dropped and recovered through the
+    ledger redelivery path; a corrupt control frame kills the link."""
+
+    def __init__(self, frame: "Frame", want: int, got: int):
+        self.frame = frame
+        super().__init__(
+            f"wire frame (kind={frame.kind}, epoch={frame.epoch}, "
+            f"op={frame.op}, src_w={frame.src_w}, dst_w={frame.dst_w}, "
+            f"p={frame.p}, q={frame.q}) failed its checksum "
+            f"(header crc {want}, computed {got}) — wire corruption")
+
+
 # --------------------------------------------------------------------------
 # Framing (pure; unit-testable without sockets)
 # --------------------------------------------------------------------------
 
 # kind u8 | epoch u32 | op u32 | src_w i32 | dst_w i32 | p i32 | q i32 |
-# fmt i32 | count u32 | aux i32 | payload-length u32
-_HEADER = struct.Struct("!BIIiiiiiIiI")
+# fmt i32 | count u32 | aux i32 | crc u32 | payload-length u32
+# The crc is CRC32 over (header with crc field zeroed) + payload, so a
+# flipped byte anywhere in the frame — metadata or data — is detected at
+# receive.  The header (crc included) stays O(1) unpriced framing
+# metadata: the priced payload bytes are unchanged, so
+# ``measured_net_bytes == net_bytes`` is preserved by construction.
+_HEADER = struct.Struct("!BIIiiiiiIiII")
 HEADER_BYTES = _HEADER.size
+_CRC_OFF = _HEADER.size - 8         # byte offset of the crc field
 
 K_HELLO = 0     # src_w = sender rank (connection identification)
 K_DATA = 1      # one posted Exchange batch; fmt/count/aux describe it
 K_CTRL = 2      # fmt = control code below; q = sequence; payload pickled
 K_FAIL = 3      # payload = pickled sorted list of dead ranks
+K_HEART = 4     # liveness beacon; src_w = sender rank, no payload
 
 C_GATHER = 0        # allgather / barrier contribution
 C_RESEND_REQ = 1    # receiver -> sender: frames missing for an op
@@ -121,8 +147,11 @@ class Frame:
 
 def pack_frame(kind, *, epoch=0, op=0, src_w=0, dst_w=0, p=0, q=0,
                fmt=0, count=0, aux=0, payload=b"") -> bytes:
+    head = _HEADER.pack(kind, epoch, op, src_w, dst_w, p, q, fmt,
+                        count, aux, 0, len(payload))
+    crc = zlib.crc32(payload, zlib.crc32(head)) & 0xFFFFFFFF
     return _HEADER.pack(kind, epoch, op, src_w, dst_w, p, q, fmt,
-                        count, aux, len(payload)) + payload
+                        count, aux, crc, len(payload)) + payload
 
 
 def read_exact(read, n: int) -> bytes:
@@ -148,16 +177,24 @@ def read_exact(read, n: int) -> bytes:
 
 def read_frame(read) -> Frame | None:
     """Read one frame; ``None`` on a clean EOF at a frame boundary,
-    :class:`TransportError` on a partial header or short payload."""
+    :class:`TransportError` on a partial header or short payload,
+    :class:`FrameIntegrityError` when the frame's CRC does not match
+    (the full frame has been consumed from the stream, so an in-sync
+    payload flip leaves the link usable)."""
     first = read(1)
     if not first:
         return None
     head = first + read_exact(read, HEADER_BYTES - 1)
-    (kind, epoch, op, src_w, dst_w, p, q, fmt, count, aux,
+    (kind, epoch, op, src_w, dst_w, p, q, fmt, count, aux, crc,
      paylen) = _HEADER.unpack(head)
     payload = read_exact(read, paylen) if paylen else b""
-    return Frame(kind, epoch, op, src_w, dst_w, p, q, fmt, count, aux,
-                 payload)
+    zeroed = head[:_CRC_OFF] + b"\x00\x00\x00\x00" + head[_CRC_OFF + 4:]
+    got = zlib.crc32(payload, zlib.crc32(zeroed)) & 0xFFFFFFFF
+    frame = Frame(kind, epoch, op, src_w, dst_w, p, q, fmt, count, aux,
+                  payload)
+    if got != crc:
+        raise FrameIntegrityError(frame, crc, got)
+    return frame
 
 
 _COL = struct.Struct("!iiB")    # mq panel column metadata (j, count, uni)
@@ -219,10 +256,28 @@ class _Peer:
         self.rfile = rfile if rfile is not None else sock.makefile("rb")
         self.send_lock = threading.Lock()
         self.alive = True
+        # Monotonic time of the last byte received FROM this peer; the
+        # heartbeat protocol keeps this fresh on an idle-but-healthy
+        # link, so staleness beyond the stall timeout means the peer is
+        # wedged (stalled mid-frame, livelocked, paused) even though the
+        # socket is still open.
+        self.last_recv = time.monotonic()
 
     def send(self, data: bytes) -> None:
         with self.send_lock:
             self.sock.sendall(data)
+
+    def send_stalled(self, data: bytes, prefix: int, seconds: float
+                     ) -> None:
+        """Fault-injection path: write ``prefix`` bytes of the frame,
+        freeze for ``seconds`` while HOLDING the send lock (heartbeats to
+        this peer stall with us, exactly like a wedged sender thread),
+        then send the remainder.  A short stall resolves into a clean
+        delivery; a long one trips the receiver's stall detector."""
+        with self.send_lock:
+            self.sock.sendall(data[:prefix])
+            time.sleep(seconds)
+            self.sock.sendall(data[prefix:])
 
     def close(self) -> None:
         try:
@@ -245,12 +300,18 @@ class ProcMesh:
     EOF marks the peer dead and wakes every waiter."""
 
     def __init__(self, rank: int, world: int, rendezvous_dir: str,
-                 connect_timeout: float = 60.0):
+                 connect_timeout: float = 60.0,
+                 stall_timeout: float = 30.0):
         self.rank = rank
         self.world = world
+        self.stall_timeout = stall_timeout
         self.cv = threading.Condition()
         self.peers: dict[int, _Peer] = {}
         self.dead: set[int] = set()
+        # corrupt_frames[src rank] -> count of CRC-failed DATA frames
+        # dropped on receive (recovered via ledger redelivery)
+        self.corrupt_frames: dict[int, int] = {}
+        self.corrupt_handler = None         # set by ProcContext (stats)
         # ctrl[(epoch, code, seq, sender rank)] -> unpickled object
         self._ctrl: dict[tuple, object] = {}
         # fails[rank] -> (epoch, frozenset of dead ranks): latest report.
@@ -263,6 +324,7 @@ class ProcMesh:
         self._arrived: dict[tuple, list] = {}
         self.resend_handler = None          # set by ProcContext
         self._threads: list[threading.Thread] = []
+        self._hb_stop = threading.Event()
         if world > 1:
             self._rendezvous(rendezvous_dir, connect_timeout)
             for peer in self.peers.values():
@@ -270,6 +332,9 @@ class ProcMesh:
                                      daemon=True)
                 t.start()
                 self._threads.append(t)
+            t = threading.Thread(target=self._heartbeat_loop, daemon=True)
+            t.start()
+            self._threads.append(t)
 
     # -- connection setup ---------------------------------------------------
 
@@ -313,20 +378,7 @@ class ProcMesh:
         acceptor = threading.Thread(target=accept_loop, daemon=True)
         acceptor.start()
         for s in range(self.rank):
-            path = os.path.join(rdir, f"rank{s}.port")
-            while not os.path.exists(path):
-                if time.monotonic() > deadline:
-                    raise TransportError(
-                        f"rank {self.rank}: timed out waiting for rank "
-                        f"{s}'s rendezvous port file")
-                time.sleep(0.01)
-            with open(path) as f:
-                peer_port = int(f.read().strip())
-            sock = socket.create_connection(("127.0.0.1", peer_port),
-                                            timeout=timeout)
-            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            sock.sendall(pack_frame(K_HELLO, src_w=self.rank))
-            self.peers[s] = _Peer(s, sock)
+            self.peers[s] = _Peer(s, self._dial(rdir, s, deadline))
         acceptor.join(timeout)
         if accept_err:
             raise accept_err[0]
@@ -336,17 +388,63 @@ class ProcMesh:
         self.peers.update(accepted)
         listener.close()
 
+    def _dial(self, rdir: str, s: int, deadline: float) -> socket.socket:
+        """Connect to rank ``s`` with bounded exponential backoff,
+        re-reading the port file on every attempt — a peer that restarts
+        (whole-job resume) republishes a fresh port, and a connection
+        refused right after the file appears is a startup race, not a
+        failure."""
+        path = os.path.join(rdir, f"rank{s}.port")
+        delay = 0.02
+        while True:
+            try:
+                with open(path) as f:
+                    peer_port = int(f.read().strip())
+                sock = socket.create_connection(
+                    ("127.0.0.1", peer_port),
+                    timeout=max(0.1, min(5.0,
+                                         deadline - time.monotonic())))
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                sock.sendall(pack_frame(K_HELLO, src_w=self.rank))
+                return sock
+            except (OSError, ValueError):
+                if time.monotonic() > deadline:
+                    raise TransportError(
+                        f"rank {self.rank}: rendezvous with rank {s} "
+                        f"timed out (port file {path})")
+                time.sleep(delay)
+                delay = min(delay * 2, 1.0)
+
     # -- receive path -------------------------------------------------------
 
     def _recv_loop(self, peer: _Peer) -> None:
         while True:
             try:
                 frame = read_frame(peer.rfile.read)
+            except FrameIntegrityError as exc:
+                peer.last_recv = time.monotonic()
+                if exc.frame.kind == K_DATA:
+                    # The full frame was consumed, so the stream is still
+                    # in sync: drop it, count it, and let the receiver's
+                    # completeness check trigger a ledger redelivery of a
+                    # clean copy — never a garbage frame accepted.
+                    with self.cv:
+                        self.corrupt_frames[peer.rank] = (
+                            self.corrupt_frames.get(peer.rank, 0) + 1)
+                    handler = self.corrupt_handler
+                    if handler is not None:
+                        handler(peer.rank, exc.frame)
+                    continue
+                # A corrupt control/fail/hello frame cannot be trusted to
+                # have parsed its own length correctly — kill the link
+                # and let recovery own it.
+                frame = None
             except (TransportError, OSError, ValueError):
                 frame = None
             if frame is None:
                 self._mark_dead(peer.rank)
                 return
+            peer.last_recv = time.monotonic()
             self._dispatch(peer, frame)
 
     def _mark_dead(self, rank: int) -> None:
@@ -384,14 +482,62 @@ class ProcMesh:
             with self.cv:
                 self.fails[frame.src_w] = (frame.epoch, reported)
                 self.cv.notify_all()
+        elif frame.kind == K_HEART:
+            pass        # liveness already recorded via peer.last_recv
+
+    # -- liveness -----------------------------------------------------------
+
+    def _heartbeat_loop(self) -> None:
+        """Periodic liveness beacon to every live peer.  The interval is
+        a quarter of the stall timeout, so a healthy-but-idle peer
+        refreshes ``last_recv`` several times per detection window; a
+        peer wedged mid-frame blocks our sender lock and stops
+        heartbeating, which is exactly the signal."""
+        interval = max(0.05, self.stall_timeout / 4.0)
+        beat = pack_frame(K_HEART, src_w=self.rank)
+        while not self._hb_stop.wait(interval):
+            for peer in list(self.peers.values()):
+                if not peer.alive:
+                    continue
+                try:
+                    peer.send(beat)
+                except OSError:
+                    self._mark_dead(peer.rank)
+
+    def check_stalls(self, ranks) -> None:
+        """Mark any waited-on peer silent beyond ``stall_timeout`` as
+        dead.  Called from inside the collective wait loops: a stalled-
+        but-open peer then raises :class:`WorkerDied` on the next loop
+        iteration and flows into the normal recovery path, instead of
+        blocking until ``io_timeout``."""
+        with self.cv:
+            self._check_stalls_locked(ranks)
+
+    def _check_stalls_locked(self, ranks) -> None:
+        """:meth:`check_stalls` body for callers already holding ``cv``
+        (the Condition's lock is not re-entrant)."""
+        now = time.monotonic()
+        hit = False
+        for r in ranks:
+            peer = self.peers.get(r)
+            if (peer is not None and peer.alive
+                    and now - peer.last_recv > self.stall_timeout):
+                self.dead.add(r)
+                peer.alive = False
+                hit = True
+        if hit:
+            self.cv.notify_all()
 
     # -- send path ----------------------------------------------------------
 
     def send_to_rank(self, rank: int, data: bytes,
-                     ignore_dead: bool = False) -> None:
+                     ignore_dead: bool = False, stall=None) -> None:
         peer = self.peers[rank]
         try:
-            peer.send(data)
+            if stall is not None:
+                peer.send_stalled(data, stall[0], stall[1])
+            else:
+                peer.send(data)
         except OSError:
             self._mark_dead(rank)
             if not ignore_dead:
@@ -414,6 +560,7 @@ class ProcMesh:
                 if not missing:
                     return {r: self._ctrl.pop((epoch, code, seq, r))
                             for r in ranks}
+                self._check_stalls_locked(missing)
                 dead = [r for r in missing if r in self.dead]
                 if dead:
                     raise WorkerDied(dead)
@@ -502,8 +649,10 @@ class ProcMesh:
         frame = pack_frame(K_FAIL, epoch=epoch, src_w=self.rank,
                            payload=payload)
         for r, peer in self.peers.items():
-            if r in dead:
-                continue
+            # Reported-dead peers get the FAIL too (best-effort): a
+            # genuinely dead process ignores it, but a STALLED peer that
+            # wakes up learns it was declared dead and exits promptly
+            # instead of hanging until io_timeout.
             self.send_to_rank(r, frame, ignore_dead=True)
 
     def purge_ctrl(self, min_epoch: int) -> None:
@@ -513,6 +662,7 @@ class ProcMesh:
                 del self._ctrl[key]
 
     def close(self) -> None:
+        self._hb_stop.set()
         for peer in self.peers.values():
             peer.close()
 
@@ -530,9 +680,13 @@ class ProcContext:
     straggler hold queue, and the recovery loop the engine wraps every op
     in (:meth:`recoverable`)."""
 
+    RUNLOG_VERSION = 1
+
     def __init__(self, rank: int, world: int, num_workers: int,
                  rendezvous_dir: str, run_id: str = "run",
-                 injector=None, io_timeout: float = 180.0):
+                 injector=None, io_timeout: float = 180.0,
+                 stall_timeout: float = 30.0, log_dir: str | None = None,
+                 resume: bool = False):
         if world > num_workers:
             raise TransportError(
                 f"world size {world} exceeds num_workers {num_workers}: "
@@ -548,11 +702,20 @@ class ProcContext:
         self.pe_seq = 0          # ProcessEdges call counter (fault keying)
         self._seq = 0            # collective sequence within the epoch
         self._p2p_seq = 0        # point-to-point (resend) sequence
+        # durable run manifest (whole-job restart, DESIGN.md §14): every
+        # committed op's record is appended to runlog_r{rank}.json under
+        # log_dir; resume fast-forwards through ops <= resume_op.
+        self.log_dir = log_dir
+        self.resume = bool(resume)
+        self.resume_op = 0
+        self._runlog: dict[int, dict] = {}
         # initial ownership: round-robin, deterministic on every rank
         self.assign = [w % world for w in range(num_workers)]
         self.initial_assign = list(self.assign)
-        self.mesh = ProcMesh(rank, world, rendezvous_dir)
+        self.mesh = ProcMesh(rank, world, rendezvous_dir,
+                             stall_timeout=stall_timeout)
         self.mesh.resend_handler = self._on_resend_req
+        self.mesh.corrupt_handler = self._on_corrupt_frame
         self._engines: list = []
         self._lock = threading.Lock()
         # ledger[op][(src_w, dst_w)][(p, q)] -> dict(state=..., fields)
@@ -570,8 +733,18 @@ class ProcContext:
             "redelivered": np.zeros((w, w), np.int64),
             "held": np.zeros((w, w), np.int64),
             "late_delivered": np.zeros((w, w), np.int64),
+            "corrupted": np.zeros((w, w), np.int64),
+            "corrupt_frames": np.zeros((w, w), np.int64),
             "recoveries": 0,
         }
+
+    def _on_corrupt_frame(self, rank: int, frame: Frame) -> None:
+        """Mesh callback: a CRC-failed DATA frame was dropped on receive
+        (counted under the header's worker pair when it parsed sanely)."""
+        w = self.num_workers
+        if 0 <= frame.src_w < w and 0 <= frame.dst_w < w:
+            with self._lock:
+                self.stats["corrupt_frames"][frame.src_w, frame.dst_w] += 1
 
     # -- topology -----------------------------------------------------------
 
@@ -659,10 +832,18 @@ class ProcContext:
                "p": p, "q": q, "entry": entry, "op": op}
         inj = self.injector
         if inj is not None:
-            if inj.should_drop(self.pe_seq, src_w, dst_w):
+            fault = inj.data_fault(self.pe_seq, src_w, dst_w)
+            if fault is not None and fault[0] == "drop":
                 rec["state"] = "dropped"
             elif inj.should_hold(self.pe_seq, src_w):
                 rec["state"] = "held"
+            elif fault is not None and fault[0] == "corrupt":
+                # the frame IS sent — with one payload byte flipped; the
+                # receiver's CRC rejects it and the completeness check
+                # redelivers a clean copy from this ledger record
+                rec["corrupt"] = True
+            elif fault is not None and fault[0] == "stall":
+                rec["stall"] = fault[1]
         with self._lock:
             self._ledger.setdefault(op, {}).setdefault(
                 (src_w, dst_w), {})[(p, q)] = rec
@@ -671,6 +852,8 @@ class ProcContext:
             key = {"dropped": "dropped", "held": "held",
                    "sent": "wire_frames"}[rec["state"]]
             self.stats[key][src_w, dst_w] += 1
+            if rec.get("corrupt"):
+                self.stats["corrupted"][src_w, dst_w] += 1
         if rec["state"] != "sent":
             return
         self._send_record(rec)
@@ -681,9 +864,21 @@ class ProcContext:
         data = entry_to_frame(rec["entry"], epoch=self.epoch,
                               op=rec["op"], src_w=rec["src_w"],
                               dst_w=rec["dst_w"], p=rec["p"], q=rec["q"])
+        # One-shot fault decorations: popped here so a ledger redelivery
+        # of the same record sends a clean, unstalled frame.
+        if rec.pop("corrupt", False):
+            if len(data) > HEADER_BYTES:
+                data = data[:-1] + bytes([data[-1] ^ 0xFF])
+            else:       # empty payload: flip a crc byte, header intact
+                data = (data[:_CRC_OFF]
+                        + bytes([data[_CRC_OFF] ^ 0xFF])
+                        + data[_CRC_OFF + 1:])
+        stall = rec.pop("stall", None)
+        if stall is not None:
+            stall = (max(1, len(data) // 2), float(stall))
         try:
             self.mesh.send_to_rank(self.assign[rec["dst_w"]], data,
-                                   ignore_dead=True)
+                                   ignore_dead=True, stall=stall)
         except WorkerDied:
             pass
 
@@ -733,6 +928,7 @@ class ProcContext:
                                                dst_w)
                        < have + ack["resent"]):
                     with self.mesh.cv:
+                        self.mesh._check_stalls_locked([src_rank])
                         if src_rank in self.mesh.dead:
                             raise WorkerDied({src_rank})
                         for _rr, (rep_ep, rep) in list(
@@ -821,23 +1017,33 @@ class ProcContext:
     def register_engine(self, engine) -> None:
         self._engines.append(engine)
 
-    def recoverable(self, engine, body):
+    def recoverable(self, engine, body, record=None):
         """Run one op (ProcessEdges / ProcessVertices body) with
         checkpoint-rollback-replay recovery.  The sequence per attempt:
         flush straggler-held frames from prior ops, checkpoint my owned
         spills at this op id, ready-barrier, run the body.  On
         :class:`WorkerDied`: FAIL consensus, deterministic ownership
         re-plan, shard/spill adoption, rollback to the op checkpoint,
-        epoch bump, replay."""
+        epoch bump, replay.
+
+        ``record(out)`` — when given — distills the op's outputs into a
+        JSON-able commit record appended to the durable run log, making
+        the whole job restartable: after a full-fleet crash,
+        :meth:`prepare_resume` + :meth:`resume_take` fast-forward through
+        every committed op from these records while the spills restore
+        from the per-op checkpoints."""
         self.op_seq += 1
         op = self.op_seq
         for _attempt in range(self.world + 1):
             self.flush_held(op)
             engine._proc_ckpt_save(op)
+            if self.injector is not None:
+                self.injector.maybe_corrupt_disk(self, engine)
             try:
                 self.barrier()
                 out = body()
-                self._commit_op(op)
+                self._commit_op(op, engine,
+                                record(out) if record is not None else None)
                 return out
             except WorkerDied:
                 self._recover(engine, op)
@@ -845,7 +1051,7 @@ class ProcContext:
             f"op {op}: recovery did not converge after "
             f"{self.world + 1} attempts")
 
-    def _commit_op(self, op: int) -> None:
+    def _commit_op(self, op: int, engine=None, rec=None) -> None:
         with self._lock:
             for o in [o for o in self._ledger if o <= op]:
                 del self._ledger[o]
@@ -857,8 +1063,119 @@ class ProcContext:
                 del self._consumed_late[o]
             self._op_deferred.pop(op, None)
         self.mesh.purge_older(op)
+        if rec is not None and self.log_dir is not None:
+            rec = dict(rec)
+            rec["engine"] = (self._engines.index(engine)
+                             if engine in self._engines else -1)
+            self._runlog[op] = rec
+            self._write_runlog(op)
+
+    # -- durable run log / whole-job resume ---------------------------------
+
+    def _runlog_path(self, rank: int) -> str:
+        return os.path.join(self.log_dir, f"runlog_r{rank}.json")
+
+    def _write_runlog(self, last_committed: int) -> None:
+        """Atomically persist every committed op's record (self-checked:
+        the document carries its own CRC, so a resume never trusts a
+        damaged log)."""
+        doc = {"version": self.RUNLOG_VERSION, "run_id": self.run_id,
+               "rank": self.rank, "epoch": self.epoch,
+               "last_committed": int(last_committed),
+               "ops": {str(o): r for o, r in self._runlog.items()}}
+        doc["crc"] = json_crc(doc)
+        atomic_write_json(self._runlog_path(self.rank), doc)
+
+    def _read_runlog(self, rank: int) -> dict | None:
+        """Load + verify one rank's run log; ``None`` when the rank never
+        committed an op (no file — resume restarts from the top)."""
+        path = self._runlog_path(rank)
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            doc = json.load(f)
+        want = doc.get("crc")
+        got = json_crc({k: v for k, v in doc.items() if k != "crc"})
+        if want is None or got != want:
+            raise IntegrityError(
+                f"run log {path} failed its checksum (stored {want}, "
+                f"computed {got}) — cannot trust the resume point")
+        if doc.get("version") != self.RUNLOG_VERSION:
+            raise TransportError(
+                f"run log {path} has version {doc.get('version')}, "
+                f"expected {self.RUNLOG_VERSION}")
+        if doc.get("run_id") != self.run_id:
+            raise TransportError(
+                f"run log {path} belongs to run {doc.get('run_id')!r}, "
+                f"not {self.run_id!r} — refusing to resume from it")
+        return doc
+
+    def prepare_resume(self) -> None:
+        """Compute the resume point after a whole-job crash (called once,
+        after every engine has registered).
+
+        Every rank reads ALL ranks' run logs from the shared log dir and
+        takes ``R = min(last_committed)`` — a pure function of on-disk
+        state, so the fleet agrees on R without a collective.  Records
+        for ops ``1..R`` preload the replay log (any rank's record is
+        authoritative: the commit gathers synchronize the full per-op
+        state on every rank), and each engine restores its owned spills
+        to the exact post-R state from the per-op checkpoints."""
+        if not self.resume:
+            return
+        if self.log_dir is None:
+            raise TransportError("resume=True requires a log_dir")
+        docs = [self._read_runlog(r) for r in range(self.world)]
+        resume_op = min((d["last_committed"] if d is not None else 0)
+                        for d in docs)
+        merged: dict[int, dict] = {}
+        for d in docs:
+            if d is None:
+                continue
+            for key, rec in d["ops"].items():
+                op = int(key)
+                if op <= resume_op and op not in merged:
+                    merged[op] = rec
+        missing = [op for op in range(1, resume_op + 1)
+                   if op not in merged]
+        if missing:
+            raise TransportError(
+                f"resume: run logs are missing committed op records "
+                f"{missing} (last_committed={resume_op})")
+        self.resume_op = resume_op
+        self._runlog = merged
+        for eng in self._engines:
+            eng._proc_resume_restore(resume_op)
+
+    def resume_take(self, kind: str) -> dict | None:
+        """Fast-forward one op: if the next op id was already committed
+        by the crashed incarnation, consume its run-log record (the
+        engine reconstructs the op's outputs from it, bit-identically)
+        instead of executing.  ``None`` means the op must run live."""
+        if not self.resume or self.op_seq + 1 > self.resume_op:
+            return None
+        self.op_seq += 1
+        rec = self._runlog.get(self.op_seq)
+        if rec is None or rec.get("kind") != kind:
+            got = "missing" if rec is None else repr(rec.get("kind"))
+            raise TransportError(
+                f"resume: run-log record for op {self.op_seq} is {got}, "
+                f"but the replay expected {kind!r} — the resumed spec "
+                f"does not match the crashed run")
+        return rec
 
     def _recover(self, engine, op: int) -> None:
+        # A peer that declared THIS rank dead (stall detection on a
+        # wedged-but-alive sender) has already moved on and may have
+        # adopted my workers.  A stalled-then-woken rank must exit here,
+        # not recover into a split brain where both sides finish the job.
+        with self.mesh.cv:
+            for _rr, (rep_ep, reported) in list(self.mesh.fails.items()):
+                if rep_ep >= self.epoch and self.rank in reported:
+                    raise TransportError(
+                        "recovery: local rank marked dead by a peer "
+                        "(stall detection) — the fleet has moved on "
+                        "without this rank")
         agreed = self._consensus()
         live = [r for r in range(self.world) if r not in agreed]
         if self.rank not in live:
@@ -917,6 +1234,7 @@ class ProcContext:
                         reports[r] = (got[1] if got is not None
                                       and got[0] >= self.epoch else None)
                     if any(v is None for v in reports.values()):
+                        self.mesh._check_stalls_locked(live)
                         self.mesh.cv.wait(0.2)
                         continue
                     union = set(my)

@@ -10,8 +10,13 @@ generator as a low-skew control.
 from __future__ import annotations
 
 import dataclasses
+import io
+import os
+import tempfile
 
 import numpy as np
+
+from repro.utils import IntegrityError, crc32
 
 
 @dataclasses.dataclass
@@ -40,6 +45,48 @@ class GraphData:
     def nbytes(self) -> int:
         """Raw size as (src, dst) pairs, the paper's Table 3 convention."""
         return self.num_edges * 8  # two int32s
+
+
+def save_edge_list(g: GraphData, path: str) -> int:
+    """Serialize a graph as a checksummed npz edge list and return the
+    file's CRC32.
+
+    Built once by a run's parent and referenced from the run spec
+    (``graph: {"edge_file": path, "crc32": crc}``), so process-mode
+    workers can load *arbitrary* graphs — not only ones regenerable from
+    RMAT parameters — and verify the bytes before trusting them."""
+    buf = io.BytesIO()
+    arrays = dict(num_vertices=np.int64(g.num_vertices),
+                  src=np.asarray(g.src, np.int64),
+                  dst=np.asarray(g.dst, np.int64))
+    if g.data is not None:
+        arrays["data"] = np.asarray(g.data, np.float32)
+    np.savez(buf, **arrays)
+    raw = buf.getvalue()
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    with os.fdopen(fd, "wb") as f:
+        f.write(raw)
+    os.replace(tmp, path)
+    return crc32(raw)
+
+
+def load_edge_list(path: str, expect_crc: int | None = None) -> GraphData:
+    """Load a :func:`save_edge_list` file; with ``expect_crc`` the whole
+    file is checksummed first and a mismatch raises
+    :class:`~repro.utils.IntegrityError` naming the file."""
+    with open(path, "rb") as f:
+        raw = f.read()
+    if expect_crc is not None:
+        got = crc32(raw)
+        if got != int(expect_crc):
+            raise IntegrityError(
+                f"edge list {path} failed its checksum (expected "
+                f"{int(expect_crc)}, read {got}) — disk corruption")
+    with np.load(io.BytesIO(raw), allow_pickle=False) as z:
+        data = z["data"] if "data" in z.files else None
+        return GraphData(int(z["num_vertices"]), z["src"].copy(),
+                         z["dst"].copy(),
+                         None if data is None else data.copy())
 
 
 def rmat_graph(scale: int, edge_factor: int = 16, *, a: float = 0.57,

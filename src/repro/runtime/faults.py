@@ -27,9 +27,25 @@ iteration *t* of a driver is its *t*-th ProcessEdges call).  Three kinds:
   (``straggler.merge_deferred_entry``).  Only monoid-legal for idempotent
   slots (MIN/MAX); :meth:`FaultPlan.validate_for_monoid` rejects ADD.
 
-The injector is consulted only on the socket data path and at the kill
-points the executor exposes — a run with an empty plan is byte-for-byte
-the plain process-mode run.
+* ``corrupt(...)`` — flip one byte.  ``target="wire"`` flips a payload
+  byte of the ``frame``-th cross-rank frame from ``src`` to ``dst``: the
+  receiver's frame CRC rejects it and the ledger redelivers a clean copy
+  (byte counters charged once, at post time — bit-identical run).
+  ``target="chunk" | "spill" | "ckpt"`` flips a byte of the named on-disk
+  artifact of logical worker ``worker`` right before the op's ready
+  barrier: the next read of that artifact raises a typed
+  ``IntegrityError`` naming the damaged file — never a silently-wrong
+  result.
+
+* ``stall(src, dst, pe, frame, seconds)`` — the sender freezes mid-frame
+  (half the frame written, the send lock held — heartbeats to that peer
+  stall too) for ``seconds``.  A short stall resolves into a clean
+  delivery; one past the transport's ``stall_timeout`` trips the
+  receiver's stall detector and flows into the normal recovery path.
+
+The injector is consulted only on the socket data path, the pre-barrier
+disk hook, and the kill points the executor exposes — a run with an empty
+plan is byte-for-byte the plain process-mode run.
 """
 from __future__ import annotations
 
@@ -42,17 +58,37 @@ FAULT_EXIT = 42         # exit code of an injected kill (asserted by tests)
 
 KILL_PHASES = ("start", "send", "recv", "apply")
 
+CORRUPT_TARGETS = ("wire", "chunk", "spill", "ckpt")
+
+
+def flip_byte(path: str, offset: int | None = None) -> int:
+    """XOR one byte of ``path`` with 0xFF (mid-file by default); returns
+    the flipped offset.  Shared by the fault injector and the integrity
+    tests — the canonical single-byte disk corruption."""
+    size = os.path.getsize(path)
+    if size == 0:
+        raise ValueError(f"cannot corrupt empty file {path}")
+    off = size // 2 if offset is None else offset
+    with open(path, "r+b") as f:
+        f.seek(off)
+        b = f.read(1)
+        f.seek(off)
+        f.write(bytes([b[0] ^ 0xFF]))
+    return off
+
 
 @dataclasses.dataclass(frozen=True)
 class FaultAction:
-    kind: str               # "kill" | "drop" | "delay"
+    kind: str               # "kill" | "drop" | "delay" | "corrupt" | "stall"
     pe: int                 # ProcessEdges call index (1-based)
-    worker: int = -1        # kill/delay: acting logical worker
+    worker: int = -1        # kill/delay/corrupt-disk: acting logical worker
     phase: str = "start"    # kill: one of KILL_PHASES
     after_frames: int = 0   # kill@send: die after this many frames
-    src: int = -1           # drop: source worker
-    dst: int = -1           # drop: destination worker
-    frame: int = 0          # drop: per-(src,dst) frame index in the op
+    src: int = -1           # drop/corrupt-wire/stall: source worker
+    dst: int = -1           # drop/corrupt-wire/stall: destination worker
+    frame: int = 0          # per-(src,dst) frame index in the op
+    target: str = "wire"    # corrupt: one of CORRUPT_TARGETS
+    seconds: float = 0.0    # stall: how long the sender freezes mid-frame
 
 
 class FaultPlan:
@@ -61,7 +97,8 @@ class FaultPlan:
     def __init__(self, actions=()):
         self.actions = tuple(actions)
         for a in self.actions:
-            if a.kind not in ("kill", "drop", "delay"):
+            if a.kind not in ("kill", "drop", "delay", "corrupt",
+                              "stall"):
                 raise ValueError(f"unknown fault kind {a.kind!r}")
             if a.pe < 1:
                 raise ValueError(
@@ -73,6 +110,26 @@ class FaultPlan:
                     f"{a.phase!r}")
             if a.kind in ("kill", "delay") and a.worker < 0:
                 raise ValueError(f"{a.kind} fault needs a worker")
+            if a.kind == "corrupt":
+                if a.target not in CORRUPT_TARGETS:
+                    raise ValueError(
+                        f"corrupt target must be one of "
+                        f"{CORRUPT_TARGETS}, got {a.target!r}")
+                if a.target == "wire" and (a.src < 0 or a.dst < 0):
+                    raise ValueError(
+                        "corrupt(target='wire') fault needs src and dst "
+                        "workers")
+                if a.target != "wire" and a.worker < 0:
+                    raise ValueError(
+                        f"corrupt(target={a.target!r}) fault needs a "
+                        f"worker")
+            if a.kind == "stall":
+                if a.src < 0 or a.dst < 0:
+                    raise ValueError("stall fault needs src and dst "
+                                     "workers")
+                if not a.seconds > 0:
+                    raise ValueError(
+                        f"stall fault needs seconds > 0, got {a.seconds}")
             if a.kind == "drop" and (a.src < 0 or a.dst < 0):
                 raise ValueError("drop fault needs src and dst workers")
 
@@ -91,6 +148,23 @@ class FaultPlan:
     @staticmethod
     def delay(worker: int, pe: int) -> "FaultAction":
         return FaultAction("delay", pe, worker=worker)
+
+    @staticmethod
+    def corrupt_wire(src: int, dst: int, pe: int,
+                     frame: int = 0) -> "FaultAction":
+        return FaultAction("corrupt", pe, src=src, dst=dst, frame=frame,
+                           target="wire")
+
+    @staticmethod
+    def corrupt_disk(worker: int, pe: int,
+                     target: str = "chunk") -> "FaultAction":
+        return FaultAction("corrupt", pe, worker=worker, target=target)
+
+    @staticmethod
+    def stall(src: int, dst: int, pe: int, seconds: float,
+              frame: int = 0) -> "FaultAction":
+        return FaultAction("stall", pe, src=src, dst=dst, frame=frame,
+                           seconds=float(seconds))
 
     # -- validation ---------------------------------------------------------
 
@@ -125,8 +199,11 @@ class FaultInjector:
 
     * :meth:`maybe_kill` — executor phase boundaries (start/recv/apply);
     * :meth:`on_frame_sent` — after each socket frame (kill@send);
-    * :meth:`should_drop` / :meth:`should_hold` — consulted by
-      ``ProcContext.send_data`` per cross-rank frame.
+    * :meth:`data_fault` / :meth:`should_hold` — consulted by
+      ``ProcContext.send_data`` per cross-rank frame (drop /
+      corrupt-wire / stall);
+    * :meth:`maybe_corrupt_disk` — ``ProcContext.recoverable`` before
+      each op's ready barrier (corrupt chunk / spill / ckpt).
 
     Kills fire only on the worker's *initial* owner rank (the replaying
     adopter must not re-die), exit via ``os._exit(FAULT_EXIT)`` — no
@@ -139,6 +216,7 @@ class FaultInjector:
         self._lock = threading.Lock()
         self._sent: dict = {}       # (pe, src_w) -> frames sent
         self._posted: dict = {}     # (pe, src_w, dst_w) -> frames posted
+        self._disk_fired: set = set()   # corrupt-disk action indices fired
 
     def _my_kill(self, ctx, pe: int, phase: str):
         for a in self.plan.actions:
@@ -160,14 +238,72 @@ class FaultInjector:
         if a is not None and a.worker == src_w and n > a.after_frames:
             os._exit(FAULT_EXIT)
 
-    def should_drop(self, pe: int, src_w: int, dst_w: int) -> bool:
+    def data_fault(self, pe: int, src_w: int, dst_w: int
+                   ) -> tuple | None:
+        """Consult (and consume) the per-(pe, src, dst) frame counter:
+        returns ``None`` (send normally), ``("drop",)``, ``("corrupt",)``
+        or ``("stall", seconds)`` for this frame."""
         with self._lock:
             idx = self._posted.get((pe, src_w, dst_w), 0)
             self._posted[(pe, src_w, dst_w)] = idx + 1
-        return any(a.kind == "drop" and a.pe == pe and a.src == src_w
-                   and a.dst == dst_w and a.frame == idx
-                   for a in self.plan.actions)
+        for a in self.plan.actions:
+            if not (a.pe == pe and a.src == src_w and a.dst == dst_w
+                    and a.frame == idx):
+                continue
+            if a.kind == "drop":
+                return ("drop",)
+            if a.kind == "corrupt" and a.target == "wire":
+                return ("corrupt",)
+            if a.kind == "stall":
+                return ("stall", a.seconds)
+        return None
 
     def should_hold(self, pe: int, src_w: int) -> bool:
         return any(a.kind == "delay" and a.pe == pe and a.worker == src_w
                    for a in self.plan.actions)
+
+    # -- disk corruption ----------------------------------------------------
+
+    def maybe_corrupt_disk(self, ctx, engine) -> None:
+        """Flip one byte of a chosen on-disk artifact of a worker this
+        rank owns (fires once per action, on the worker's initial owner,
+        right before the op's ready barrier): a chunk-shard section, a
+        vertex-spill batch, or a checkpoint block.  The next read of the
+        artifact then raises the matching :class:`IntegrityError` naming
+        the damaged file."""
+        for i, a in enumerate(self.plan.actions):
+            if (a.kind != "corrupt" or a.target == "wire"
+                    or a.pe != ctx.pe_seq):
+                continue
+            with self._lock:
+                if (i in self._disk_fired
+                        or ctx.initial_assign[a.worker] != self.rank
+                        or ctx.assign[a.worker] != self.rank):
+                    continue
+                self._disk_fired.add(i)
+            flip_byte(self._disk_target(engine, a.worker, a.target))
+
+    @staticmethod
+    def _disk_target(engine, w: int, target: str) -> str:
+        """Pick the concrete file to damage for worker ``w``."""
+        if target == "chunk":
+            shard = engine.store.shards[w]
+            q = shard.partitions[0]
+            return os.path.join(shard.root, f"edges_q{q}.bin")
+        if target == "spill":
+            spill = engine.spills[w]
+            name = sorted(spill.names())[0]
+            return spill._path(name)
+        if target == "ckpt":
+            # damage a block the NEWEST manifest references — the one a
+            # rollback of the current (never-committed) op would restore;
+            # an unreferenced block would never be read again
+            store = engine._proc_ckpt_store(w)
+            mdir = os.path.join(store.root, "manifests")
+            with open(os.path.join(mdir,
+                                   sorted(os.listdir(mdir))[-1])) as f:
+                mani = json.load(f)
+            arrays = mani["arrays"]
+            digest = arrays[sorted(arrays)[0]]["blocks"][0]
+            return os.path.join(store.root, "blocks", f"{digest}.blk")
+        raise ValueError(f"unknown disk corrupt target {target!r}")

@@ -20,7 +20,8 @@ The run spec is a JSON object::
 
     {"run_id": str, "world": int, "num_workers": int,
      "rendezvous": dir, "result_dir": dir,
-     "graph": {"scale": 7, "edge_factor": 16, "seed": 5, "weighted": true},
+     "graph": {"scale": 7, "edge_factor": 16, "seed": 5, "weighted": true}
+              or {"edge_file": path, "crc32": int}  (serialized edge list),
      "spec": {"num_partitions": 4, "batch_size": 16},
      "store_root": sharded-store dir,
      "store_root_rev": optional reversed-graph store dir (wcc),
@@ -28,7 +29,9 @@ The run spec is a JSON object::
      "algorithm": {"name": "pagerank" | "bfs" | "sssp" | "wcc",
                    "args": {...}},
      "fault_plan": FaultPlan.to_json() string or null,
-     "io_timeout": seconds}
+     "io_timeout": seconds, "stall_timeout": seconds,
+     "resume": bool  (set by launch(resume=True): restart the whole job
+                      from the durable run log + per-op checkpoints)}
 """
 from __future__ import annotations
 
@@ -52,11 +55,19 @@ def _build_problem(spec: dict):
     every rank derives bit-identical preprocessing, so the replicas agree
     on specs, need lists, and byte models without shipping arrays."""
     from repro.core import build_dist_graph, build_formats, make_spec
-    from repro.data.graphs import rmat_graph
     gsp = spec["graph"]
-    g = rmat_graph(int(gsp["scale"]), int(gsp.get("edge_factor", 16)),
-                   seed=int(gsp.get("seed", 0)),
-                   weighted=bool(gsp.get("weighted", False)))
+    if gsp.get("edge_file"):
+        # Arbitrary graphs: the parent serialized (and checksummed) the
+        # edge list once; every rank loads the identical bytes instead of
+        # regenerating from RMAT parameters.
+        from repro.data.graphs import load_edge_list
+        g = load_edge_list(gsp["edge_file"],
+                           expect_crc=gsp.get("crc32"))
+    else:
+        from repro.data.graphs import rmat_graph
+        g = rmat_graph(int(gsp["scale"]), int(gsp.get("edge_factor", 16)),
+                       seed=int(gsp.get("seed", 0)),
+                       weighted=bool(gsp.get("weighted", False)))
     two = make_spec(g, num_partitions=int(spec["spec"]["num_partitions"]),
                     batch_size=int(spec["spec"]["batch_size"]))
     dg = build_dist_graph(g, two)
@@ -113,7 +124,10 @@ def worker_main(spec_path: str, rank: int) -> None:
     ctx = ProcContext(rank, int(spec["world"]), int(spec["num_workers"]),
                       spec["rendezvous"], run_id=spec.get("run_id", "run"),
                       injector=injector,
-                      io_timeout=float(spec.get("io_timeout", 120.0)))
+                      io_timeout=float(spec.get("io_timeout", 120.0)),
+                      stall_timeout=float(spec.get("stall_timeout", 30.0)),
+                      log_dir=spec["result_dir"],
+                      resume=bool(spec.get("resume", False)))
     cfg = EngineConfig(executor="dist_ooc",
                        num_workers=int(spec["num_workers"]),
                        **spec.get("engine", {}))
@@ -125,6 +139,10 @@ def worker_main(spec_path: str, rank: int) -> None:
         fm_r = build_formats(dg_r)
         store_r = ShardedChunkStore.open(spec["store_root_rev"])
         engine_rev = Engine(dg_r, fm_r, cfg, store=store_r, proc_ctx=ctx)
+    # Whole-job restart: with every engine registered, compute the resume
+    # point from the durable run logs and restore the spills to it; the
+    # driver below then fast-forwards through the committed ops.
+    ctx.prepare_resume()
 
     values, stats = _run_algorithm(spec, engine, engine_rev)
     full = _assemble_values(ctx, two, store.worker_of, values)
@@ -149,6 +167,8 @@ def worker_main(spec_path: str, rank: int) -> None:
         redelivered=ctx.stats["redelivered"],
         held=ctx.stats["held"],
         late_delivered=ctx.stats["late_delivered"],
+        corrupted=ctx.stats["corrupted"],
+        corrupt_frames=ctx.stats["corrupt_frames"],
     )
     os.makedirs(spec["result_dir"], exist_ok=True)
     tmp = os.path.join(spec["result_dir"], f".result_r{rank}.npz.tmp")
@@ -164,16 +184,34 @@ def worker_main(spec_path: str, rank: int) -> None:
 # ---------------------------------------------------------------------------
 
 
-def launch(spec: dict, timeout: float = 300.0) -> list:
+def launch(spec: dict, timeout: float = 300.0,
+           resume: bool = False) -> list:
     """Spawn one OS process per rank, wait, return the exit codes.
 
     Writes ``spec.json`` (and per-rank ``log_r{rank}.txt``) under the
     spec's ``result_dir``.  On a hang past ``timeout`` every straggler is
     killed and a RuntimeError names it — a fault-injection run must
-    terminate via recovery, never via the parent's watchdog."""
+    terminate via recovery, never via the parent's watchdog.
+
+    ``resume=True`` restarts a crashed job from its durable run logs +
+    per-op checkpoints (same spec, same dirs): the fault plan is stripped
+    — the op the crash interrupted was never committed, so a replayed
+    plan would re-fire the same kill forever — and the ranks fast-forward
+    through every committed op, producing results bit-identical to a
+    failure-free run."""
     rdir = spec["result_dir"]
     os.makedirs(rdir, exist_ok=True)
     os.makedirs(spec["rendezvous"], exist_ok=True)
+    if resume:
+        spec = dict(spec)
+        spec["resume"] = True
+        spec["fault_plan"] = None
+    # Stale port files from a previous (crashed) incarnation would race
+    # the fresh rendezvous: a rank could dial a long-gone port.
+    for r in range(int(spec["world"])):
+        stale = os.path.join(spec["rendezvous"], f"rank{r}.port")
+        if os.path.exists(stale):
+            os.remove(stale)
     spec_path = os.path.join(rdir, "spec.json")
     with open(spec_path, "w") as f:
         json.dump(spec, f)

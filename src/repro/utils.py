@@ -1,16 +1,53 @@
 """Shared small utilities (no jax device state at import time)."""
 from __future__ import annotations
 
+import base64
 import contextlib
 import dataclasses
 import json
 import os
 import tempfile
 import time
+import zlib
 from typing import Any, Callable, Iterable
 
 import jax
 import numpy as np
+
+
+class IntegrityError(RuntimeError):
+    """A stored or transmitted artifact failed its checksum.
+
+    Raised at every verification boundary (chunk section, spill batch,
+    ckpt block, wire frame, manifest) with a message naming the damaged
+    artifact — never a silent wrong result."""
+
+
+def crc32(data, seed: int = 0) -> int:
+    """CRC32 of ``data`` (bytes / buffer / ndarray), as unsigned int."""
+    if isinstance(data, np.ndarray):
+        data = np.ascontiguousarray(data)
+    return zlib.crc32(memoryview(data).cast("B"), seed) & 0xFFFFFFFF
+
+
+def json_crc(obj: Any) -> int:
+    """Canonical CRC32 of a JSON-serializable object (sorted keys)."""
+    return crc32(json.dumps(obj, sort_keys=True).encode())
+
+
+def pack_bools(a) -> str:
+    """Bool array -> base64 bitmap string (JSON-friendly; the run-log
+    representation of a per-op active mask)."""
+    a = np.asarray(a, bool)
+    return base64.b64encode(np.packbits(a.reshape(-1)).tobytes()).decode(
+        "ascii")
+
+
+def unpack_bools(s: str, shape) -> np.ndarray:
+    """Inverse of :func:`pack_bools` for a known shape."""
+    raw = np.frombuffer(base64.b64decode(s), np.uint8)
+    n = int(np.prod(shape))
+    return np.unpackbits(raw, count=n).reshape(shape).astype(bool)
 
 
 def atomic_write_json(path: str, obj: Any) -> None:

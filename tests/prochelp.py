@@ -91,7 +91,8 @@ def run_threads(prob: dict, w: int, algname: str) -> dict:
 
 
 def proc_spec(prob: dict, w: int, algname: str, run_dir: str, *,
-              world=None, plan=None, io_timeout: float = 120.0) -> dict:
+              world=None, plan=None, io_timeout: float = 120.0,
+              **extra) -> dict:
     spec = {
         # unique per launch so per-op recovery checkpoints from earlier
         # runs against the same shard roots can never be restored
@@ -109,18 +110,31 @@ def proc_spec(prob: dict, w: int, algname: str, run_dir: str, *,
     }
     if algname == "wcc":
         spec["store_root_rev"] = prob["stores_r"][w].root
+    spec.update(extra)          # e.g. stall_timeout for stall tests
     return spec
 
 
 def run_procs(prob: dict, w: int, algname: str, run_dir: str, *,
-              world=None, plan=None, timeout: float = 240.0):
+              world=None, plan=None, timeout: float = 240.0, **extra):
     """Launch a real multi-process run; returns (spec, exit codes,
     {rank: result dict} for ranks that exited cleanly)."""
-    spec = proc_spec(prob, w, algname, run_dir, world=world, plan=plan)
+    spec = proc_spec(prob, w, algname, run_dir, world=world, plan=plan,
+                     **extra)
     codes = launch(spec, timeout=timeout)
     results = {r: load_result(spec["result_dir"], r)
                for r, c in enumerate(codes) if c == 0}
     return spec, codes, results
+
+
+def resume_procs(spec: dict, timeout: float = 240.0):
+    """Restart a crashed job from its durable run logs: same spec, same
+    run_id, same dirs — ``launch(resume=True)`` strips the fault plan and
+    the ranks fast-forward through every committed op.  Returns
+    (exit codes, {rank: result dict})."""
+    codes = launch(spec, timeout=timeout, resume=True)
+    results = {r: load_result(spec["result_dir"], r)
+               for r, c in enumerate(codes) if c == 0}
+    return codes, results
 
 
 def assert_result_equal(got: dict, want: dict, keys=RESULT_KEYS) -> None:

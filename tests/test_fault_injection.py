@@ -21,6 +21,20 @@ and per-worker totals all match the in-thread dist_ooc reference.
   (``straggler.merge_deferred_entry``); only the *fixpoint* is asserted
   (an extra round is legal), and only idempotent monoids (MIN/MAX) admit
   delays at all — ADD is rejected up front.
+* **Corrupt (wire)** — one cross-rank frame is sent with a flipped
+  payload byte; the receiver's frame CRC rejects it, the ledger
+  redelivers a clean copy, and the run stays bit-identical (DESIGN.md
+  §14).
+* **Corrupt (disk)** — one byte of a spill batch / chunk section /
+  checkpoint block is flipped on disk; the next read raises a typed
+  ``IntegrityError`` naming the file — the victim dies loudly and the
+  survivors either recover (spill self-heals through the checkpoint
+  rollback) or the job fails typed (immutable chunk damage) — never a
+  silently-wrong result.
+* **Stall** — a sender freezes mid-frame holding its send lock.  A short
+  stall resolves into a clean delivery; one past ``stall_timeout`` trips
+  the receiver's heartbeat-staleness detector and flows into the normal
+  recovery path.
 * **Property** — random fault schedules (pinned-seed sweep; hypothesis
   drives the seeds when installed) never change the BFS fixpoint.
 """
@@ -83,6 +97,27 @@ def test_fault_plan_validation():
         FaultPlan([FaultAction("kill", 1)])
     with pytest.raises(ValueError, match="src and dst"):
         FaultPlan([FaultAction("drop", 1, src=0)])
+
+
+def test_fault_plan_json_roundtrip_new_kinds():
+    plan = FaultPlan([FaultPlan.corrupt_wire(0, 1, 2, frame=1),
+                      FaultPlan.corrupt_disk(1, 2, target="spill"),
+                      FaultPlan.corrupt_disk(0, 1, target="ckpt"),
+                      FaultPlan.stall(1, 0, 3, seconds=2.5)])
+    assert FaultPlan.from_json(plan.to_json()).actions == plan.actions
+
+
+def test_fault_plan_validation_new_kinds():
+    with pytest.raises(ValueError, match="target"):
+        FaultPlan([FaultAction("corrupt", 1, worker=0, target="ram")])
+    with pytest.raises(ValueError, match="src and dst"):
+        FaultPlan([FaultAction("corrupt", 1, target="wire")])
+    with pytest.raises(ValueError, match="worker"):
+        FaultPlan([FaultAction("corrupt", 1, target="spill")])
+    with pytest.raises(ValueError, match="src and dst"):
+        FaultPlan([FaultAction("stall", 1, seconds=1.0)])
+    with pytest.raises(ValueError, match="seconds"):
+        FaultPlan([FaultAction("stall", 1, src=0, dst=1)])
 
 
 def test_delay_monoid_gate():
@@ -215,6 +250,160 @@ def test_delay_rejected_for_add_monoid(prob, tmp_path):
         prob, 2, "pagerank", str(tmp_path / "run"), plan=plan)
     assert all(c not in (0, FAULT_EXIT) for c in codes), codes
     assert not results
+
+
+# ---------------------------------------------------------------------------
+# Wire corruption: CRC rejects the frame, ledger redelivers, bit-identical
+# ---------------------------------------------------------------------------
+
+def test_corrupt_wire_frame_redelivered(prob, tmp_path):
+    plan = FaultPlan([FaultPlan.corrupt_wire(src=0, dst=1, pe=2,
+                                             frame=0)])
+    _, codes, results = prochelp.run_procs(
+        prob, 2, "pagerank", str(tmp_path / "run"), plan=plan)
+    assert codes == [0, 0], codes
+    want = golden(prob, 2, "pagerank")
+    for res in results.values():
+        prochelp.assert_result_equal(res, want)
+        assert int(res["recoveries"]) == 0
+        assert int(res["epoch"]) == 0
+    # sender (rank 0) flipped the byte; the receiver's CRC caught it and
+    # the completeness check pulled a clean copy through the ledger
+    assert results[0]["corrupted"][0, 1] == 1
+    assert results[1]["corrupt_frames"][0, 1] == 1
+    assert results[1]["redelivered"][0, 1] == 1
+    np.testing.assert_array_equal(results[1]["corrupted"], 0)
+    np.testing.assert_array_equal(results[0]["corrupt_frames"], 0)
+
+
+def test_corrupt_wire_both_directions(prob, tmp_path):
+    plan = FaultPlan([FaultPlan.corrupt_wire(0, 1, 1),
+                      FaultPlan.corrupt_wire(1, 0, 2)])
+    _, codes, results = prochelp.run_procs(
+        prob, 2, "pagerank", str(tmp_path / "run"), plan=plan)
+    assert codes == [0, 0], codes
+    want = golden(prob, 2, "pagerank")
+    for res in results.values():
+        prochelp.assert_result_equal(res, want)
+    assert results[0]["corrupted"][0, 1] == 1
+    assert results[1]["corrupted"][1, 0] == 1
+    assert results[0]["redelivered"][1, 0] == 1
+    assert results[1]["redelivered"][0, 1] == 1
+
+
+# ---------------------------------------------------------------------------
+# Disk corruption: typed IntegrityError, recovery or typed job failure
+# ---------------------------------------------------------------------------
+
+def _rank_log(spec, r):
+    with open(os.path.join(spec["result_dir"], f"log_r{r}.txt")) as f:
+        return f.read()
+
+
+def test_corrupt_spill_victim_dies_survivor_recovers(prob, tmp_path):
+    """A flipped spill byte kills its owner with a *named* IntegrityError;
+    the survivor adopts the worker and restores its spill from the per-op
+    checkpoint — which rewrites the damaged bytes (self-heal) — and the
+    finished run is bit-identical."""
+    plan = FaultPlan([FaultPlan.corrupt_disk(worker=1, pe=2,
+                                             target="spill")])
+    spec, codes, results = prochelp.run_procs(
+        prob, 2, "pagerank", str(tmp_path / "run"), plan=plan)
+    assert codes[1] not in (0, FAULT_EXIT), codes   # typed crash, not kill
+    assert codes[0] == 0, codes
+    log = _rank_log(spec, 1)
+    assert "IntegrityError" in log and "vertex_" in log
+    want = golden(prob, 2, "pagerank")
+    res = results[0]
+    prochelp.assert_result_equal(res, want)
+    assert int(res["recoveries"]) >= 1
+    assert int(res["assign"][1]) == 0               # worker adopted
+
+
+def test_corrupt_chunk_is_typed_fatal_never_wrong(prob, tmp_path):
+    """Chunk shards are immutable: a flipped byte can't be healed by
+    rollback, so the victim *and* the adopting survivor both hit the
+    same named IntegrityError — the job fails typed, it never silently
+    computes on damaged edges.  (The store is shared by the whole test
+    module, so the damaged bytes are restored afterwards.)"""
+    store = prob["stores"][2]
+    shard = store.shards[1]
+    victim_path = os.path.join(shard.root,
+                               f"edges_q{shard.partitions[0]}.bin")
+    with open(victim_path, "rb") as f:
+        pristine = f.read()
+    try:
+        plan = FaultPlan([FaultPlan.corrupt_disk(worker=1, pe=2,
+                                                 target="chunk")])
+        spec, codes, results = prochelp.run_procs(
+            prob, 2, "pagerank", str(tmp_path / "run"), plan=plan)
+        assert all(c not in (0, FAULT_EXIT) for c in codes), codes
+        assert not results, "a rank produced a result on damaged chunks"
+        named = [r for r in range(2)
+                 if "IntegrityError" in _rank_log(spec, r)
+                 and os.path.basename(victim_path) in _rank_log(spec, r)]
+        assert named, "no rank named the damaged chunk file"
+    finally:
+        with open(victim_path, "wb") as f:
+            f.write(pristine)
+
+
+def test_corrupt_ckpt_poisons_recovery_typed(prob, tmp_path):
+    """Corruption inside the recovery path itself: the pre-op checkpoint
+    block is flipped and the owner is killed at the same op, so the
+    adopting survivor must *refuse* the damaged restore with a typed
+    IntegrityError — restoring silently-wrong state would be the one
+    unforgivable outcome."""
+    plan = FaultPlan([FaultPlan.corrupt_disk(worker=1, pe=2,
+                                             target="ckpt"),
+                      FaultPlan.kill(1, 2, "start")])
+    spec, codes, results = prochelp.run_procs(
+        prob, 2, "pagerank", str(tmp_path / "run"), plan=plan)
+    assert codes[1] == FAULT_EXIT, codes
+    assert codes[0] not in (0, FAULT_EXIT), codes
+    assert not results
+    log = _rank_log(spec, 0)
+    assert "IntegrityError" in log
+
+
+# ---------------------------------------------------------------------------
+# Stall: mid-frame freeze — short resolves clean, long trips detection
+# ---------------------------------------------------------------------------
+
+def test_stall_short_resolves_clean(prob, tmp_path):
+    """A sub-timeout mid-frame stall is invisible to correctness: the
+    receiver blocks on the half-written frame, the sender wakes and
+    completes it, nothing is dropped or replayed."""
+    plan = FaultPlan([FaultPlan.stall(src=0, dst=1, pe=2, seconds=0.5)])
+    _, codes, results = prochelp.run_procs(
+        prob, 2, "pagerank", str(tmp_path / "run"), plan=plan)
+    assert codes == [0, 0], codes
+    want = golden(prob, 2, "pagerank")
+    for res in results.values():
+        prochelp.assert_result_equal(res, want)
+        assert int(res["recoveries"]) == 0
+        assert int(res["epoch"]) == 0
+
+
+def test_stall_long_detected_and_recovered(prob, tmp_path):
+    """A stall past ``stall_timeout`` looks exactly like a wedged sender:
+    the receiver's heartbeat-staleness detector declares the rank dead
+    and the normal kill-recovery path takes over — the survivor's result
+    is bit-identical, and the stalled rank exits with a transport error
+    (not the injected-kill code) once it wakes into an epoch that has
+    moved on without it."""
+    plan = FaultPlan([FaultPlan.stall(src=0, dst=1, pe=2, seconds=6.0)])
+    spec, codes, results = prochelp.run_procs(
+        prob, 2, "pagerank", str(tmp_path / "run"), plan=plan,
+        stall_timeout=1.5)
+    assert codes[0] not in (0, FAULT_EXIT), codes
+    assert codes[1] == 0, codes
+    want = golden(prob, 2, "pagerank")
+    res = results[1]
+    prochelp.assert_result_equal(res, want)
+    assert int(res["recoveries"]) >= 1
+    assert int(res["epoch"]) >= 1
+    assert int(res["assign"][0]) == 1               # worker 0 adopted
 
 
 # ---------------------------------------------------------------------------

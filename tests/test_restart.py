@@ -1,0 +1,237 @@
+"""Whole-job durable restart (DESIGN.md §14).
+
+The gate: **SIGKILL every rank mid-run, relaunch with ``resume=True``,
+and the finished job is bit-identical to a failure-free run** — vertex
+values, iteration count, per-iteration returns, every counter (the
+``measured == modeled`` byte audit included), and per-worker totals.
+
+Mechanics under test: every committed op appends its record (totals,
+counters, per-worker byte tallies, post-op frontier) to the rank's
+atomic, self-checksummed ``runlog_r{rank}.json``; the resume point is
+``min(last_committed)`` over the world — a pure function of atomically
+written on-disk state, no survivor consensus needed; each engine
+restores its spills from the per-op checkpoint of the *crashed* (never
+committed) op and the drivers fast-forward through the committed prefix
+without touching disk or wire.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import prochelp
+from repro.data.graphs import save_edge_list
+from repro.runtime.faults import FAULT_EXIT, FaultPlan
+from repro.utils import json_crc
+
+
+@pytest.fixture(scope="module")
+def prob(tmp_path_factory):
+    return prochelp.build_problem(
+        str(tmp_path_factory.mktemp("restart_store")), workers=(2, 4))
+
+
+_golden_cache = {}
+
+
+def golden(prob, w, algname):
+    key = (w, algname)
+    if key not in _golden_cache:
+        _golden_cache[key] = prochelp.run_threads(prob, w, algname)
+    return _golden_cache[key]
+
+
+def crash_plan(world: int, pe: int) -> FaultPlan:
+    """Kill *every* rank at ProcessEdges call ``pe``: worker r is
+    initially owned by rank r (round-robin, W >= world), so one kill per
+    rank takes the whole job down — the crashed op was checkpointed but
+    never committed."""
+    return FaultPlan([FaultPlan.kill(r, pe, "start")
+                      for r in range(world)])
+
+
+def check_restart(prob, run_dir, algname, w, pe, world=None):
+    world = w if world is None else world
+    spec, codes, results = prochelp.run_procs(
+        prob, w, algname, run_dir, world=world,
+        plan=crash_plan(world, pe))
+    assert codes == [FAULT_EXIT] * world, codes
+    assert not results, "a rank wrote a result despite the whole-job kill"
+    codes, results = prochelp.resume_procs(spec)
+    assert codes == [0] * world, codes
+    want = golden(prob, w, algname)
+    for res in results.values():
+        prochelp.assert_result_equal(res, want)
+        # the resumed incarnation replays nothing over the wire for the
+        # committed prefix and sees no faults of its own
+        assert int(res["recoveries"]) == 0
+        assert int(res["epoch"]) == 0
+    return spec
+
+
+# Every algorithm, both worker counts.  pe = 2 crashes mid-run with a
+# nonempty committed prefix; wcc's pe 2 is iteration 1's reverse-engine
+# op, so its restore spans both engines' checkpoint stores.
+RESTART_CASES = [
+    ("pagerank", 2, 2), ("pagerank", 4, 2),
+    ("bfs", 2, 2), ("bfs", 4, 2),
+    ("sssp", 2, 2), ("sssp", 4, 2),
+    ("wcc", 2, 2), ("wcc", 4, 3),
+]
+
+
+@pytest.mark.parametrize("algname,w,pe", RESTART_CASES)
+def test_whole_job_crash_restart(prob, tmp_path, algname, w, pe):
+    check_restart(prob, str(tmp_path / "run"), algname, w, pe)
+
+
+def test_restart_first_op_no_committed_prefix(prob, tmp_path):
+    """Crash at pe 1: nothing was ever committed, resume_op = 0, and the
+    resumed run is simply a full run — still bit-identical."""
+    check_restart(prob, str(tmp_path / "run"), "pagerank", 2, 1)
+
+
+def test_restart_multi_worker_ranks(prob, tmp_path):
+    """W=4 over world=2 (two logical workers per rank): each rank
+    restores every owned worker's spill, not just one."""
+    w, world = 4, 2
+    spec, codes, results = prochelp.run_procs(
+        prob, w, "bfs", str(tmp_path / "run"), world=world,
+        plan=crash_plan(world, 2))
+    assert codes == [FAULT_EXIT] * world, codes
+    codes, results = prochelp.resume_procs(spec)
+    assert codes == [0] * world, codes
+    want = golden(prob, w, "bfs")
+    for res in results.values():
+        prochelp.assert_result_equal(res, want)
+
+
+def test_resume_of_completed_run_is_pure_fast_forward(prob, tmp_path):
+    """Resuming a job that already finished replays the entire run from
+    the runlog — every op fast-forwards, no ProcessEdges executes, and
+    the result is still bit-identical (the degenerate restart)."""
+    spec, codes, results = prochelp.run_procs(
+        prob, 2, "pagerank", str(tmp_path / "run"))
+    assert codes == [0, 0]
+    codes, results = prochelp.resume_procs(spec)
+    assert codes == [0, 0], codes
+    want = golden(prob, 2, "pagerank")
+    for res in results.values():
+        prochelp.assert_result_equal(res, want)
+        # pure fast-forward: no data frame ever crosses the wire
+        np.testing.assert_array_equal(res["wire_frames"], 0)
+
+
+def test_resume_with_corrupt_runlog_is_typed_fatal(prob, tmp_path):
+    """A flipped byte in a rank's runlog must fail the resume with an
+    IntegrityError naming the file — a restart must never begin from an
+    untrusted resume point."""
+    spec, codes, _ = prochelp.run_procs(
+        prob, 2, "pagerank", str(tmp_path / "run"),
+        plan=crash_plan(2, 2))
+    assert codes == [FAULT_EXIT, FAULT_EXIT]
+    log_path = os.path.join(spec["result_dir"], "runlog_r1.json")
+    with open(log_path) as f:
+        doc = json.load(f)
+    orig_committed = doc["last_committed"]
+    doc["last_committed"] = 999        # tamper without fixing the crc
+    with open(log_path, "w") as f:
+        json.dump(doc, f)
+    codes, results = prochelp.resume_procs(spec)
+    assert all(c not in (0, FAULT_EXIT) for c in codes), codes
+    assert not results
+    found = False
+    for r in range(2):
+        with open(os.path.join(spec["result_dir"],
+                               f"log_r{r}.txt")) as f:
+            text = f.read()
+        if "IntegrityError" in text and "runlog_r1.json" in text:
+            found = True
+    assert found, "no rank reported the damaged runlog by name"
+    # repair the log (recompute its self-crc over the tampered-back
+    # content) and the very same job resumes to the right answer
+    doc["last_committed"] = 2
+    doc.pop("crc", None)
+    doc["crc"] = json_crc(doc)
+    with open(log_path, "w") as f:
+        json.dump(doc, f)
+    codes, results = prochelp.resume_procs(spec)
+    assert codes == [0, 0], codes
+    want = golden(prob, 2, "pagerank")
+    for res in results.values():
+        prochelp.assert_result_equal(res, want)
+
+
+def test_resume_under_wrong_run_id_is_typed_fatal(prob, tmp_path):
+    """Resuming against run logs written by a *different* job must fail
+    loudly (the runlog records its run_id), never silently fast-forward
+    somebody else's computation."""
+    spec, codes, _ = prochelp.run_procs(
+        prob, 2, "pagerank", str(tmp_path / "run"),
+        plan=crash_plan(2, 2))
+    assert codes == [FAULT_EXIT, FAULT_EXIT]
+    bad = dict(spec)
+    bad["run_id"] = spec["run_id"] + "-other"
+    codes, results = prochelp.resume_procs(bad)
+    assert all(c not in (0, FAULT_EXIT) for c in codes), codes
+    assert not results
+
+
+# ---------------------------------------------------------------------------
+# Edge-file run specs: arbitrary serialized graphs, same restart story
+# ---------------------------------------------------------------------------
+
+def _edge_file_graph(prob, tmp_path):
+    """Serialize the problem's graph and return the spec `graph` section
+    that references it — the non-RMAT spec path every rank reconstructs
+    the problem from."""
+    path = str(tmp_path / "edges.npz")
+    crc = save_edge_list(prob["g"], path)
+    return {"edge_file": path, "crc32": crc}
+
+
+def test_edge_file_spec_runs_bit_identical(prob, tmp_path):
+    """A run spec pointing at a serialized checksummed edge list (no
+    RMAT parameters) reconstructs the identical problem on every rank:
+    same results, same counters, same byte audit."""
+    spec, codes, results = prochelp.run_procs(
+        prob, 2, "pagerank", str(tmp_path / "run"),
+        graph=_edge_file_graph(prob, tmp_path))
+    assert codes == [0, 0], codes
+    want = golden(prob, 2, "pagerank")
+    for res in results.values():
+        prochelp.assert_result_equal(res, want)
+
+
+def test_edge_file_spec_crash_restart(prob, tmp_path):
+    """Whole-job crash + resume works identically when the graph came
+    from an edge file — the resume reconstructs from the same bytes."""
+    spec, codes, results = prochelp.run_procs(
+        prob, 2, "bfs", str(tmp_path / "run"),
+        plan=crash_plan(2, 2), graph=_edge_file_graph(prob, tmp_path))
+    assert codes == [FAULT_EXIT, FAULT_EXIT], codes
+    codes, results = prochelp.resume_procs(spec)
+    assert codes == [0, 0], codes
+    want = golden(prob, 2, "bfs")
+    for res in results.values():
+        prochelp.assert_result_equal(res, want)
+        assert int(res["recoveries"]) == 0
+
+
+def test_edge_file_corruption_is_typed_fatal(prob, tmp_path):
+    """A flipped byte in the edge file fails every rank with an
+    IntegrityError naming the file before any compute begins."""
+    gsec = _edge_file_graph(prob, tmp_path)
+    with open(gsec["edge_file"], "r+b") as f:
+        f.seek(100)
+        b = f.read(1)
+        f.seek(100)
+        f.write(bytes([b[0] ^ 0xFF]))
+    spec, codes, results = prochelp.run_procs(
+        prob, 2, "pagerank", str(tmp_path / "run"), graph=gsec)
+    assert all(c not in (0, FAULT_EXIT) for c in codes), codes
+    assert not results
+    with open(os.path.join(spec["result_dir"], "log_r0.txt")) as f:
+        text = f.read()
+    assert "IntegrityError" in text and "edges.npz" in text

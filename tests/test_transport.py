@@ -15,8 +15,16 @@ Three layers:
   values, per-iteration returns, every counter (including the
   ``measured == modeled`` network-byte audit, which ``verify_io`` enforces
   inside every call), and per-worker totals.
+* **Corruption & partial writes** — a flipped byte anywhere in a frame
+  (header or payload) raises :class:`FrameIntegrityError` naming the
+  header fields and leaves the stream in sync; a sender stalled mid-frame
+  either resolves into a clean delivery or a detected truncation — a
+  garbage frame is never accepted.
 """
 import io
+import socket
+import threading
+import time
 
 import numpy as np
 import pytest
@@ -171,3 +179,119 @@ def test_loopback_process_parity(prob, tmp_path, algname):
     assert results[1]["wire_frames"][1, 0] > 0
     assert results[0]["wire_frames"][1].sum() == 0
     assert results[1]["wire_frames"][0].sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# CRC: a flipped byte anywhere in the frame is detected, never accepted
+# ---------------------------------------------------------------------------
+
+def _flip(raw: bytes, off: int) -> bytes:
+    return raw[:off] + bytes([raw[off] ^ 0xFF]) + raw[off + 1:]
+
+
+def test_read_frame_rejects_flip_at_every_offset():
+    raw = tp.pack_frame(tp.K_DATA, epoch=2, op=5, src_w=1, dst_w=0,
+                        p=3, q=1, fmt=2, count=9, payload=b"0123456789abcdef")
+    assert tp.read_frame(io.BytesIO(raw).read).payload \
+        == b"0123456789abcdef"
+    for off in range(len(raw)):
+        # Every offset either fails the CRC or — for a flip inside the
+        # payload-length field — turns into a detected truncation.  What
+        # never happens is a quietly-wrong frame coming back.
+        with pytest.raises(tp.TransportError):
+            tp.read_frame(io.BytesIO(_flip(raw, off)).read)
+
+
+def test_frame_integrity_error_names_header_fields():
+    raw = tp.pack_frame(tp.K_DATA, epoch=4, op=7, src_w=2, dst_w=3,
+                        p=1, q=0, payload=b"vertices")
+    bad = _flip(raw, tp.HEADER_BYTES + 2)        # payload byte
+    with pytest.raises(tp.FrameIntegrityError) as exc:
+        tp.read_frame(io.BytesIO(bad).read)
+    msg = str(exc.value)
+    for field in ("op=7", "src_w=2", "dst_w=3", "checksum"):
+        assert field in msg
+    assert exc.value.frame.op == 7
+    assert exc.value.frame.src_w == 2
+
+
+def test_corrupt_frame_leaves_stream_in_sync():
+    # A payload flip is detected AFTER the whole frame is consumed, so
+    # the link survives: the next frame parses cleanly.
+    good = tp.pack_frame(tp.K_DATA, op=2, payload=b"second")
+    raw = _flip(tp.pack_frame(tp.K_DATA, op=1, payload=b"first"),
+                tp.HEADER_BYTES) + good
+    read = io.BytesIO(raw).read
+    with pytest.raises(tp.FrameIntegrityError):
+        tp.read_frame(read)
+    frame = tp.read_frame(read)
+    assert (frame.op, frame.payload) == (2, b"second")
+    assert tp.read_frame(read) is None
+
+
+# ---------------------------------------------------------------------------
+# Partial writes over a real socket: stall mid-frame, truncation, and
+# interleaving with concurrent senders
+# ---------------------------------------------------------------------------
+
+def _peer_pair():
+    a, b = socket.socketpair()
+    return tp._Peer(0, a), b, b.makefile("rb")
+
+
+def test_stalled_send_resolves_into_clean_frame():
+    peer, rsock, rfile = _peer_pair()
+    try:
+        raw = tp.pack_frame(tp.K_DATA, op=3, payload=b"x" * 64)
+        t = threading.Thread(
+            target=peer.send_stalled, args=(raw, len(raw) // 2, 0.2))
+        t.start()
+        # read_frame blocks across the stall and reassembles the frame;
+        # a half-written frame is never surfaced
+        frame = tp.read_frame(rfile.read)
+        t.join()
+        assert (frame.op, frame.payload) == (3, b"x" * 64)
+    finally:
+        peer.close()
+        rsock.close()
+
+
+def test_stalled_send_does_not_interleave_with_concurrent_send():
+    # The stall holds the peer's send lock, so a concurrent send of a
+    # second frame cannot splice its bytes into the middle of the first:
+    # both frames arrive whole, in lock-acquisition order.
+    peer, rsock, rfile = _peer_pair()
+    try:
+        f1 = tp.pack_frame(tp.K_DATA, op=1, payload=b"a" * 128)
+        f2 = tp.pack_frame(tp.K_DATA, op=2, payload=b"b" * 32)
+        t1 = threading.Thread(
+            target=peer.send_stalled, args=(f1, len(f1) // 3, 0.3))
+        t1.start()
+        time.sleep(0.05)                 # let t1 grab the send lock
+        t2 = threading.Thread(target=peer.send, args=(f2,))
+        t2.start()
+        first = tp.read_frame(rfile.read)
+        second = tp.read_frame(rfile.read)
+        t1.join()
+        t2.join()
+        assert (first.op, first.payload) == (1, b"a" * 128)
+        assert (second.op, second.payload) == (2, b"b" * 32)
+    finally:
+        peer.close()
+        rsock.close()
+
+
+@pytest.mark.parametrize("prefix_frac", [0.3, 0.8])
+def test_mid_frame_close_is_detected_truncation(prefix_frac):
+    # A sender that dies mid-frame (partial header OR partial payload)
+    # yields a typed truncation error, never a garbage frame.
+    peer, rsock, rfile = _peer_pair()
+    try:
+        raw = tp.pack_frame(tp.K_DATA, op=9, payload=b"y" * 50)
+        peer.send(raw[:int(len(raw) * prefix_frac)])
+        peer.close()
+        with pytest.raises(tp.TransportError, match="truncated"):
+            tp.read_frame(rfile.read)
+    finally:
+        peer.close()
+        rsock.close()
